@@ -1,0 +1,41 @@
+"""Roofline table renderer: reads the dry-run JSON dumps and prints the
+§Roofline table (deliverable g).
+
+    PYTHONPATH=src python -m benchmarks.roofline dryrun_singlepod.json [...]
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+
+def render(paths):
+    rows = []
+    for p in paths:
+        with open(p) as f:
+            data = json.load(f)
+        rows += [r for r in data["results"] if "skipped" not in r]
+        skipped = [r for r in data["results"] if "skipped" in r]
+        failures = data.get("failures", [])
+    hdr = (f"{'arch':22s} {'shape':12s} {'mesh':9s} "
+           f"{'comp_ms':>9s} {'mem_ms':>9s} {'coll_ms':>9s} "
+           f"{'bottleneck':>10s} {'useful':>7s} {'GB/chip':>8s}")
+    print(hdr)
+    print("-" * len(hdr))
+    for r in sorted(rows, key=lambda r: (r["mesh"], r["arch"], r["shape"])):
+        bpc = r.get("bytes_per_chip") or {}
+        gb = (bpc.get("temp") or 0) / 1e9
+        print(f"{r['arch']:22s} {r['shape']:12s} {r['mesh']:9s} "
+              f"{r['t_compute_ms']:9.2f} {r['t_memory_ms']:9.2f} "
+              f"{r['t_collective_ms']:9.2f} {r['bottleneck']:>10s} "
+              f"{r['useful_flops_ratio']:7.3f} {gb:8.2f}")
+    for r in skipped:
+        print(f"{r['arch']:22s} {r['shape']:12s} SKIP: {r['skipped']}")
+    if failures:
+        print(f"\n{len(failures)} FAILURES:")
+        for f_ in failures:
+            print("  ", f_[:3], f_[3][:150])
+
+
+if __name__ == "__main__":
+    render(sys.argv[1:] or ["dryrun_singlepod.json"])

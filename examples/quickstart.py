@@ -1,0 +1,39 @@
+"""Quickstart: federated optimization in 40 lines.
+
+Generates a non-IID, unbalanced, sparse federated dataset (the paper's §4
+setting, scaled down), runs FSVRG (Algorithm 4) for 10 rounds of
+communication, and compares against distributed gradient descent.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_logreg_config
+from repro.core import FSVRG, FSVRGConfig, build_problem, build_test_problem
+from repro.core.baselines import run_gd
+from repro.data.synthetic import generate
+
+# 1. a federated dataset: K clients, power-law sizes, per-client skew
+cfg = get_logreg_config().scaled(0.005)
+ds = generate(cfg, seed=0)
+print(f"K={ds.num_clients} clients, n={ds.num_examples} examples, "
+      f"d={ds.num_features} features, n_k in "
+      f"[{ds.client_sizes.min()}, {ds.client_sizes.max()}]")
+
+# 2. the optimization problem (eq. 8): f(w) = sum_k (n_k/n) F_k(w)
+prob = build_problem(ds)          # lambda = 1/n, the paper's choice
+test = build_test_problem(ds)
+
+# 3. Federated SVRG — one communication round per iteration
+solver = FSVRG(prob, FSVRGConfig(stepsize=1.0))
+w = jnp.zeros(prob.d)
+for r in range(10):
+    w = solver.round(w, jax.random.PRNGKey(r))
+    print(f"round {r+1:2d}: objective={float(prob.flat.loss(w)):.5f} "
+          f"test_error={float(test.error_rate(w)):.4f}")
+
+# 4. baseline: distributed GD at the same communication budget
+w_gd, _ = run_gd(prob, jnp.zeros(prob.d), rounds=10, stepsize=2.0)
+print(f"\nFSVRG objective {float(prob.flat.loss(w)):.5f} vs "
+      f"GD {float(prob.flat.loss(w_gd)):.5f} at 10 rounds each")

@@ -1,0 +1,40 @@
+"""Config registry: ``get_config('<arch-id>')`` and ``ARCH_IDS``."""
+from __future__ import annotations
+
+import importlib
+from typing import Dict
+
+from repro.configs.base import ArchConfig, InputShape, MoEConfig, INPUT_SHAPES, SHAPES
+
+_MODULES: Dict[str, str] = {
+    "granite-20b": "granite_20b",
+    "seamless-m4t-medium": "seamless_m4t_medium",
+    "h2o-danube-1.8b": "h2o_danube_1_8b",
+    "jamba-v0.1-52b": "jamba_v0_1_52b",
+    "internvl2-1b": "internvl2_1b",
+    "llama3-8b": "llama3_8b",
+    "phi3.5-moe-42b-a6.6b": "phi3_5_moe_42b",
+    "dbrx-132b": "dbrx_132b",
+    "rwkv6-3b": "rwkv6_3b",
+    "codeqwen1.5-7b": "codeqwen1_5_7b",
+}
+
+ARCH_IDS = tuple(_MODULES)
+
+
+def get_config(arch_id: str) -> ArchConfig:
+    if arch_id not in _MODULES:
+        raise KeyError(f"unknown arch {arch_id!r}; known: {sorted(_MODULES)}")
+    mod = importlib.import_module(f"repro.configs.{_MODULES[arch_id]}")
+    return mod.CONFIG
+
+
+def get_logreg_config():
+    mod = importlib.import_module("repro.configs.gplus_logreg")
+    return mod.CONFIG
+
+
+__all__ = [
+    "ArchConfig", "InputShape", "MoEConfig", "INPUT_SHAPES", "SHAPES",
+    "ARCH_IDS", "get_config", "get_logreg_config",
+]

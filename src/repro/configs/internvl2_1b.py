@@ -1,0 +1,23 @@
+"""InternVL2-1B [arXiv:2404.16821] — InternViT + InternLM2 (Qwen2-0.5B LM backbone).
+
+Backbone only: the InternViT vision encoder + MLP projector is a stub;
+``input_specs`` supplies precomputed patch embeddings prepended to the token
+stream.
+"""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="internvl2-1b",
+    family="vlm",
+    citation="arXiv:2404.16821",
+    num_layers=24,
+    d_model=896,
+    num_heads=14,
+    num_kv_heads=2,
+    d_ff=4864,
+    vocab_size=151655,
+    head_dim=64,
+    frontend="vision",
+    frontend_tokens=256,       # ViT patch embeddings per image (stub)
+    tie_embeddings=True,
+)

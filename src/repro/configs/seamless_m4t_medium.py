@@ -1,0 +1,22 @@
+"""SeamlessM4T-medium [arXiv:2308.11596] — enc-dec multimodal (audio).
+
+Backbone only: the mel-spectrogram + conv feature extractor frontend is a
+stub; ``input_specs`` supplies precomputed frame embeddings (d_model) for the
+encoder. 12 encoder + 12 decoder layers, MHA (kv=16).
+"""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="seamless-m4t-medium",
+    family="encdec_audio",
+    citation="arXiv:2308.11596",
+    num_layers=12,             # decoder layers
+    encoder_layers=12,
+    d_model=1024,
+    num_heads=16,
+    num_kv_heads=16,
+    d_ff=4096,
+    vocab_size=256206,
+    frontend="audio",
+    frontend_tokens=1024,      # encoder frames per utterance (stub)
+)

@@ -1,0 +1,18 @@
+"""The paper's contribution: federated optimization algorithms.
+
+  problem.py   — federated finite-sum problem (sparse logreg), bucketed clients
+  scaling.py   — S_k / A sparsity statistics (§3.6.1)
+  fsvrg.py     — Algorithms 3 & 4 (the paper's method)
+  dane.py      — Algorithm 2 + the Proposition-1 DANE↔SVRG construction
+  cocoa.py     — Appendix-A Algorithms 5 & 6, Theorem 5, CoCoA+
+  baselines.py — distributed GD, one-shot averaging, FedAvg local SGD
+  neural.py    — FSVRG/FedAvg for neural-network pytrees over the mesh
+"""
+from repro.core.problem import (ClientBucket, FederatedLogReg, LogRegProblem,
+                                build_problem, build_test_problem)
+from repro.core.fsvrg import FSVRG, FSVRGConfig, naive_fsvrg_round
+
+__all__ = [
+    "ClientBucket", "FederatedLogReg", "LogRegProblem", "build_problem",
+    "build_test_problem", "FSVRG", "FSVRGConfig", "naive_fsvrg_round",
+]

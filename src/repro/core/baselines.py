@@ -1,0 +1,95 @@
+"""Baseline algorithms the paper compares against (§2, §4, Fig. 2).
+
+  * Distributed GD — the "trivial benchmark" (teal diamonds in Fig. 2).
+  * One-shot averaging [107] — each node fully optimizes locally, average
+    once; the paper cites [91, App. A] showing it cannot beat a single
+    machine in general.  We include it because it is the extreme point of
+    the communication-efficiency spectrum.
+  * FedAvg-style local SGD [62] — local epochs + n_k/n-weighted averaging
+    (the follow-up paper's algorithm; a natural baseline here).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.problem import FederatedLogReg
+
+
+def gd_round(problem: FederatedLogReg, w: jax.Array, stepsize: float) -> jax.Array:
+    """One round of distributed gradient descent (1 communication)."""
+    return w - stepsize * problem.flat.grad(w)
+
+
+def run_gd(problem, w0, rounds: int, stepsize: float, callback=None):
+    w = w0
+    hist = []
+    g = jax.jit(problem.flat.grad)
+    for r in range(rounds):
+        w = w - stepsize * g(w)
+        if callback:
+            hist.append(callback(w, r))
+    return w, hist
+
+
+def _local_sgd_pass(w0, bucket, lam, stepsize, epochs, key):
+    """vmap over clients: `epochs` permutation passes of plain SGD."""
+
+    def one_client(idx, val, y, n_k, ck):
+        d = w0.shape[0]
+        nkf = jnp.maximum(n_k.astype(jnp.float32), 1.0)
+        m_pad = y.shape[0]
+
+        def epoch(wk, ek):
+            perm = jax.random.permutation(ek, m_pad)
+
+            def step(wk, i):
+                xi, vi, yi = idx[i], val[i], y[i]
+                valid = (i < n_k).astype(jnp.float32)
+                z = (vi * wk[xi]).sum()
+                g_sc = -yi * jax.nn.sigmoid(-yi * z)
+                grad = jnp.zeros((d,)).at[xi].add(g_sc * vi) + lam * wk
+                return wk - valid * stepsize * grad, None
+
+            wk, _ = jax.lax.scan(step, wk, perm)
+            return wk, None
+
+        wk, _ = jax.lax.scan(epoch, w0, jax.random.split(ck, epochs))
+        return wk - w0
+
+    keys = jax.random.split(key, bucket.num_clients)
+    return jax.vmap(one_client)(bucket.idx, bucket.val, bucket.y, bucket.n_k, keys)
+
+
+def fedavg_round(problem: FederatedLogReg, w, key, stepsize: float, epochs: int = 1):
+    """Local SGD + n_k/n-weighted averaging (FedAvg, [62])."""
+    agg = jnp.zeros_like(w)
+    wi = 0
+    for b in problem.buckets:
+        deltas = _local_sgd_pass(w, b, problem.flat.lam, stepsize, epochs,
+                                 jax.random.fold_in(key, wi))
+        wts = problem.client_weights[wi : wi + b.num_clients]
+        agg = agg + (wts[:, None] * deltas).sum(axis=0)
+        wi += b.num_clients
+    return w + agg
+
+
+def one_shot_average(problem: FederatedLogReg, w0, key, stepsize: float,
+                     epochs: int = 50):
+    """[107]: clients optimize to (near-)completion locally; average once."""
+    return fedavg_round(problem, w0, key, stepsize, epochs=epochs)
+
+
+def majority_baseline_error(train_y, train_client_of, test_y, test_client_of):
+    """Per-client majority-vote error (the paper's 17.14% analogue)."""
+    import numpy as np
+    K = int(max(train_client_of.max(), test_client_of.max())) + 1
+    maj = np.zeros(K, np.float32)
+    for k in range(K):
+        yk = train_y[train_client_of == k]
+        maj[k] = 1.0 if (yk > 0).mean() >= 0.5 else -1.0
+    pred = maj[test_client_of]
+    return float((pred != test_y).mean())

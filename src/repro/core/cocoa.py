@@ -1,0 +1,175 @@
+"""Appendix-A methods and CoCoA+.
+
+  * Algorithm 5 (Primal Method) — quadratic-perturbation method with
+    perturbation vectors a_k^t = ∇F_k(w^t) − (η∇F_k(w^t) + g_k^t).
+  * Algorithm 6 (Dual Method) — dual block proximal gradient ascent.
+  * Theorem 5: for ridge regression the two generate identical iterates
+    under w^t = (1/λn) X α^t — checked in tests/test_equivalence.py.
+  * CoCoA+ [57] — the inexact version of Algorithm 6 (local SDCA instead of
+    an exact block solve); used in the Fig.-2 reproduction, where the paper
+    shows it converges slowly on sparse non-IID data because the safe
+    aggregation parameter σ' scales with K.
+
+Appendix-A methods assume equal n_k (as the paper does, "for simplicity");
+CoCoA+ runs on the general bucketed sparse problem.
+"""
+from __future__ import annotations
+
+from typing import List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.problem import FederatedLogReg
+
+
+# --------------------------------------------------------------------- #
+# Appendix A, ridge regression, dense per-client data  X_k: (d, m)
+# --------------------------------------------------------------------- #
+
+
+def _Fk_grad_ridge(X, y, w, lam, n, K):
+    """F_k(w) = (K/2n)||X^T w − y||² + (λ/2)||w||²  (eq. 12 normalization)."""
+    return (K / n) * (X @ (X.T @ w - y)) + lam * w
+
+
+def primal_method_init(Xs: Sequence[jax.Array], alphas0: Sequence[jax.Array],
+                       lam: float, sigma: float):
+    """Steps 3–5 of Algorithm 5. Returns (w0, g0 list, eta, mu)."""
+    K = len(Xs)
+    n = sum(int(a.shape[0]) for a in alphas0)
+    eta = K / sigma
+    mu = lam * (eta - 1.0)
+    w0 = sum(X @ a for X, a in zip(Xs, alphas0)) / (lam * n)
+    g0 = [eta * ((K / n) * (X @ a) - lam * w0) for X, a in zip(Xs, alphas0)]
+    return w0, g0, eta, mu
+
+
+def primal_method_round(Xs, ys, w, gs: List[jax.Array], lam, eta, mu):
+    """One round of Algorithm 5 (exact local solves; ridge)."""
+    K = len(Xs)
+    n = sum(int(y.shape[0]) for y in ys)
+    d = w.shape[0]
+    w_ks = []
+    for k in range(K):
+        X, y = Xs[k], ys[k]
+        # argmin F_k(w') − (∇F_k(w^t) − (η∇F_k(w^t) + g_k))ᵀ w' + µ/2||w'−w^t||²
+        b_k = (1.0 - eta) * _Fk_grad_ridge(X, y, w, lam, n, K) - gs[k]
+        # ∇F_k(w') = (K/n) X Xᵀ w' − (K/n) X y + λ w'
+        H = (K / n) * (X @ X.T) + (lam + mu) * jnp.eye(d)
+        rhs = (K / n) * (X @ y) + b_k + mu * w
+        w_ks.append(jnp.linalg.solve(H, rhs))
+    w_next = sum(w_ks) / K
+    gs_next = [gs[k] + lam * eta * (w_ks[k] - w_next) for k in range(K)]
+    return w_next, gs_next
+
+
+def dual_method_round(Xs, ys, alphas: List[jax.Array], lam, sigma):
+    """One round of Algorithm 6 (exact block solves; ridge φ_i(t)=½(t−y_i)²).
+
+    Block subproblem (19): h_k = argmin (σ/2λn)||X_k h||² + ½||h||²
+                                        − (y_k − X_kᵀw^t − α_k)ᵀ h
+    """
+    K = len(Xs)
+    n = sum(int(a.shape[0]) for a in alphas)
+    w = sum(X @ a for X, a in zip(Xs, alphas)) / (lam * n)
+    new_alphas = []
+    for k in range(K):
+        X, y, a = Xs[k], ys[k], alphas[k]
+        m = a.shape[0]
+        c = y - X.T @ w - a
+        M = (sigma / (lam * n)) * (X.T @ X) + jnp.eye(m)
+        h = jnp.linalg.solve(M, c)
+        new_alphas.append(a + h)
+    return new_alphas
+
+
+def dual_to_primal(Xs, alphas, lam):
+    n = sum(int(a.shape[0]) for a in alphas)
+    return sum(X @ a for X, a in zip(Xs, alphas)) / (lam * n)
+
+
+# --------------------------------------------------------------------- #
+# CoCoA+ for sparse logistic regression (local SDCA)
+# --------------------------------------------------------------------- #
+
+
+def _sdca_local_pass(w, alpha_b, bucket, lam, n, sigma, key):
+    """One permutation pass of SDCA on each client's local dual subproblem.
+
+    For logistic loss with y∈{−1,1} we parametrize β_i = y_i α_i ∈ (0,1);
+    the scalar subproblem for coordinate i (from eq. (15)) is
+
+        min_{β∈(0,1)}  m_i (β − β_old) + c_i (β − β_old)² + H(β),
+        m_i = y_i x_iᵀ(w + (σ/λn) r),  c_i = σ||x_i||²/(2λn),
+        H(β) = β log β + (1−β) log(1−β),
+
+    solved with clipped Newton.  r = X_k u tracks this client's own updates
+    within the round (the cross terms of the local block).
+    """
+
+    def one_client(idx, val, y, n_k, alpha_k, ck):
+        d = w.shape[0]
+        m_pad = y.shape[0]
+        perm = jax.random.permutation(ck, m_pad)
+
+        def newton_beta(beta0, mcoef, ccoef):
+            def it(b, _):
+                gb = mcoef + 2.0 * ccoef * (b - beta0) + jnp.log(b / (1.0 - b))
+                hb = 2.0 * ccoef + 1.0 / (b * (1.0 - b))
+                return jnp.clip(b - gb / hb, 1e-6, 1.0 - 1e-6), None
+            b0 = jnp.clip(jax.nn.sigmoid(-mcoef), 1e-6, 1.0 - 1e-6)
+            b, _ = jax.lax.scan(it, b0, None, length=12)
+            return b
+
+        def step(carry, t):
+            u, r = carry
+            i = perm[t]
+            xi, vi, yi = idx[i], val[i], y[i]
+            valid = (i < n_k).astype(jnp.float32)
+            beta_old = yi * alpha_k[i]
+            beta_old = jnp.clip(beta_old, 1e-6, 1.0 - 1e-6)
+            xn2 = (vi * vi).sum()
+            mcoef = yi * ((vi * w[xi]).sum() + (sigma / (lam * n)) * (vi * r[xi]).sum())
+            ccoef = sigma * xn2 / (2.0 * lam * n)
+            beta = newton_beta(beta_old, mcoef, ccoef)
+            du = valid * yi * (beta - beta_old)
+            u = u.at[i].add(du)
+            r = r.at[xi].add(du * vi)
+            return (u, r), None
+
+        u0 = jnp.zeros((m_pad,))
+        r0 = jnp.zeros((d,))
+        (u, r), _ = jax.lax.scan(step, (u0, r0), jnp.arange(m_pad))
+        return u, r
+
+    keys = jax.random.split(key, bucket.num_clients)
+    return jax.vmap(one_client)(bucket.idx, bucket.val, bucket.y,
+                                bucket.n_k, alpha_b, keys)
+
+
+class CoCoAPlus:
+    """CoCoA+ with γ=1 (adding) and safe σ' = γK by default."""
+
+    def __init__(self, problem: FederatedLogReg, sigma: float | None = None):
+        self.problem = problem
+        self.sigma = float(sigma if sigma is not None else problem.num_clients)
+        self.alphas = [jnp.zeros((b.num_clients, b.m_pad)) for b in problem.buckets]
+        n = problem.flat.n
+        lam = problem.flat.lam
+        self.w = jnp.zeros((problem.d,))
+        self._pass = [
+            jax.jit(lambda w, a, key, b=b: _sdca_local_pass(
+                w, a, b, lam, n, self.sigma, key))
+            for b in problem.buckets
+        ]
+
+    def round(self, key):
+        lam, n = self.problem.flat.lam, self.problem.flat.n
+        dw = jnp.zeros_like(self.w)
+        for bi, (b, pfn) in enumerate(zip(self.problem.buckets, self._pass)):
+            u, r = pfn(self.w, self.alphas[bi], jax.random.fold_in(key, bi))
+            self.alphas[bi] = self.alphas[bi] + u
+            dw = dw + r.sum(axis=0)
+        self.w = self.w + dw / (lam * n)
+        return self.w

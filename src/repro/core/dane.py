@@ -1,0 +1,160 @@
+"""DANE — Distributed Approximate Newton (Algorithm 2), and the Prop.-1
+variant (DANE with a single epoch of SVRG as the local solver).
+
+Local subproblem (10):
+    w_k = argmin_w F_k(w) − (∇F_k(w^t) − η∇f(w^t))ᵀ w + (µ/2)||w − w^t||²
+
+We provide
+  * an exact solver for ridge regression (d×d linear solve) — used for the
+    convergence comparisons and the Appendix-A tests,
+  * an inexact GD local solver for logistic regression,
+  * :func:`dane_svrg_round` — the Prop.-1 construction: the subproblem is
+    built explicitly (linear perturbation and all) and solved with one epoch
+    of generic SVRG.  Proposition 1 says its iterates are *identical* to
+    naive FSVRG (Algorithm 3) given the same sample sequence; the test
+    suite checks this to float tolerance against an independently coded
+    Algorithm 3.
+"""
+from __future__ import annotations
+
+from typing import List, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.problem import FederatedLogReg
+
+
+# --------------------------------------------------------------------- #
+# exact DANE for ridge regression (dense per-client data)
+# --------------------------------------------------------------------- #
+
+
+def ridge_grad(X, y, w, lam):
+    """F(w) = 1/(2m) ||X^T w - y||^2 + lam/2 ||w||^2 with X: (d, m)."""
+    m = y.shape[0]
+    return X @ (X.T @ w - y) / m + lam * w
+
+
+def dane_round_ridge(Xs: Sequence[jax.Array], ys: Sequence[jax.Array], w, lam,
+                     eta: float = 1.0, mu: float = 0.0):
+    """One exact DANE round on ridge. Xs[k]: (d, n_k)."""
+    K = len(Xs)
+    n = sum(int(y.shape[0]) for y in ys)
+    # ∇f(w^t) = Σ (n_k/n) ∇F_k(w^t)
+    full_grad = sum((ys[k].shape[0] / n) * ridge_grad(Xs[k], ys[k], w, lam)
+                    for k in range(K))
+    d = w.shape[0]
+    w_next = jnp.zeros_like(w)
+    for k in range(K):
+        X, y = Xs[k], ys[k]
+        m = y.shape[0]
+        a_k = ridge_grad(X, y, w, lam) - eta * full_grad
+        # (H_k + µI) w = c_k + a_k + µ w^t,  H_k = XXᵀ/m + λI, c_k = Xy/m
+        H = X @ X.T / m + (lam + mu) * jnp.eye(d)
+        rhs = X @ y / m + a_k + mu * w
+        w_next = w_next + jnp.linalg.solve(H, rhs) / K
+    return w_next
+
+
+# --------------------------------------------------------------------- #
+# inexact DANE for logistic regression (GD local solver)
+# --------------------------------------------------------------------- #
+
+
+def dane_round_logreg_gd(problem: FederatedLogReg, w, *, eta: float = 1.0,
+                         mu: float = 0.0, local_steps: int = 50,
+                         local_lr: float = 1.0):
+    """DANE with a GD local solver, on the bucketed sparse problem."""
+    flat = problem.flat
+    full_grad = flat.grad(w)
+    lam = flat.lam
+    agg = jnp.zeros_like(w)
+    wi = 0
+    for b in problem.buckets:
+
+        def one_client(idx, val, y, n_k):
+            d = w.shape[0]
+            nkf = jnp.maximum(n_k.astype(jnp.float32), 1.0)
+            valid = (jnp.arange(y.shape[0]) < n_k).astype(jnp.float32)
+
+            def Fk_grad(wk):
+                z = y * (val * wk[idx]).sum(axis=1)
+                gs = -y * jax.nn.sigmoid(-y * z) * valid / nkf
+                return jnp.zeros((d,)).at[idx].add(gs[:, None] * val) + lam * wk
+
+            a_k = Fk_grad(w) - eta * full_grad
+
+            def gd_step(wk, _):
+                g = Fk_grad(wk) - a_k + mu * (wk - w)
+                return wk - local_lr * g, None
+
+            wk, _ = jax.lax.scan(gd_step, w, None, length=local_steps)
+            return wk
+
+        wks = jax.vmap(one_client)(b.idx, b.val, b.y, b.n_k)   # (Kb, d)
+        agg = agg + wks.sum(axis=0)
+        wi += b.num_clients
+    return agg / problem.num_clients
+
+
+# --------------------------------------------------------------------- #
+# Proposition 1: DANE(η=1, µ=0) + one SVRG epoch as the local solver
+# --------------------------------------------------------------------- #
+
+
+def dane_svrg_round(problem: FederatedLogReg, w, key, stepsize: float, m: int):
+    """Solve the DANE subproblem *as a subproblem* with one SVRG epoch.
+
+    The SVRG epoch on G_k(w') = F_k(w') − a_kᵀw' (µ=0, η=1) starting at w^t:
+      full gradient of G_k at anchor w^t is ∇F_k(w^t) − a_k = ∇f(w^t)
+      (no extra pass needed — exactly the observation in §3.5);
+      stochastic update uses ∇g_i(w') − ∇g_i(w^t) + ∇G_k(w^t), where
+      g_i(w') = f_i(w') − a_kᵀw' so the linear term cancels in the
+      difference.  The code below nevertheless *materializes a_k and the
+      linear term explicitly* so the equivalence with Algorithm 3 is a real
+      test, not a tautology.
+    """
+    flat = problem.flat
+    full_grad = flat.grad(w)
+    lam = flat.lam
+    agg = jnp.zeros_like(w)
+    wi = 0
+    for b in problem.buckets:
+        kb = jax.random.fold_in(key, wi)
+
+        def one_client(idx, val, y, n_k, ck):
+            d = w.shape[0]
+            nkf = jnp.maximum(n_k.astype(jnp.float32), 1.0)
+            valid_rows = (jnp.arange(y.shape[0]) < n_k).astype(jnp.float32)
+
+            def Fk_grad(wk):
+                z = y * (val * wk[idx]).sum(axis=1)
+                gs = -y * jax.nn.sigmoid(-y * z) * valid_rows / nkf
+                return jnp.zeros((d,)).at[idx].add(gs[:, None] * val) + lam * wk
+
+            a_k = Fk_grad(w) - full_grad           # η = 1
+            G_anchor_grad = Fk_grad(w) - a_k       # = ∇f(w^t), materialized
+
+            def fi_grad(wk, i):
+                xi, vi, yi = idx[i], val[i], y[i]
+                z = (vi * wk[xi]).sum()
+                gs = -yi * jax.nn.sigmoid(-yi * z)
+                return jnp.zeros((d,)).at[xi].add(gs * vi) + lam * wk
+
+            samples = jax.random.randint(ck, (m,), 0, jnp.maximum(n_k, 1))
+
+            def step(wk, i):
+                gi_new = fi_grad(wk, i) - a_k      # ∇g_i(w')
+                gi_old = fi_grad(w, i) - a_k       # ∇g_i(w^t)
+                wk = wk - stepsize * (gi_new - gi_old + G_anchor_grad)
+                return wk, None
+
+            wk, _ = jax.lax.scan(step, w, samples)
+            return wk - w
+
+        keys = jax.random.split(kb, b.num_clients)
+        deltas = jax.vmap(one_client)(b.idx, b.val, b.y, b.n_k, keys)
+        agg = agg + deltas.sum(axis=0)
+        wi += b.num_clients
+    return w + agg / problem.num_clients

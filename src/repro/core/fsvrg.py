@@ -1,0 +1,161 @@
+"""Federated SVRG — the paper's Algorithm 4 (and the naive Algorithm 3).
+
+One round (Algorithm 4):
+  1. server: compute ∇f(w^t) over all data      — 1 round of communication
+  2. each client k, in parallel:
+       w_k = w^t;  h_k = h / n_k
+       for t over a random permutation of P_k:
+         w_k ← w_k − h_k ( S_k [∇f_i(w_k) − ∇f_i(w^t)] + ∇f(w^t) )
+  3. server: w ← w^t + A Σ_k (n_k/n)(w_k − w^t)
+
+The four FSVRG modifications vs naive distributed SVRG (§3.6.2):
+  (1) local stepsize h_k = h/n_k, (2) n_k/n-weighted aggregation,
+  (3) per-coordinate stochastic-gradient scaling S_k,
+  (4) per-coordinate aggregation scaling A.
+
+Clients run as vmap-over-bucket × scan-over-permutation; padded permutation
+slots are masked no-ops, so every real example is visited exactly once per
+round (the paper uses permutation sampling, line 6 of Alg. 4).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import scaling
+from repro.core.problem import ClientBucket, FederatedLogReg
+
+
+@dataclasses.dataclass(frozen=True)
+class FSVRGConfig:
+    stepsize: float = 1.0          # h; h_k = h/n_k per client
+    naive: bool = False            # Algorithm 3: S=I, A=I, h_k=h, uniform agg
+    naive_steps: int = 0           # m for Algorithm 3 (0 -> one pass, m=n_k)
+    use_S: bool = True             # ablation switches
+    use_A: bool = True
+    use_local_stepsize: bool = True
+    use_weighted_agg: bool = True
+    # partial participation (beyond-paper, the deployment reality the paper
+    # motivates in §1.2: devices only participate when charging/on-wifi).
+    # Each round samples clients i.i.d. with this probability; aggregation
+    # reweights by the realized participating mass so the update direction
+    # stays unbiased.
+    participation: float = 1.0
+
+
+def _client_pass(w0, full_grad, bucket: ClientBucket, lam, phi, cfg: FSVRGConfig, key):
+    """vmapped over clients in a bucket. Returns (Kb, d) client deltas w_k - w0."""
+
+    def one_client(idx, val, y, n_k, ck):
+        d = w0.shape[0]
+        nkf = jnp.maximum(n_k.astype(jnp.float32), 1.0)
+        if cfg.naive or not cfg.use_S:
+            s_diag = jnp.ones((d,))
+        else:
+            s_diag = scaling.s_k_diag(phi, idx, val, n_k)
+        if cfg.naive or not cfg.use_local_stepsize:
+            h_k = cfg.stepsize                      # Alg. 3: fixed h
+        else:
+            h_k = cfg.stepsize / nkf                # Alg. 4: h/n_k
+
+        m_pad = y.shape[0]
+        if cfg.naive:
+            # Alg. 3 line 7: m uniform samples with replacement from P_k
+            m = cfg.naive_steps if cfg.naive_steps > 0 else m_pad
+            samples = jax.random.randint(ck, (m,), 0, jnp.maximum(n_k, 1))
+            valid_fn = lambda i: jnp.float32(1.0)
+        else:
+            # Alg. 4 line 6: one pass over a random permutation of P_k
+            samples = jax.random.permutation(ck, m_pad)
+            valid_fn = lambda i: (i < n_k).astype(jnp.float32)
+
+        # margins at the anchor w^t are recomputed per step (O(nnz));
+        # the anchor per-example gradient scalar needs only x·w0.
+        def step(wk, i):
+            xi, vi, yi = idx[i], val[i], y[i]
+            valid = valid_fn(i)
+            zi_new = (vi * wk[xi]).sum()
+            zi_old = (vi * w0[xi]).sum()
+            g_new = -yi * jax.nn.sigmoid(-yi * zi_new)
+            g_old = -yi * jax.nn.sigmoid(-yi * zi_old)
+            # sparse part of ∇f_i(w_k) − ∇f_i(w^t)
+            diff = jnp.zeros((d,)).at[xi].add((g_new - g_old) * vi)
+            diff = diff + lam * (wk - w0)          # L2 part of the difference
+            upd = h_k * (s_diag * diff + full_grad)
+            return wk - valid * upd, None
+
+        wk, _ = jax.lax.scan(step, w0, samples)
+        return wk - w0
+
+    keys = jax.random.split(key, bucket.num_clients)
+    return jax.vmap(one_client)(bucket.idx, bucket.val, bucket.y, bucket.n_k, keys)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def _round_from_parts(w, full_grad, deltas_weighted_sum, a_diag, cfg: FSVRGConfig):
+    del full_grad
+    return w + (a_diag if (cfg.use_A and not cfg.naive) else 1.0) * deltas_weighted_sum
+
+
+class FSVRG:
+    """Stateful driver: precomputes φ and A once, then runs rounds."""
+
+    def __init__(self, problem: FederatedLogReg, cfg: FSVRGConfig = FSVRGConfig()):
+        self.problem = problem
+        self.cfg = cfg
+        flat = problem.flat
+        n = flat.n
+        self.phi = scaling.global_feature_counts(flat) / n
+        self.a_diag = scaling.aggregation_diag(problem) if cfg.use_A else jnp.ones((problem.d,))
+        self._passes = [
+            jax.jit(functools.partial(_client_pass, bucket=b, lam=flat.lam, cfg=cfg))
+            for b in problem.buckets
+        ]
+
+    def round(self, w: jax.Array, key: jax.Array) -> jax.Array:
+        flat = self.problem.flat
+        full_grad = flat.grad(w)
+        agg = jnp.zeros_like(w)
+        wi = 0
+        total_mass = jnp.zeros(())
+        expected_mass = jnp.zeros(())
+        for b, pass_fn in zip(self.problem.buckets, self._passes):
+            kb = jax.random.fold_in(key, wi)
+            deltas = pass_fn(w, full_grad, phi=self.phi, key=kb)   # (Kb, d)
+            if self.cfg.naive or not self.cfg.use_weighted_agg:
+                wts = jnp.full((b.num_clients,), 1.0 / self.problem.num_clients)
+            else:
+                wts = self.problem.client_weights[wi : wi + b.num_clients]
+            if self.cfg.participation < 1.0:
+                sel = (jax.random.uniform(jax.random.fold_in(kb, 997),
+                                          (b.num_clients,))
+                       < self.cfg.participation).astype(jnp.float32)
+                total_mass = total_mass + (wts * sel).sum()
+                expected_mass = expected_mass + wts.sum()
+                wts = wts * sel
+            agg = agg + (wts[:, None] * deltas).sum(axis=0)
+            wi += b.num_clients
+        if self.cfg.participation < 1.0:
+            # reweight by realized participating mass -> unbiased direction
+            agg = agg * (expected_mass / jnp.maximum(total_mass, 1e-9))
+        return _round_from_parts(w, full_grad, agg, self.a_diag, self.cfg)
+
+    def run(self, w0: jax.Array, rounds: int, seed: int = 0, callback=None):
+        w = w0
+        key = jax.random.PRNGKey(seed)
+        history = []
+        for r in range(rounds):
+            w = self.round(w, jax.random.fold_in(key, r))
+            if callback is not None:
+                history.append(callback(w, r))
+        return w, history
+
+
+def naive_fsvrg_round(problem: FederatedLogReg, w, key, stepsize: float, m: Optional[int] = None):
+    """Algorithm 3: S=I, A=I, h_k=h, m uniform samples, (1/K)-average agg."""
+    cfg = FSVRGConfig(stepsize=stepsize, naive=True, naive_steps=m or 0)
+    return FSVRG(problem, cfg).round(w, key)

@@ -1,0 +1,58 @@
+"""Algorithm 1 — single-machine SVRG [43, 47], the paper's §3.2 building
+block.  Included (a) for fidelity: FSVRG reduces to it when K=1, and the
+§3.1 property (B) test relies on that; (b) as the reference local solver in
+the Prop.-1 construction.
+
+    for s = 0,1,2,...:
+        ḡ = ∇f(w^t)                      # full pass
+        w = w^t
+        for t = 1..m:
+            i ~ U{1..n}
+            w ← w − h (∇f_i(w) − ∇f_i(w^t) + ḡ)
+        w^{t+1} = w
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.problem import LogRegProblem
+
+
+def svrg_epoch(problem: LogRegProblem, w_t: jax.Array, key, *, stepsize: float,
+               m: int) -> jax.Array:
+    """One outer iteration of Algorithm 1 on the flat problem."""
+    full_grad = problem.grad(w_t)
+    n = problem.n
+    lam = problem.lam
+    idx, val, y = problem.idx, problem.val, problem.y
+    d = w_t.shape[0]
+
+    samples = jax.random.randint(key, (m,), 0, n)
+
+    def step(w, i):
+        xi, vi, yi = idx[i], val[i], y[i]
+        z_new = (vi * w[xi]).sum()
+        z_old = (vi * w_t[xi]).sum()
+        g_new = -yi * jax.nn.sigmoid(-yi * z_new)
+        g_old = -yi * jax.nn.sigmoid(-yi * z_old)
+        diff = jnp.zeros((d,)).at[xi].add((g_new - g_old) * vi) + lam * (w - w_t)
+        return w - stepsize * (diff + full_grad), None
+
+    w, _ = jax.lax.scan(step, w_t, samples)
+    return w
+
+
+def run_svrg(problem: LogRegProblem, w0: jax.Array, *, epochs: int,
+             stepsize: float, m: int | None = None, seed: int = 0):
+    """Algorithm 1 for `epochs` outer iterations; m defaults to n (one pass,
+    the paper's 'small multiple of n' guidance)."""
+    m = m or problem.n
+    w = w0
+    hist = []
+    key = jax.random.PRNGKey(seed)
+    epoch = jax.jit(lambda w, k: svrg_epoch(problem, w, k, stepsize=stepsize, m=m))
+    for s in range(epochs):
+        w = epoch(w, jax.random.fold_in(key, s))
+        hist.append(float(problem.loss(w)))
+    return w, hist

@@ -1,0 +1,3 @@
+from repro.data.synthetic import FederatedDataset, generate
+
+__all__ = ["FederatedDataset", "generate"]

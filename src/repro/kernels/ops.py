@@ -1,0 +1,32 @@
+"""Public jit'd wrappers for the Pallas kernels.
+
+On CPU (this container) the kernels execute with ``interpret=True`` — the
+kernel body runs as traced JAX ops, validating indexing/accumulation logic
+against ``ref.py``.  On TPU backends the same call sites compile to Mosaic.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.fsvrg_update import fsvrg_update as _fsvrg_update
+from repro.kernels.scaled_aggregate import scaled_aggregate as _scaled_aggregate
+from repro.kernels.wkv6 import wkv6 as _wkv6
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def fsvrg_update(w, s, g_new, g_old, g_bar, h, **kw):
+    kw.setdefault("interpret", not _on_tpu())
+    return _fsvrg_update(w, s, g_new, g_old, g_bar, h, **kw)
+
+
+def scaled_aggregate(w_t, w_ks, weights, a_diag, **kw):
+    kw.setdefault("interpret", not _on_tpu())
+    return _scaled_aggregate(w_t, w_ks, weights, a_diag, **kw)
+
+
+def wkv6(r, k, v, w, u, **kw):
+    kw.setdefault("interpret", not _on_tpu())
+    return _wkv6(r, k, v, w, u, **kw)

@@ -1,0 +1,20 @@
+"""Pure-jnp oracles for the Pallas kernels (the allclose reference)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def fsvrg_update_ref(w, s, g_new, g_old, g_bar, h):
+    """w − h (S ⊙ (g_new − g_old) + ḡ), computed in f32, cast back."""
+    upd = (s.astype(jnp.float32)
+           * (g_new.astype(jnp.float32) - g_old.astype(jnp.float32))
+           + g_bar.astype(jnp.float32))
+    return (w.astype(jnp.float32) - jnp.asarray(h, jnp.float32) * upd).astype(w.dtype)
+
+
+def scaled_aggregate_ref(w_t, w_ks, weights, a_diag):
+    """w^t + A ⊙ Σ_k weights_k (w_k − w^t), in f32."""
+    wt = w_t.astype(jnp.float32)
+    delta = ((w_ks.astype(jnp.float32) - wt[None, :])
+             * weights.astype(jnp.float32)[:, None]).sum(axis=0)
+    return wt + a_diag.astype(jnp.float32) * delta

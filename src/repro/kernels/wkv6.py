@@ -1,0 +1,96 @@
+"""Pallas TPU kernel: RWKV-6 chunk-parallel WKV with VMEM-resident state.
+
+The §Perf pair-3 analysis showed the recurrence is HBM-bound under vanilla
+XLA: the (D,D) per-head state round-trips HBM every chunk (and, pre-
+optimization, every token).  This kernel walks the grid (batch·head major,
+chunk minor — TPU grids execute sequentially) and keeps the running state in
+a VMEM scratch accumulator across *all* chunks of a (batch, head) pair, so
+state traffic to HBM is exactly one write per pair instead of S/L
+round-trips.
+
+Per chunk of length L (same math as models/rwkv._wkv_chunked):
+    c_t   = Π_{i<=t} w_i                     (cumulative decay, f32)
+    intra = [(r ⊙ c_prev)(k/c)^T ⊙ M_strict] v
+    bonus = rowsum(r ⊙ u ⊙ k) v
+    inter = (r ⊙ c_prev) S
+    S    ←  diag(c_L) (S + (k/c)^T v)
+
+Shapes: r,k,v,w: (BH, S, D); out: (BH, S, D); final state (BH, D, D).
+L = chunk (default 32; decay-underflow bound, see models/rwkv.py).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+CHUNK = 32
+
+
+def _wkv_kernel(r_ref, k_ref, v_ref, w_ref, u_ref, out_ref, state_out_ref,
+                state_scr):
+    ci = pl.program_id(1)
+    nc = pl.num_programs(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_scr[...] = jnp.zeros_like(state_scr)
+
+    r = r_ref[0].astype(jnp.float32)          # (L, D)
+    k = k_ref[0].astype(jnp.float32)
+    v = v_ref[0].astype(jnp.float32)
+    w = w_ref[0].astype(jnp.float32)
+    u = u_ref[0].astype(jnp.float32)          # (D,)
+    s = state_scr[...]                        # (D, D)
+
+    L, D = r.shape
+    c = jnp.cumprod(w, axis=0)
+    c_prev = jnp.concatenate([jnp.ones_like(c[:1]), c[:-1]], axis=0)
+    r_t = r * c_prev
+    k_t = k / jnp.maximum(c, 1e-30)
+
+    mask = jnp.tril(jnp.ones((L, L), jnp.float32), k=-1)
+    scores = jnp.dot(r_t, k_t.T, preferred_element_type=jnp.float32) * mask
+    intra = jnp.dot(scores, v, preferred_element_type=jnp.float32)
+    bonus = jnp.sum(r * u[None, :] * k, axis=1, keepdims=True) * v
+    inter = jnp.dot(r_t, s, preferred_element_type=jnp.float32)
+    out_ref[0] = (intra + bonus + inter).astype(out_ref.dtype)
+
+    s_new = c[-1][:, None] * (s + jnp.dot(k_t.T, v, preferred_element_type=jnp.float32))
+    state_scr[...] = s_new
+
+    @pl.when(ci == nc - 1)
+    def _final():
+        state_out_ref[0] = s_new
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def wkv6(r, k, v, w, u, *, chunk: int = CHUNK, interpret: bool = False):
+    """r,k,v,w: (BH, S, D); u: (BH, D).  Returns out (BH,S,D), state (BH,D,D)."""
+    BH, S, D = r.shape
+    if S % chunk:
+        raise ValueError(f"S={S} must be a multiple of chunk={chunk}")
+    nc = S // chunk
+
+    seq_spec = pl.BlockSpec((1, chunk, D), lambda b, c: (b, c, 0))
+    u_spec = pl.BlockSpec((1, D), lambda b, c: (b, 0))
+    out_specs = [
+        pl.BlockSpec((1, chunk, D), lambda b, c: (b, c, 0)),   # out
+        pl.BlockSpec((1, D, D), lambda b, c: (b, 0, 0)),       # final state
+    ]
+    out, state = pl.pallas_call(
+        _wkv_kernel,
+        grid=(BH, nc),
+        in_specs=[seq_spec, seq_spec, seq_spec, seq_spec, u_spec],
+        out_specs=out_specs,
+        out_shape=[
+            jax.ShapeDtypeStruct((BH, S, D), r.dtype),
+            jax.ShapeDtypeStruct((BH, D, D), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((D, D), jnp.float32)],
+        interpret=interpret,
+    )(r, k, v, w, u)
+    return out, state

@@ -1,0 +1,157 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture × input shape) on
+the production meshes and emit memory / cost / collective analysis.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch llama3-8b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--json out.json]
+
+The XLA_FLAGS line above MUST precede any jax import (jax locks the device
+count at first init).  This module is the only place that flag is set —
+smoke tests and benchmarks see the single real CPU device.
+"""
+import argparse
+import json
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCH_IDS, SHAPES, get_config
+from repro.configs.base import ArchConfig, InputShape
+from repro.core.neural import FedNeuralConfig
+from repro.launch import specs as S
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import (make_adamw_step, make_decode_step,
+                                make_fsvrg_step, make_prefill_step)
+from repro.models import build_model
+from repro.sharding import (batch_shardings, cache_shardings,
+                            params_shardings, replicated)
+from repro.utils import roofline as RL
+
+
+def combo_supported(cfg: ArchConfig, shape: InputShape) -> tuple[bool, str]:
+    if shape.name == "long_500k" and not cfg.subquadratic:
+        return False, "full-attention arch: 524k KV decode skipped (DESIGN.md)"
+    return True, ""
+
+
+def lower_combo(arch_id: str, shape_name: str, *, multi_pod: bool = False,
+                dtype=jnp.bfloat16, fed_cfg: FedNeuralConfig | None = None,
+                step_override=None, verbose: bool = True):
+    """Returns (Roofline, dict) or raises on lowering/compile failure."""
+    cfg = get_config(arch_id)
+    shape = SHAPES[shape_name]
+    ok, why = combo_supported(cfg, shape)
+    if not ok:
+        return None, {"arch": arch_id, "shape": shape_name, "skipped": why}
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh_name = "x".join(str(s) for s in mesh.devices.shape)
+    chips = mesh.devices.size
+    model = build_model(cfg, dtype)
+
+    t0 = time.time()
+    with jax.set_mesh(mesh):
+        if shape.kind == "train":
+            step = step_override or make_fsvrg_step(
+                model, fed_cfg or FedNeuralConfig(local_steps=S.FED_LOCAL_STEPS))
+            p_specs, b_specs = S.input_specs(cfg, shape, model, dtype)
+            in_sh = (params_shardings(p_specs, mesh),
+                     batch_shardings(b_specs, mesh, client_axis=True))
+            out_sh = (params_shardings(p_specs, mesh), replicated(mesh))
+            lowered = jax.jit(step, in_shardings=in_sh, out_shardings=out_sh).lower(
+                p_specs, b_specs)
+        elif shape.kind == "prefill":
+            step = step_override or make_prefill_step(model)
+            p_specs, b_specs = S.input_specs(cfg, shape, model, dtype)
+            cache_out = jax.eval_shape(step, p_specs, b_specs)[1]
+            in_sh = (params_shardings(p_specs, mesh),
+                     batch_shardings(b_specs, mesh))
+            out_sh = (replicated(mesh), cache_shardings(cache_out, mesh))
+            lowered = jax.jit(step, in_shardings=in_sh, out_shardings=out_sh).lower(
+                p_specs, b_specs)
+        else:  # decode
+            step = step_override or make_decode_step(model)
+            p_specs, t_specs, c_specs = S.input_specs(cfg, shape, model, dtype)
+            c_sh = cache_shardings(c_specs, mesh)
+            in_sh = (params_shardings(p_specs, mesh),
+                     batch_shardings(t_specs, mesh), c_sh)
+            out_sh = (replicated(mesh), c_sh)
+            lowered = jax.jit(step, in_shardings=in_sh, out_shardings=out_sh).lower(
+                p_specs, t_specs, c_specs)
+
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+    hlo = compiled.as_text()
+    rl = RL.analyze(arch_id, shape_name, mesh_name, chips, compiled, hlo,
+                    RL.model_flops_for(cfg, shape))
+    mem = compiled.memory_analysis()
+    info = {
+        "arch": arch_id, "shape": shape_name, "mesh": mesh_name,
+        "chips": chips, "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        "hlo_flops": rl.hlo_flops, "hlo_bytes": rl.hlo_bytes,
+        "coll_bytes": rl.coll_bytes, "coll_breakdown": rl.coll_breakdown,
+        "t_compute_ms": rl.t_compute * 1e3, "t_memory_ms": rl.t_memory * 1e3,
+        "t_collective_ms": rl.t_collective * 1e3,
+        "bottleneck": rl.bottleneck,
+        "model_flops": rl.model_flops,
+        "useful_flops_ratio": rl.useful_flops_ratio,
+        "bytes_per_chip": {
+            "temp": getattr(mem, "temp_size_in_bytes", None),
+            "args": getattr(mem, "argument_size_in_bytes", None),
+            "output": getattr(mem, "output_size_in_bytes", None),
+        },
+    }
+    if verbose:
+        print(f"[dryrun] {rl.row()}  (lower {t_lower:.0f}s compile {t_compile:.0f}s)")
+        print(f"         memory_analysis: temp={info['bytes_per_chip']['temp']} "
+              f"args={info['bytes_per_chip']['args']} out={info['bytes_per_chip']['output']}")
+    return rl, info
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, help="arch id (default: all)")
+    ap.add_argument("--shape", default=None, help="input shape (default: all)")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--json", default=None)
+    args = ap.parse_args(argv)
+
+    archs = [args.arch] if args.arch else list(ARCH_IDS)
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    results = []
+    failures = []
+    for mp in meshes:
+        for a in archs:
+            for s in shapes:
+                try:
+                    rl, info = lower_combo(a, s, multi_pod=mp)
+                    results.append(info)
+                    if rl is None:
+                        print(f"[dryrun] SKIP {a} {s}: {info['skipped']}")
+                except Exception as e:  # noqa: BLE001 — report, keep going
+                    failures.append((a, s, mp, repr(e)[:500]))
+                    print(f"[dryrun] FAIL {a} {s} multi_pod={mp}: {repr(e)[:300]}")
+
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"results": results,
+                       "failures": [list(f_) for f_ in failures]}, f, indent=1)
+    print(f"\n[dryrun] done: {len(results)} lowered/skipped, {len(failures)} failures")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

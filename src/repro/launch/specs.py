@@ -1,0 +1,86 @@
+"""ShapeDtypeStruct stand-ins for every model input — the dry-run never
+allocates real arrays (shannon/kernels pattern: weak-type-correct,
+shardable, no device memory).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, InputShape
+
+# federated round layout for train shapes: C waves × T local steps
+FED_WAVES = 4
+FED_LOCAL_STEPS = 1
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def train_batch_specs(cfg: ArchConfig, shape: InputShape,
+                      dtype=jnp.bfloat16, *, federated: bool = True) -> Dict:
+    """Batch ShapeDtypeStructs.
+
+    federated=True: client layout (C, T, B_c, ...) for the FSVRG round.
+    federated=False: flat (B, ...) for the centralized AdamW step.
+    """
+    B, S = shape.global_batch, shape.seq_len
+    if federated:
+        C, T = FED_WAVES, FED_LOCAL_STEPS
+        Bc = B // (C * T)
+        lead = (C, T, Bc)
+    else:
+        lead = (B,)
+
+    def tok(*tail):
+        return sds(lead + tuple(tail), jnp.int32)
+
+    def f32(*tail):
+        return sds(lead + tuple(tail), jnp.float32)
+
+    def emb(*tail):
+        return sds(lead + tuple(tail), dtype)
+
+    if cfg.family == "vlm":
+        P = cfg.frontend_tokens
+        return {"tokens": tok(S - P), "labels": tok(S - P), "mask": f32(S - P),
+                "patch_embeds": emb(P, cfg.d_model)}
+    if cfg.family == "encdec_audio":
+        F = cfg.frontend_tokens
+        return {"tokens": tok(S), "labels": tok(S), "mask": f32(S),
+                "frame_embeds": emb(F, cfg.d_model)}
+    return {"tokens": tok(S), "labels": tok(S), "mask": f32(S)}
+
+
+def prefill_batch_specs(cfg: ArchConfig, shape: InputShape, dtype=jnp.bfloat16) -> Dict:
+    return train_batch_specs(cfg, shape, dtype, federated=False)
+
+
+def decode_token_specs(shape: InputShape) -> jax.ShapeDtypeStruct:
+    return sds((shape.global_batch, 1), jnp.int32)
+
+
+def params_specs(model) -> Dict:
+    return jax.eval_shape(model.init, jax.random.PRNGKey(0))
+
+
+def cache_specs(model, shape: InputShape):
+    if model.cfg.family == "encdec_audio":
+        return jax.eval_shape(
+            lambda: model.init_cache(shape.global_batch, shape.seq_len,
+                                     model.cfg.frontend_tokens))
+    return jax.eval_shape(lambda: model.init_cache(shape.global_batch, shape.seq_len))
+
+
+def input_specs(cfg: ArchConfig, shape: InputShape, model, dtype=jnp.bfloat16):
+    """All positional input specs for the step that `shape.kind` selects."""
+    if shape.kind == "train":
+        return (params_specs(model), train_batch_specs(cfg, shape, dtype))
+    if shape.kind == "prefill":
+        return (params_specs(model), prefill_batch_specs(cfg, shape, dtype))
+    if shape.kind == "decode":
+        return (params_specs(model), decode_token_specs(shape), cache_specs(model, shape))
+    raise ValueError(shape.kind)

@@ -1,0 +1,52 @@
+"""Step functions lowered by the dry-run and used by the real drivers.
+
+  * fsvrg_round_step — the paper's technique: one federated round
+    (full-grad all-reduce + local VR epochs + scaled aggregation).
+    This is the `train` entry in the roofline table.
+  * adamw_train_step — standard centralized training step (baseline
+    substrate; also what the FSVRGR/centralized comparisons use).
+  * serve_prefill / serve_decode_step — inference entries.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.neural import FedNeuralConfig, make_fsvrg_round
+from repro.models.model import Model
+from repro.optim import Optimizer
+
+
+def make_fsvrg_step(model: Model, fed_cfg: FedNeuralConfig) -> Callable:
+    round_fn = make_fsvrg_round(model, fed_cfg)
+
+    def step(params, client_batches):
+        return round_fn(params, client_batches)
+
+    return step
+
+
+def make_adamw_step(model: Model, opt: Optimizer) -> Callable:
+    def step(params, opt_state, opt_step, batch):
+        (loss, metrics), grads = jax.value_and_grad(model.loss, has_aux=True)(params, batch)
+        params, opt_state = opt.update(params, grads, opt_state, opt_step)
+        return params, opt_state, opt_step + 1, loss, metrics
+
+    return step
+
+
+def make_prefill_step(model: Model) -> Callable:
+    def step(params, batch):
+        return model.prefill(params, batch)
+
+    return step
+
+
+def make_decode_step(model: Model) -> Callable:
+    def step(params, tokens, cache):
+        return model.decode_step(params, tokens, cache)
+
+    return step

@@ -1,0 +1,147 @@
+"""Encoder-decoder backbone (SeamlessM4T-medium).
+
+The audio frontend (mel-spectrogram + conv feature extractor) is a stub per
+the carve-out: the encoder consumes precomputed frame embeddings of shape
+(B, frames, d_model).  The decoder is a standard causal transformer with
+interleaved cross-attention; decode caches self-attn KV and the
+cross-attention K/V are precomputed once from the encoder output.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import layers as L
+from repro.utils import flags
+
+
+def init_encoder(key, cfg: ArchConfig, dtype) -> Dict:
+    def one(k):
+        k1, k2 = jax.random.split(k)
+        return {
+            "norm1": jnp.ones((cfg.d_model,), jnp.float32),
+            "norm2": jnp.ones((cfg.d_model,), jnp.float32),
+            "attn": L.init_attention(k1, cfg, dtype),
+            "mlp": L.init_mlp(k2, cfg, dtype),
+        }
+    keys = jax.random.split(key, cfg.encoder_layers)
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *[one(k) for k in keys])
+    return {"layers": stacked, "out_norm": jnp.ones((cfg.d_model,), jnp.float32)}
+
+
+def encoder_forward(params, cfg: ArchConfig, frames: jax.Array, *, remat: bool = True):
+    """frames: (B, F, d) precomputed frontend embeddings -> (B, F, d)."""
+    B, F, _ = frames.shape
+    positions = jnp.broadcast_to(jnp.arange(F), (B, F))
+
+    def block(x, p):
+        h = L.rms_norm(x, p["norm1"], cfg.norm_eps)
+        Bh, S, _ = h.shape
+        H, Hkv, Dh = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+        q = L.apply_rope((h @ p["attn"]["wq"]).reshape(Bh, S, H, Dh), positions, cfg.rope_theta)
+        k = L.apply_rope((h @ p["attn"]["wk"]).reshape(Bh, S, Hkv, Dh), positions, cfg.rope_theta)
+        v = (h @ p["attn"]["wv"]).reshape(Bh, S, Hkv, Dh)
+        o = L.flash_attention(q, k, v, causal=False)          # bidirectional
+        x = x + (o.reshape(Bh, S, H * Dh) @ p["attn"]["wo"])
+        h = L.rms_norm(x, p["norm2"], cfg.norm_eps)
+        x = x + L.mlp_fwd(p["mlp"], h, cfg)
+        return x, None
+
+    body = jax.checkpoint(block) if remat else block
+    x, _ = jax.lax.scan(lambda c, p: body(c, p), frames, params["layers"],
+                        unroll=flags.scan_unroll())
+    return L.rms_norm(x, params["out_norm"], cfg.norm_eps)
+
+
+def init_decoder(key, cfg: ArchConfig, dtype) -> Dict:
+    def one(k):
+        k1, k2, k3 = jax.random.split(k, 3)
+        return {
+            "norm1": jnp.ones((cfg.d_model,), jnp.float32),
+            "norm_x": jnp.ones((cfg.d_model,), jnp.float32),
+            "norm2": jnp.ones((cfg.d_model,), jnp.float32),
+            "attn": L.init_attention(k1, cfg, dtype),
+            "xattn": L.init_cross_attention(k2, cfg, dtype),
+            "mlp": L.init_mlp(k3, cfg, dtype),
+        }
+    keys = jax.random.split(key, cfg.num_layers)
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *[one(k) for k in keys])
+
+
+def decoder_forward(params, cfg: ArchConfig, x, enc_out, positions, *, remat: bool = True):
+    """x: (B,S,d) token embeddings; enc_out: (B,F,d)."""
+
+    def block(x, p):
+        h = L.rms_norm(x, p["norm1"], cfg.norm_eps)
+        o, _ = L.attention_fwd(p["attn"], h, cfg, positions)
+        x = x + o
+        h = L.rms_norm(x, p["norm_x"], cfg.norm_eps)
+        x = x + L.cross_attention_fwd(p["xattn"], h, enc_out, cfg)
+        h = L.rms_norm(x, p["norm2"], cfg.norm_eps)
+        x = x + L.mlp_fwd(p["mlp"], h, cfg)
+        return x, None
+
+    body = jax.checkpoint(block) if remat else block
+    x, _ = jax.lax.scan(lambda c, p: body(c, p), x, params,
+                        unroll=flags.scan_unroll())
+    return x
+
+
+def init_decoder_cache(cfg: ArchConfig, batch: int, max_seq: int, frames: int, dtype) -> Dict:
+    shp = (cfg.num_layers, batch, max_seq, cfg.num_kv_heads, cfg.head_dim)
+    xshp = (cfg.num_layers, batch, frames, cfg.num_kv_heads, cfg.head_dim)
+    return {
+        "k": jnp.zeros(shp, dtype), "v": jnp.zeros(shp, dtype),
+        "xk": jnp.zeros(xshp, dtype), "xv": jnp.zeros(xshp, dtype),
+        "len": jnp.zeros((), jnp.int32),
+    }
+
+
+def precompute_cross_cache(params, cfg: ArchConfig, enc_out: jax.Array):
+    """K/V projections of the encoder output for every decoder layer."""
+    B, F, _ = enc_out.shape
+    Hkv, Dh = cfg.num_kv_heads, cfg.head_dim
+
+    def one(_, p):
+        k = (enc_out @ p["xattn"]["wk"]).reshape(B, F, Hkv, Dh)
+        v = (enc_out @ p["xattn"]["wv"]).reshape(B, F, Hkv, Dh)
+        return None, (k, v)
+
+    _, (xk, xv) = jax.lax.scan(one, None, params)
+    return xk, xv
+
+
+def decoder_decode_step(params, cfg: ArchConfig, x: jax.Array, cache: Dict):
+    """One-token decode with cached self KV + precomputed cross KV."""
+    cur_len = cache["len"]
+    B = x.shape[0]
+    H, Hkv, Dh = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+
+    def block(x, inp):
+        p, ck, cv, xk, xv = inp
+        h = L.rms_norm(x, p["norm1"], cfg.norm_eps)
+        pos = jnp.full((B, 1), cur_len, dtype=jnp.int32)
+        q = L.apply_rope((h @ p["attn"]["wq"]).reshape(B, 1, H, Dh), pos, cfg.rope_theta)
+        k = L.apply_rope((h @ p["attn"]["wk"]).reshape(B, 1, Hkv, Dh), pos, cfg.rope_theta)
+        v = (h @ p["attn"]["wv"]).reshape(B, 1, Hkv, Dh)
+        ck = jax.lax.dynamic_update_slice(ck, k.astype(ck.dtype), (0, cur_len, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cv, v.astype(cv.dtype), (0, cur_len, 0, 0))
+        o = L.decode_attention(q, ck, cv, cur_len + 1)
+        x = x + (o.reshape(B, 1, H * Dh) @ p["attn"]["wo"])
+        # cross attention against full (static) encoder memory
+        h = L.rms_norm(x, p["norm_x"], cfg.norm_eps)
+        qx = (h @ p["xattn"]["wq"]).reshape(B, 1, H, Dh)
+        ox = L.decode_attention(qx, xk, xv, jnp.asarray(xk.shape[1], jnp.int32))
+        x = x + (ox.reshape(B, 1, H * Dh) @ p["xattn"]["wo"])
+        h = L.rms_norm(x, p["norm2"], cfg.norm_eps)
+        x = x + L.mlp_fwd(p["mlp"], h, cfg)
+        return x, (ck, cv)
+
+    x, (nk, nv) = jax.lax.scan(block, x, (params, cache["k"], cache["v"], cache["xk"], cache["xv"]),
+                               unroll=flags.scan_unroll())
+    new_cache = dict(cache)
+    new_cache.update(k=nk, v=nv, len=cur_len + 1)
+    return x, new_cache

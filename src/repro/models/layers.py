@@ -1,0 +1,336 @@
+"""Shared transformer building blocks (pure JAX, explicit param pytrees).
+
+All attention goes through :func:`flash_attention` — a pure-JAX blocked
+(online-softmax) implementation scanning over query/key blocks so the full
+S x S score matrix is never materialized.  This is what makes prefill_32k
+lower with a bounded working set on the production mesh.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.utils import flags
+
+# ----------------------------------------------------------------------- #
+# initializers / norms
+# ----------------------------------------------------------------------- #
+
+
+def dense_init(key, shape, dtype, scale: float = 1.0):
+    fan_in = shape[0]
+    std = scale / (fan_in ** 0.5)
+    return (jax.random.normal(key, shape) * std).astype(dtype)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def rms_norm(x: jax.Array, weight: jax.Array, eps: float = 1e-5) -> jax.Array:
+    """RMSNorm with a custom VJP that keeps the residual-stream cotangent in
+    the input dtype.
+
+    The naive autodiff of the f32 variance branch produces an f32 (B,S,d)
+    cotangent; when it joins the bf16 branch the sum promotes to f32 and the
+    entire backward residual stream — including every Megatron all-reduce —
+    becomes f32 (measured: ~12 × 268 MB f32 ARs per layer per pass on
+    llama3-8b train_4k; EXPERIMENTS.md §Perf iter 2/3).  Here the backward
+    math runs in f32 *locally* and returns dx cast to x.dtype.
+    """
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * weight.astype(jnp.float32)).astype(x.dtype)
+
+
+def _rms_norm_fwd(x, weight, eps):
+    return rms_norm(x, weight, eps), (x, weight)
+
+
+def _rms_norm_bwd(eps, res, dy):
+    x, weight = res
+    x32 = x.astype(jnp.float32)
+    dy32 = dy.astype(jnp.float32)
+    w32 = weight.astype(jnp.float32)
+    d = x.shape[-1]
+    s = jax.lax.rsqrt(jnp.mean(jnp.square(x32), axis=-1, keepdims=True) + eps)
+    wdy = w32 * dy32
+    dx = s * wdy - (s ** 3) * x32 * jnp.sum(x32 * wdy, axis=-1, keepdims=True) / d
+    dw = jnp.sum((x32 * s) * dy32, axis=tuple(range(x.ndim - 1)))
+    return dx.astype(x.dtype), dw.astype(weight.dtype)
+
+
+rms_norm.defvjp(_rms_norm_fwd, _rms_norm_bwd)
+
+
+def layer_norm(x: jax.Array, weight: jax.Array, bias: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (y * weight.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dtype)
+
+
+# ----------------------------------------------------------------------- #
+# RoPE
+# ----------------------------------------------------------------------- #
+
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, Dh); positions: (..., S) int32."""
+    head_dim = x.shape[-1]
+    freqs = rope_freqs(head_dim, theta)                       # (Dh/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, Dh/2)
+    cos = jnp.cos(angles)[..., None, :]                        # (..., S, 1, Dh/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ----------------------------------------------------------------------- #
+# blocked flash attention (pure JAX)
+# ----------------------------------------------------------------------- #
+
+_NEG_INF = -1e30
+
+
+def _attn_block(q, k, v, qpos, kpos, *, causal, window, scale):
+    """One (q-block, kv-block) tile. q: (B,Qb,Hkv,G,Dh) k/v: (B,Kb,Hkv,Dh)."""
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", q, k, preferred_element_type=jnp.float32)
+    s = s * scale
+    mask = jnp.ones((q.shape[1], k.shape[1]), dtype=bool)
+    if causal:
+        mask &= qpos[:, None] >= kpos[None, :]
+    if window is not None:
+        mask &= qpos[:, None] - kpos[None, :] < window
+    s = jnp.where(mask[None, None, None, :, :], s, _NEG_INF)
+    return s
+
+
+def flash_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    q_block: int = 512,
+    kv_block: int = 512,
+    q_offset: int = 0,
+) -> jax.Array:
+    """Blocked online-softmax attention.
+
+    q: (B, Sq, H, Dh); k, v: (B, Skv, Hkv, Dh); H % Hkv == 0 (GQA).
+    Returns (B, Sq, H, Dh).  Never materializes (Sq, Skv) scores: scans over
+    query blocks, inner-scans over kv blocks with running (max, denom, acc).
+    """
+    B, Sq, H, Dh = q.shape
+    _, Skv, Hkv, _ = k.shape
+    G = H // Hkv
+    scale = Dh ** -0.5
+
+    q_block = min(q_block, Sq)
+    kv_block = min(kv_block, Skv)
+    if Sq % q_block or Skv % kv_block:
+        raise ValueError(f"seq lens ({Sq},{Skv}) must divide blocks ({q_block},{kv_block})")
+    nq, nk = Sq // q_block, Skv // kv_block
+
+    qg = q.reshape(B, nq, q_block, Hkv, G, Dh)
+    kg = k.reshape(B, nk, kv_block, Hkv, Dh)
+    vg = v.reshape(B, nk, kv_block, Hkv, Dh)
+
+    def q_step(_, qi):
+        qb, qidx = qi
+        qpos = q_offset + qidx * q_block + jnp.arange(q_block)
+
+        def kv_step(carry, ki):
+            acc, m, l = carry
+            kb, vb, kidx = ki
+            kpos = kidx * kv_block + jnp.arange(kv_block)
+            s = _attn_block(qb, kb, vb, qpos, kpos, causal=causal, window=window, scale=scale)
+            m_new = jnp.maximum(m, s.max(axis=-1))                   # (B,Hkv,G,Qb)
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(axis=-1)
+            pv = jnp.einsum("bhgqk,bkhd->bhgqd", p.astype(vb.dtype), vb,
+                            preferred_element_type=jnp.float32)
+            acc_new = acc * corr[..., None] + pv
+            return (acc_new, m_new, l_new), None
+
+        acc0 = jnp.zeros((B, Hkv, G, q_block, Dh), jnp.float32)
+        m0 = jnp.full((B, Hkv, G, q_block), _NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, Hkv, G, q_block), jnp.float32)
+        (acc, m, l), _ = jax.lax.scan(
+            jax.checkpoint(kv_step),
+            (acc0, m0, l0),
+            (kg.swapaxes(0, 1), vg.swapaxes(0, 1), jnp.arange(nk)),
+        )
+        out = acc / jnp.maximum(l[..., None], 1e-30)
+        # (B,Hkv,G,Qb,Dh) -> (B,Qb,Hkv,G,Dh)
+        return None, out.transpose(0, 3, 1, 2, 4)
+
+    _, out = jax.lax.scan(q_step, None, (qg.swapaxes(0, 1), jnp.arange(nq)))
+    # out: (nq, B, Qb, Hkv, G, Dh)
+    out = out.transpose(1, 0, 2, 3, 4, 5).reshape(B, Sq, H, Dh)
+    return out.astype(q.dtype)
+
+
+def decode_attention(
+    q: jax.Array,            # (B, 1, H, Dh)
+    k_cache: jax.Array,      # (B, Smax, Hkv, Dh)
+    v_cache: jax.Array,
+    cur_len: jax.Array,      # () int32 — number of valid cache entries
+    *,
+    window: Optional[int] = None,
+) -> jax.Array:
+    """Single-token decode attention against a (possibly windowed) KV cache."""
+    B, _, H, Dh = q.shape
+    _, Smax, Hkv, _ = k_cache.shape
+    G = H // Hkv
+    qg = q.reshape(B, Hkv, G, Dh)
+    s = jnp.einsum("bhgd,bshd->bhgs", qg, k_cache, preferred_element_type=jnp.float32)
+    s = s * (Dh ** -0.5)
+    pos = jnp.arange(Smax)
+    mask = pos < cur_len
+    if window is not None:
+        mask &= pos >= cur_len - window
+    s = jnp.where(mask[None, None, None, :], s, _NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgs,bshd->bhgd", p.astype(v_cache.dtype), v_cache,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, 1, H, Dh).astype(q.dtype)
+
+
+# ----------------------------------------------------------------------- #
+# attention layer (params + apply)
+# ----------------------------------------------------------------------- #
+
+
+def init_attention(key, cfg, dtype) -> dict:
+    d, H, Hkv, Dh = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(ks[0], (d, H * Dh), dtype),
+        "wk": dense_init(ks[1], (d, Hkv * Dh), dtype),
+        "wv": dense_init(ks[2], (d, Hkv * Dh), dtype),
+        "wo": dense_init(ks[3], (H * Dh, d), dtype),
+    }
+
+
+def attention_fwd(params, x, cfg, positions, *, window=None):
+    """Full-sequence (train/prefill) attention. x: (B,S,d)."""
+    from repro.sharding.hints import constrain_heads
+
+    B, S, _ = x.shape
+    H, Hkv, Dh = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q = (x @ params["wq"]).reshape(B, S, H, Dh)
+    k = (x @ params["wk"]).reshape(B, S, Hkv, Dh)
+    v = (x @ params["wv"]).reshape(B, S, Hkv, Dh)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    # q shards on its own head count; k/v only when the KV heads divide
+    # (GQA einsums treat heads as a batch dim, so mixed q-sharded /
+    # kv-replicated layouts need no communication)
+    q = constrain_heads(q)
+    k = constrain_heads(k, kv_heads=Hkv)
+    v = constrain_heads(v, kv_heads=Hkv)
+    o = flash_attention(q, k, v, causal=True, window=window or cfg.sliding_window)
+    return o.reshape(B, S, H * Dh) @ params["wo"], (k, v)
+
+
+def attention_decode(params, x, cfg, cache_k, cache_v, cur_len):
+    """One-token decode. x: (B,1,d); caches: (B,Smax,Hkv,Dh)."""
+    B = x.shape[0]
+    H, Hkv, Dh = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    pos = jnp.full((B, 1), cur_len, dtype=jnp.int32)
+    q = apply_rope((x @ params["wq"]).reshape(B, 1, H, Dh), pos, cfg.rope_theta)
+    k = apply_rope((x @ params["wk"]).reshape(B, 1, Hkv, Dh), pos, cfg.rope_theta)
+    v = (x @ params["wv"]).reshape(B, 1, Hkv, Dh)
+    cache_k = jax.lax.dynamic_update_slice(cache_k, k.astype(cache_k.dtype), (0, cur_len, 0, 0))
+    cache_v = jax.lax.dynamic_update_slice(cache_v, v.astype(cache_v.dtype), (0, cur_len, 0, 0))
+    o = decode_attention(q, cache_k, cache_v, cur_len + 1, window=cfg.sliding_window)
+    return o.reshape(B, 1, H * Dh) @ params["wo"], cache_k, cache_v
+
+
+# cross-attention (enc-dec): no RoPE on encoder keys, not causal.
+
+
+def init_cross_attention(key, cfg, dtype) -> dict:
+    return init_attention(key, cfg, dtype)
+
+
+def cross_attention_fwd(params, x, enc_out, cfg):
+    B, S, _ = x.shape
+    Se = enc_out.shape[1]
+    H, Hkv, Dh = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q = (x @ params["wq"]).reshape(B, S, H, Dh)
+    k = (enc_out @ params["wk"]).reshape(B, Se, Hkv, Dh)
+    v = (enc_out @ params["wv"]).reshape(B, Se, Hkv, Dh)
+    o = flash_attention(q, k, v, causal=False, window=None)
+    return o.reshape(B, S, H * Dh) @ params["wo"]
+
+
+# ----------------------------------------------------------------------- #
+# MLPs
+# ----------------------------------------------------------------------- #
+
+
+def init_mlp(key, cfg, dtype, d_ff=None) -> dict:
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    if cfg.mlp_style == "swiglu":
+        ks = jax.random.split(key, 3)
+        return {
+            "w_gate": dense_init(ks[0], (d, f), dtype),
+            "w_up": dense_init(ks[1], (d, f), dtype),
+            "w_down": dense_init(ks[2], (f, d), dtype),
+        }
+    ks = jax.random.split(key, 2)
+    return {"w_up": dense_init(ks[0], (d, f), dtype), "w_down": dense_init(ks[1], (f, d), dtype)}
+
+
+def mlp_fwd(params, x, cfg):
+    if cfg.mlp_style == "swiglu":
+        return (jax.nn.silu(x @ params["w_gate"]) * (x @ params["w_up"])) @ params["w_down"]
+    return jax.nn.gelu(x @ params["w_up"]) @ params["w_down"]
+
+
+# ----------------------------------------------------------------------- #
+# chunked LM head loss (never materializes full (tokens, vocab) logits)
+# ----------------------------------------------------------------------- #
+
+
+def lm_head_loss(x, emb_out, labels, mask, *, chunk: int = 2048):
+    """Mean next-token cross entropy.
+
+    x: (B,S,d) final hidden states, emb_out: (d,V), labels: (B,S) int32,
+    mask: (B,S) {0,1}.  Computes softmax CE in sequence chunks under remat so
+    peak logits memory is (B, chunk, V).
+    """
+    B, S, d = x.shape
+    chunk = min(chunk, S)
+    if S % chunk:
+        chunk = S  # fallback: odd lengths take the unchunked path
+    n = S // chunk
+    xc = x.reshape(B, n, chunk, d).swapaxes(0, 1)
+    lc = labels.reshape(B, n, chunk).swapaxes(0, 1)
+    mc = mask.reshape(B, n, chunk).swapaxes(0, 1)
+
+    @jax.checkpoint
+    def chunk_loss(carry, inp):
+        xb, lb, mb = inp
+        logits = (xb @ emb_out).astype(jnp.float32)      # (B, chunk, V)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, lb[..., None], axis=-1)[..., 0]
+        ce = (logz - gold) * mb
+        return carry + ce.sum(), None
+
+    total, _ = jax.lax.scan(chunk_loss, jnp.zeros((), jnp.float32), (xc, lc, mc),
+                            unroll=flags.scan_unroll())
+    return total / jnp.maximum(mask.sum().astype(jnp.float32), 1.0)

@@ -1,0 +1,113 @@
+"""Mamba (S6) selective-state-space block, used by the Jamba hybrid.
+
+Training/prefill run a chunked selective scan: `lax.scan` over sequence
+chunks (rematerialized) with an inner `associative_scan` over the diagonal
+recurrence h_t = a_t * h_{t-1} + b_t.  Decode is the O(1) single-step update,
+which is what makes long_500k lowerable for the hybrid.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init
+
+
+def init_mamba(key, cfg, dtype) -> dict:
+    d = cfg.d_model
+    di = cfg.mamba_expand * d
+    N = cfg.mamba_d_state
+    ks = jax.random.split(key, 7)
+    return {
+        "in_proj": dense_init(ks[0], (d, 2 * di), dtype),
+        "conv_w": dense_init(ks[1], (cfg.mamba_d_conv, di), dtype, scale=1.0),
+        "x_bc": dense_init(ks[2], (di, 2 * N), dtype),
+        "x_dt": dense_init(ks[3], (di, 1), dtype),
+        "dt_bias": jnp.zeros((di,), jnp.float32),
+        "a_log": jnp.log(jnp.tile(jnp.arange(1, N + 1, dtype=jnp.float32), (di, 1))),
+        "d_skip": jnp.ones((di,), jnp.float32),
+        "out_proj": dense_init(ks[4], (di, d), dtype),
+    }
+
+
+def _causal_conv(x, w, conv_state=None):
+    """Depthwise causal conv. x: (B,S,di), w: (Kc,di)."""
+    Kc = w.shape[0]
+    if conv_state is None:
+        pad = jnp.zeros((x.shape[0], Kc - 1, x.shape[2]), x.dtype)
+    else:
+        pad = conv_state
+    xp = jnp.concatenate([pad, x], axis=1)                   # (B, S+Kc-1, di)
+    out = sum(xp[:, i : i + x.shape[1]] * w[i][None, None, :] for i in range(Kc))
+    new_state = xp[:, -(Kc - 1):] if Kc > 1 else pad
+    return out, new_state
+
+
+def _ssm_scan_chunked(a, b, h0, chunk: int):
+    """Diagonal SSM recurrence h_t = a_t*h_{t-1} + b_t over (B,S,di,N).
+
+    Scans chunks sequentially (carrying h) and runs an associative scan
+    inside each (rematerialized) chunk.
+    """
+    B, S, di, N = a.shape
+    chunk = min(chunk, S)
+    if S % chunk:
+        chunk = S
+    n = S // chunk
+    ac = a.reshape(B, n, chunk, di, N).swapaxes(0, 1)
+    bc = b.reshape(B, n, chunk, di, N).swapaxes(0, 1)
+
+    def combine(x, y):
+        a1, b1 = x
+        a2, b2 = y
+        return a1 * a2, a2 * b1 + b2
+
+    @jax.checkpoint
+    def chunk_step(h, inp):
+        ab, bb = inp                                          # (B, chunk, di, N)
+        aa, bb2 = jax.lax.associative_scan(combine, (ab, bb), axis=1)
+        hs = aa * h[:, None] + bb2                            # (B, chunk, di, N)
+        return hs[:, -1], hs
+
+    h_last, hs = jax.lax.scan(chunk_step, h0, (ac, bc))
+    hs = hs.swapaxes(0, 1).reshape(B, S, di, N)
+    return hs, h_last
+
+
+def mamba_fwd(params, x, cfg, *, ssm_state=None, conv_state=None, chunk: int = 256):
+    """x: (B,S,d) -> (B,S,d), (ssm_state, conv_state).
+
+    Pass states for streaming decode (S==1 uses the O(1) update)."""
+    B, S, d = x.shape
+    di = cfg.mamba_expand * d
+    N = cfg.mamba_d_state
+
+    xz = x @ params["in_proj"]
+    xs, z = jnp.split(xz, 2, axis=-1)                         # (B,S,di) each
+    xs, new_conv = _causal_conv(xs, params["conv_w"], conv_state)
+    xs = jax.nn.silu(xs)
+
+    bc = xs @ params["x_bc"]                                  # (B,S,2N)
+    Bm, Cm = jnp.split(bc.astype(jnp.float32), 2, axis=-1)    # (B,S,N)
+    dt = jax.nn.softplus(
+        (xs @ params["x_dt"]).astype(jnp.float32) + params["dt_bias"]
+    )                                                         # (B,S,di) via (B,S,1)+(di,)
+    A = -jnp.exp(params["a_log"])                             # (di,N)
+
+    a_bar = jnp.exp(dt[..., None] * A[None, None])            # (B,S,di,N)
+    b_bar = dt[..., None] * Bm[:, :, None, :] * xs.astype(jnp.float32)[..., None]
+
+    if ssm_state is None:
+        ssm_state = jnp.zeros((B, di, N), jnp.float32)
+
+    if S == 1:
+        h = a_bar[:, 0] * ssm_state + b_bar[:, 0]             # (B,di,N)
+        y = jnp.einsum("bdn,bn->bd", h, Cm[:, 0])[:, None]    # (B,1,di)
+        new_state = h
+    else:
+        hs, new_state = _ssm_scan_chunked(a_bar, b_bar, ssm_state, chunk)
+        y = jnp.einsum("bsdn,bsn->bsd", hs, Cm)
+
+    y = y + xs.astype(jnp.float32) * params["d_skip"]
+    y = y.astype(x.dtype) * jax.nn.silu(z)
+    return y @ params["out_proj"], (new_state, new_conv)

@@ -1,0 +1,217 @@
+"""Top-level model API: ``build_model(cfg, dtype)`` -> :class:`Model`.
+
+A :class:`Model` is a bundle of pure functions over explicit param pytrees:
+
+    init(rng)                          -> params
+    loss(params, batch)                -> (scalar, metrics)      # train
+    prefill(params, batch)             -> (last_logits, cache)   # inference
+    init_cache(batch, max_seq)         -> cache
+    decode_step(params, tokens, cache) -> (logits, cache)        # one token
+
+Batches (all int32 tokens, global shapes before sharding):
+    dense/moe/hybrid/ssm : {tokens, labels, mask}
+    vlm                  : + patch_embeds (B, P, d)  [vision-stub carve-out]
+    encdec_audio         : {frame_embeds (B,F,d), tokens, labels, mask}
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import encdec as ED
+from repro.models import layers as L
+from repro.models import transformer as T
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ArchConfig
+    dtype: Any
+    init: Callable
+    loss: Callable
+    prefill: Callable
+    init_cache: Callable
+    decode_step: Callable
+
+
+def _init_embeddings(key, cfg: ArchConfig, dtype):
+    k1, k2 = jax.random.split(key)
+    p = {"embed": (jax.random.normal(k1, (cfg.vocab_size, cfg.d_model)) * 0.02).astype(dtype),
+         "out_norm": jnp.ones((cfg.d_model,), jnp.float32)}
+    if not cfg.tie_embeddings:
+        p["unembed"] = (jax.random.normal(k2, (cfg.d_model, cfg.vocab_size)) * 0.02).astype(dtype)
+    return p
+
+
+def _unembed(params, cfg):
+    return params["embed"].T if cfg.tie_embeddings else params["unembed"]
+
+
+# --------------------------------------------------------------------- #
+# decoder-only families (dense / moe / hybrid / ssm / vlm)
+# --------------------------------------------------------------------- #
+
+
+def _build_decoder_only(cfg: ArchConfig, dtype) -> Model:
+    is_vlm = cfg.family == "vlm"
+
+    def init(rng):
+        k1, k2 = jax.random.split(rng)
+        p = _init_embeddings(k1, cfg, dtype)
+        p["layers"] = T.init_stack(k2, cfg, dtype)
+        return p
+
+    def _embed_inputs(params, batch):
+        x = jnp.take(params["embed"], batch["tokens"], axis=0)
+        if is_vlm:
+            patches = batch["patch_embeds"].astype(x.dtype)   # (B, P, d)
+            x = jnp.concatenate([patches, x], axis=1)
+        return x
+
+    def loss(params, batch):
+        x = _embed_inputs(params, batch)
+        B, S, _ = x.shape
+        positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+        h, aux = T.stack_forward(params["layers"], cfg, x, positions, remat=True)
+        h = L.rms_norm(h, params["out_norm"], cfg.norm_eps)
+        if is_vlm:  # image prefix predicts nothing
+            P = batch["patch_embeds"].shape[1]
+            h = h[:, P:]
+        ce = L.lm_head_loss(h, _unembed(params, cfg), batch["labels"], batch["mask"])
+        lb_w = cfg.moe.load_balance_weight if cfg.moe is not None else 0.0
+        total = ce + lb_w * aux
+        return total, {"ce": ce, "aux": aux}
+
+    def prefill(params, batch):
+        x = _embed_inputs(params, batch)
+        B, S, _ = x.shape
+        positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+        h, _, cache = T.stack_forward(params["layers"], cfg, x, positions,
+                                      remat=False, collect_cache=True)
+        h = L.rms_norm(h, params["out_norm"], cfg.norm_eps)
+        logits = h[:, -1] @ _unembed(params, cfg)
+        cache = _prefill_cache_from_entries(cfg, cache, S)
+        return logits, cache
+
+    def init_cache(batch: int, max_seq: int):
+        return T.init_cache(cfg, batch, max_seq, dtype)
+
+    def decode_step(params, tokens, cache):
+        x = jnp.take(params["embed"], tokens, axis=0)          # (B,1,d)
+        h, cache = T.stack_decode(params["layers"], cfg, x, cache)
+        h = L.rms_norm(h, params["out_norm"], cfg.norm_eps)
+        logits = h[:, -1] @ _unembed(params, cfg)
+        return logits, cache
+
+    return Model(cfg, dtype, init, loss, prefill, init_cache, decode_step)
+
+
+def _prefill_cache_from_entries(cfg: ArchConfig, entries: Dict, seq_len: int) -> Dict:
+    """Convert stack_forward cache entries into the decode-cache layout.
+
+    For attention entries the full-sequence K/V become the cache prefix (or
+    the last-`window` ring for SWA); recurrent entries carry final states.
+    """
+    smax = T.cache_max_len(cfg, seq_len)
+    out: Dict = {"len": jnp.asarray(seq_len, jnp.int32)}
+    for key, e in entries.items():
+        if "k" in e:  # attention: (nrep, B, S, Hkv, Dh)
+            k, v = e["k"], e["v"]
+            if cfg.sliding_window is not None and seq_len > smax:
+                k = jnp.roll(k[:, :, -smax:], shift=seq_len % smax, axis=2)
+                v = jnp.roll(v[:, :, -smax:], shift=seq_len % smax, axis=2)
+            out[key] = {"k": k, "v": v}
+        elif "ssm" in e:
+            out[key] = {"ssm": e["ssm"], "conv": e["conv"]}
+        elif "wkv" in e:
+            out[key] = {"wkv": e["wkv"], "shift_tm": e["shift_tm"],
+                        "shift_cm": e.get("shift_cm", e["shift_tm"])}
+    return out
+
+
+# --------------------------------------------------------------------- #
+# encoder-decoder (audio)
+# --------------------------------------------------------------------- #
+
+
+def _build_encdec(cfg: ArchConfig, dtype) -> Model:
+    def init(rng):
+        k1, k2, k3 = jax.random.split(rng, 3)
+        p = _init_embeddings(k1, cfg, dtype)
+        p["encoder"] = ED.init_encoder(k2, cfg, dtype)
+        p["decoder"] = ED.init_decoder(k3, cfg, dtype)
+        return p
+
+    def loss(params, batch):
+        enc = ED.encoder_forward(params["encoder"], cfg, batch["frame_embeds"].astype(dtype))
+        x = jnp.take(params["embed"], batch["tokens"], axis=0)
+        B, S, _ = x.shape
+        positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+        h = ED.decoder_forward(params["decoder"], cfg, x, enc, positions)
+        h = L.rms_norm(h, params["out_norm"], cfg.norm_eps)
+        ce = L.lm_head_loss(h, _unembed(params, cfg), batch["labels"], batch["mask"])
+        return ce, {"ce": ce, "aux": jnp.zeros((), jnp.float32)}
+
+    def prefill(params, batch):
+        enc = ED.encoder_forward(params["encoder"], cfg, batch["frame_embeds"].astype(dtype),
+                                 remat=False)
+        x = jnp.take(params["embed"], batch["tokens"], axis=0)
+        B, S, _ = x.shape
+        positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+        h = ED.decoder_forward(params["decoder"], cfg, x, enc, positions, remat=False)
+        h = L.rms_norm(h, params["out_norm"], cfg.norm_eps)
+        logits = h[:, -1] @ _unembed(params, cfg)
+        cache = ED.init_decoder_cache(cfg, B, S, enc.shape[1], dtype)
+        xk, xv = ED.precompute_cross_cache(params["decoder"], cfg, enc)
+        cache.update(xk=xk, xv=xv)
+        return logits, cache
+
+    def init_cache(batch: int, max_seq: int, frames: Optional[int] = None):
+        return ED.init_decoder_cache(cfg, batch, max_seq, frames or cfg.frontend_tokens, dtype)
+
+    def decode_step(params, tokens, cache):
+        x = jnp.take(params["embed"], tokens, axis=0)
+        h, cache = ED.decoder_decode_step(params["decoder"], cfg, x, cache)
+        h = L.rms_norm(h, params["out_norm"], cfg.norm_eps)
+        logits = h[:, -1] @ _unembed(params, cfg)
+        return logits, cache
+
+    return Model(cfg, dtype, init, loss, prefill, init_cache, decode_step)
+
+
+# --------------------------------------------------------------------- #
+
+
+def build_model(cfg: ArchConfig, dtype=jnp.bfloat16) -> Model:
+    if cfg.family == "encdec_audio":
+        return _build_encdec(cfg, dtype)
+    return _build_decoder_only(cfg, dtype)
+
+
+def make_batch(cfg: ArchConfig, shape, rng=None, dtype=jnp.bfloat16) -> Dict[str, jax.Array]:
+    """Concrete random batch for smoke tests (small shapes only)."""
+    rng = rng if rng is not None else jax.random.PRNGKey(0)
+    B, S = shape.global_batch, shape.seq_len
+    k1, k2, k3 = jax.random.split(rng, 3)
+    if cfg.family == "vlm":
+        P = cfg.frontend_tokens
+        toks = jax.random.randint(k1, (B, S - P), 0, cfg.vocab_size)
+        return {"tokens": toks,
+                "labels": jax.random.randint(k2, (B, S - P), 0, cfg.vocab_size),
+                "mask": jnp.ones((B, S - P), jnp.float32),
+                "patch_embeds": jax.random.normal(k3, (B, P, cfg.d_model), dtype)}
+    if cfg.family == "encdec_audio":
+        F = cfg.frontend_tokens
+        toks = jax.random.randint(k1, (B, S), 0, cfg.vocab_size)
+        return {"tokens": toks,
+                "labels": jax.random.randint(k2, (B, S), 0, cfg.vocab_size),
+                "mask": jnp.ones((B, S), jnp.float32),
+                "frame_embeds": jax.random.normal(k3, (B, F, cfg.d_model), dtype)}
+    toks = jax.random.randint(k1, (B, S), 0, cfg.vocab_size)
+    return {"tokens": toks,
+            "labels": jax.random.randint(k2, (B, S), 0, cfg.vocab_size),
+            "mask": jnp.ones((B, S), jnp.float32)}

@@ -1,0 +1,95 @@
+"""Mixture-of-Experts MLP with top-k routing and capacity-based dispatch.
+
+Dispatch is gather-based (per-expert top-C token selection) so the cost is
+O(T * k * cf * d_ff) — linear in tokens — rather than the quadratic
+one-hot-einsum dispatch.  Experts are stacked on a leading E axis so they
+shard cleanly over the `model` mesh axis (expert parallelism).
+
+Per-client expert-occupancy statistics (which experts a federated client's
+tokens actually route to) feed the paper's A-matrix aggregation scaling; see
+``repro.core.scaling.expert_occupancy``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init
+
+
+def init_moe(key, cfg, dtype) -> dict:
+    d, f, E = cfg.d_model, cfg.d_ff, cfg.moe.num_experts
+    ks = jax.random.split(key, 4)
+    return {
+        "router": dense_init(ks[0], (d, E), jnp.float32),
+        "w_gate": dense_init(ks[1], (E, d, f), dtype),
+        "w_up": dense_init(ks[2], (E, d, f), dtype),
+        "w_down": dense_init(ks[3], (E, f, d), dtype),
+    }
+
+
+def route_topk(gates_logits: jax.Array, k: int):
+    """gates_logits: (..., E).  Returns (..., E) combine weights (top-k softmax)."""
+    E = gates_logits.shape[-1]
+    probs = jax.nn.softmax(gates_logits.astype(jnp.float32), axis=-1)
+    topv, topi = jax.lax.top_k(probs, k)                     # (..., k)
+    mask = jax.nn.one_hot(topi, E, dtype=jnp.float32).sum(axis=-2)  # (..., E)
+    weights = probs * mask
+    weights = weights / jnp.maximum(weights.sum(-1, keepdims=True), 1e-9)
+    return weights, probs, mask
+
+
+def load_balance_loss(probs: jax.Array, mask: jax.Array) -> jax.Array:
+    """Switch-style auxiliary loss: E * <fraction routed> . <mean prob>."""
+    E = probs.shape[-1]
+    frac = mask.reshape(-1, E).mean(axis=0)
+    mean_p = probs.reshape(-1, E).mean(axis=0)
+    return E * jnp.sum(frac * mean_p)
+
+
+def moe_fwd(params, x, cfg, *, capacity_factor: float = 2.0):
+    """x: (B, S, d) -> (B, S, d), aux_loss scalar.
+
+    Dispatch is *per sequence* (capacity C = cf·k·S/E tokens per expert per
+    sequence): every routing/gather/scatter op is batched over B, so the
+    whole MoE layer shards cleanly over the data axis with zero dispatch
+    communication.  A global top-C (across the full token set) would force
+    XLA to gather every shard's tokens — measured as a 12.4 TB/chip
+    activation all-reduce on dbrx-132b before this change (EXPERIMENTS.md
+    §Perf iter 8).
+    """
+    B, S, d = x.shape
+    E = cfg.moe.num_experts
+    k = cfg.moe.experts_per_token
+
+    logits = x.astype(jnp.float32) @ params["router"]        # (B, S, E)
+    weights, probs, mask = route_topk(logits, k)
+    aux = load_balance_loss(probs, mask)
+
+    C = max(1, min(S, int(capacity_factor * k * S / E)))
+    gate_es = weights.transpose(0, 2, 1)                     # (B, E, S)
+    top_w, top_idx = jax.lax.top_k(gate_es, C)               # (B, E, C)
+
+    from repro.sharding.hints import constrain_heads
+
+    xe = jnp.take_along_axis(
+        x[:, None, :, :],                                    # (B, 1, S, d)
+        top_idx[..., None], axis=2)                          # -> (B, E, C, d)
+    # pin dispatch output: batch over data, experts over model — XLA's
+    # gather partitioner otherwise replicates the full global batch
+    xe = constrain_heads(xe, head_axis=1)
+
+    if cfg.mlp_style == "swiglu":
+        h = jax.nn.silu(jnp.einsum("becd,edf->becf", xe, params["w_gate"]))
+        h = h * jnp.einsum("becd,edf->becf", xe, params["w_up"])
+    else:
+        h = jax.nn.gelu(jnp.einsum("becd,edf->becf", xe, params["w_up"]))
+    ye = jnp.einsum("becf,efd->becd", h, params["w_down"])
+
+    ye = ye * top_w[..., None].astype(ye.dtype)              # (B, E, C, d)
+    ye = constrain_heads(ye, head_axis=1)
+    bidx = jnp.arange(B)[:, None, None]
+    out = jnp.zeros((B, S, d), ye.dtype).at[bidx, top_idx].add(ye)
+    from repro.sharding.hints import constrain_activations
+    out = constrain_activations(out)
+    return out.astype(x.dtype), aux

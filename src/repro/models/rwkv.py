@@ -1,0 +1,177 @@
+"""RWKV-6 (Finch) block — attention-free time mixing with data-dependent decay.
+
+Per head h with head_dim D, the recurrence over the (D, D) state S is
+
+    S_t = diag(w_t) S_{t-1} + k_t^T v_t
+    o_t = r_t (diag(u) k_t^T v_t + S_{t-1})
+
+where w_t = exp(-exp(decay_t)) is the *data-dependent* per-channel decay
+(the defining RWKV-6 feature vs RWKV-4/5's static decay).  Training/prefill
+scan sequence chunks with remat; decode is the O(1) state update — this is
+why rwkv6 runs long_500k.
+
+Simplifications vs the reference implementation (documented, tested against
+our own oracle): single token-shift interpolation parameter set (no 5-way
+LoRA mix), decay LoRA of rank 64.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init
+
+
+def init_rwkv_time_mix(key, cfg, dtype) -> dict:
+    d = cfg.d_model
+    hd = cfg.rwkv_head_dim
+    ks = jax.random.split(key, 8)
+    lora = 64
+    return {
+        "mix_r": 0.5 * jnp.ones((d,), jnp.float32),
+        "mix_k": 0.5 * jnp.ones((d,), jnp.float32),
+        "mix_v": 0.5 * jnp.ones((d,), jnp.float32),
+        "mix_w": 0.5 * jnp.ones((d,), jnp.float32),
+        "wr": dense_init(ks[0], (d, d), dtype),
+        "wk": dense_init(ks[1], (d, d), dtype),
+        "wv": dense_init(ks[2], (d, d), dtype),
+        "wo": dense_init(ks[3], (d, d), dtype),
+        # data-dependent decay LoRA: w_t = exp(-exp(decay_base + lora(x)))
+        "decay_base": jnp.full((d,), -6.0, jnp.float32),
+        "decay_a": dense_init(ks[4], (d, lora), dtype),
+        "decay_b": dense_init(ks[5], (lora, d), dtype),
+        "bonus_u": jnp.zeros((d // hd, hd), jnp.float32),
+        "ln_x_w": jnp.ones((d,), jnp.float32),
+    }
+
+
+def _token_shift(x, mix, last=None):
+    """x: (B,S,d). shift by one step; `last` seeds position -1 for decode."""
+    if last is None:
+        prev = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    else:
+        prev = jnp.concatenate([last[:, None], x[:, :-1]], axis=1) if x.shape[1] > 1 else last[:, None]
+    return x * mix + prev * (1.0 - mix)
+
+
+def _wkv_sequential(r, k, v, w, u, state):
+    """Reference WKV: one step at a time (the oracle; O(1)-state decode path)."""
+    B, S, Hn, D = r.shape
+
+    def step(s, inp):
+        rt, kt, vt, wt = inp                                  # (B,Hn,D)
+        kv = kt[..., :, None] * vt[..., None, :]              # (B,Hn,D,D)
+        out = jnp.einsum("bhd,bhde->bhe", rt, u[None, :, :, None] * kv + s)
+        s = wt[..., :, None] * s + kv
+        return s, out
+
+    rs, ks_, vs, ws = (t.swapaxes(0, 1) for t in (r, k, v, w))
+    state, outs = jax.lax.scan(jax.checkpoint(step), state, (rs, ks_, vs, ws))
+    return outs.swapaxes(0, 1), state                         # (B,S,Hn,D)
+
+
+def _wkv_chunked(r, k, v, w, u, state, chunk: int):
+    """Chunk-parallel WKV (linear-attention form).
+
+    Within a chunk of length L, with per-channel decay products
+    c_t = Π_{i<=t} w_i:
+
+        intra_t = [(r_t ⊙ c_{t-1}) (k_s / c_s)^T ⊙ M_strict] v_s
+        bonus_t = (r_t · (u ⊙ k_t)) v_t
+        inter_t = (r_t ⊙ c_{t-1}) S_0
+        S_L     = diag(c_L) (S_0 + (k/c)^T v)
+
+    This replaces S×(D,D)-state HBM round-trips per token with two (L,D)
+    matmuls + one state update per chunk — the dominant-term fix for the
+    rwkv6 train_4k roofline (EXPERIMENTS.md §Perf pair 3).  Sequential
+    scanning only happens across chunks (S/L carry steps).
+
+    Numerics: c_t can underflow for strongly-decaying channels, so chunks
+    are kept short (default 32) and all chunk math is f32; validated against
+    the sequential oracle in tests/test_rwkv_chunked.py.
+    """
+    B, S, Hn, D = r.shape
+    L = min(chunk, S)
+    if S % L:
+        return _wkv_sequential(r, k, v, w, u, state)
+    n = S // L
+
+    def to_chunks(t):
+        return t.reshape(B, n, L, Hn, D).transpose(1, 0, 3, 2, 4)  # (n,B,Hn,L,D)
+
+    rc, kc, vc, wc = map(to_chunks, (r, k, v, w))
+
+    mask = jnp.tril(jnp.ones((L, L), jnp.float32), k=-1)      # strict lower
+
+    @jax.checkpoint
+    def chunk_step(s, inp):
+        rb, kb, vb, wb = inp                                  # (B,Hn,L,D)
+        c = jnp.cumprod(wb, axis=2)                           # c_t, (B,Hn,L,D)
+        c_prev = jnp.concatenate(
+            [jnp.ones_like(c[:, :, :1]), c[:, :, :-1]], axis=2)  # c_{t-1}
+        r_t = rb * c_prev
+        k_t = kb / jnp.maximum(c, 1e-30)
+        scores = jnp.einsum("bhtd,bhsd->bhts", r_t, k_t) * mask[None, None]
+        intra = jnp.einsum("bhts,bhsd->bhtd", scores, vb)
+        bonus = jnp.einsum("bhtd,bhtd->bht", rb, u[None, :, None, :] * kb)[..., None] * vb
+        inter = jnp.einsum("bhtd,bhde->bhte", r_t, s)
+        out = intra + bonus + inter
+        s_new = c[:, :, -1][..., None] * (s + jnp.einsum("bhsd,bhse->bhde", k_t, vb))
+        return s_new, out
+
+    state, outs = jax.lax.scan(chunk_step, state, (rc, kc, vc, wc))
+    # (n, B, Hn, L, D) -> (B, S, Hn, D)
+    outs = outs.transpose(1, 0, 3, 2, 4).reshape(B, S, Hn, D)
+    return outs, state
+
+
+def rwkv_time_mix(params, x, cfg, *, state=None, shift_last=None):
+    """x: (B,S,d) -> (B,S,d), (state, shift_last)."""
+    B, S, d = x.shape
+    hd = cfg.rwkv_head_dim
+    Hn = d // hd
+
+    xr = _token_shift(x, params["mix_r"].astype(x.dtype), shift_last)
+    xk = _token_shift(x, params["mix_k"].astype(x.dtype), shift_last)
+    xv = _token_shift(x, params["mix_v"].astype(x.dtype), shift_last)
+    xw = _token_shift(x, params["mix_w"].astype(x.dtype), shift_last)
+
+    r = (xr @ params["wr"]).reshape(B, S, Hn, hd).astype(jnp.float32)
+    k = (xk @ params["wk"]).reshape(B, S, Hn, hd).astype(jnp.float32)
+    v = (xv @ params["wv"]).reshape(B, S, Hn, hd).astype(jnp.float32)
+
+    decay = params["decay_base"] + (jnp.tanh(xw @ params["decay_a"]) @ params["decay_b"]).astype(jnp.float32)
+    w = jnp.exp(-jnp.exp(decay)).reshape(B, S, Hn, hd)        # in (0,1)
+
+    if state is None:
+        state = jnp.zeros((B, Hn, hd, hd), jnp.float32)
+    if S == 1:
+        out, state = _wkv_sequential(r, k, v, w, params["bonus_u"], state)
+    else:
+        out, state = _wkv_chunked(r, k, v, w, params["bonus_u"], state, chunk=32)
+
+    out = out.reshape(B, S, d)
+    # group norm over heads (ln_x in reference impl)
+    out = out.reshape(B, S, Hn, hd)
+    mu = out.mean(-1, keepdims=True)
+    var = out.var(-1, keepdims=True)
+    out = (out - mu) * jax.lax.rsqrt(var + 1e-5)
+    out = out.reshape(B, S, d) * params["ln_x_w"]
+    new_shift_last = x[:, -1]
+    return (out.astype(x.dtype) @ params["wo"]), (state, new_shift_last)
+
+
+def init_rwkv_channel_mix(key, cfg, dtype) -> dict:
+    d, f = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 2)
+    return {
+        "mix_k": 0.5 * jnp.ones((d,), jnp.float32),
+        "wk": dense_init(ks[0], (d, f), dtype),
+        "wv": dense_init(ks[1], (f, d), dtype),
+    }
+
+
+def rwkv_channel_mix(params, x, *, shift_last=None):
+    xk = _token_shift(x, params["mix_k"].astype(x.dtype), shift_last)
+    h = jnp.square(jax.nn.relu(xk @ params["wk"]))
+    return h @ params["wv"], x[:, -1]

@@ -1,0 +1,264 @@
+"""Unified decoder stack for every assigned family.
+
+Layers are grouped into *pattern blocks*: the layer-kind pattern of an
+architecture repeats with period P (P=1 for homogeneous dense/MoE/RWKV
+stacks; P=8 for Jamba's 1-attention-per-8 + MoE-every-other interleave).
+Parameters are stacked with a leading (num_layers // P) axis and the stack is
+driven by one `lax.scan` over pattern blocks — compile time is O(P) block
+traces regardless of depth, which is what keeps 40 dry-run combinations
+tractable on 512 SPMD devices.
+
+Each pattern block is rematerialized (`jax.checkpoint`) in training mode.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import layers as L
+from repro.models import mamba as M
+from repro.models import moe as MOE
+from repro.models import rwkv as R
+from repro.utils import flags
+
+
+# --------------------------------------------------------------------- #
+# layer-kind pattern
+# --------------------------------------------------------------------- #
+
+
+def pattern_period(cfg: ArchConfig) -> int:
+    p = 1
+    if cfg.attn_period:
+        p = math.lcm(p, cfg.attn_period)
+    if cfg.moe is not None and cfg.moe_period:
+        p = math.lcm(p, cfg.moe_period)
+    return p
+
+
+def layer_kind(cfg: ArchConfig, j: int) -> Tuple[str, str]:
+    """Kind of the layer at pattern position j: (mixer, mlp)."""
+    if cfg.attention_free:
+        return "rwkv", "rwkv_cm"
+    mixer = "attn"
+    if cfg.attn_period and (j % cfg.attn_period) != cfg.attn_period - 1:
+        mixer = "mamba"
+    mlp = "dense"
+    if cfg.moe is not None and cfg.moe_period and (j % cfg.moe_period) == cfg.moe_period - 1:
+        mlp = "moe"
+    return mixer, mlp
+
+
+# --------------------------------------------------------------------- #
+# per-position init
+# --------------------------------------------------------------------- #
+
+
+def _init_layer(key, cfg: ArchConfig, j: int, dtype) -> Dict:
+    mixer, mlp = layer_kind(cfg, j)
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    p: Dict = {"norm1": jnp.ones((cfg.d_model,), jnp.float32),
+               "norm2": jnp.ones((cfg.d_model,), jnp.float32)}
+    if mixer == "attn":
+        p["attn"] = L.init_attention(k1, cfg, dtype)
+    elif mixer == "mamba":
+        p["mamba"] = M.init_mamba(k1, cfg, dtype)
+    elif mixer == "rwkv":
+        p["rwkv_tm"] = R.init_rwkv_time_mix(k1, cfg, dtype)
+    if mlp == "dense":
+        p["mlp"] = L.init_mlp(k2, cfg, dtype)
+    elif mlp == "moe":
+        p["moe"] = MOE.init_moe(k2, cfg, dtype)
+    elif mlp == "rwkv_cm":
+        p["rwkv_cm"] = R.init_rwkv_channel_mix(k2, cfg, dtype)
+    return p
+
+
+def init_stack(key, cfg: ArchConfig, dtype) -> Dict:
+    """Stacked params: {'pos{j}': pytree with leading (L//P) axis}."""
+    P = pattern_period(cfg)
+    nrep = cfg.num_layers // P
+    assert nrep * P == cfg.num_layers, (cfg.num_layers, P)
+    out = {}
+    for j in range(P):
+        keys = jax.random.split(jax.random.fold_in(key, j), nrep)
+        per_rep = [_init_layer(k, cfg, j, dtype) for k in keys]
+        out[f"pos{j}"] = jax.tree.map(lambda *xs: jnp.stack(xs), *per_rep)
+    return out
+
+
+# --------------------------------------------------------------------- #
+# forward (train / prefill)
+# --------------------------------------------------------------------- #
+
+
+def _apply_layer_fwd(p, x, cfg, j, positions, collect_cache: bool):
+    """Returns (x, aux_loss, cache_entry_or_None)."""
+    mixer, mlp = layer_kind(cfg, j)
+    aux = jnp.zeros((), jnp.float32)
+    cache_entry = None
+    h = L.rms_norm(x, p["norm1"], cfg.norm_eps)
+    if mixer == "attn":
+        o, (kc, vc) = L.attention_fwd(p["attn"], h, cfg, positions)
+        if collect_cache:
+            cache_entry = {"k": kc, "v": vc}
+        x = x + o
+    elif mixer == "mamba":
+        o, (ssm, conv) = M.mamba_fwd(p["mamba"], h, cfg)
+        if collect_cache:
+            cache_entry = {"ssm": ssm, "conv": conv}
+        x = x + o
+    elif mixer == "rwkv":
+        o, (st, sl) = R.rwkv_time_mix(p["rwkv_tm"], h, cfg)
+        if collect_cache:
+            cache_entry = {"wkv": st, "shift_tm": sl}
+        x = x + o
+    h = L.rms_norm(x, p["norm2"], cfg.norm_eps)
+    if mlp == "dense":
+        x = x + L.mlp_fwd(p["mlp"], h, cfg)
+    elif mlp == "moe":
+        o, a = MOE.moe_fwd(p["moe"], h, cfg)
+        x = x + o
+        aux = aux + a
+    elif mlp == "rwkv_cm":
+        o, sl_cm = R.rwkv_channel_mix(p["rwkv_cm"], h)
+        x = x + o
+        if collect_cache and cache_entry is not None:
+            cache_entry["shift_cm"] = sl_cm
+    return x, aux, cache_entry
+
+
+def stack_forward(params: Dict, cfg: ArchConfig, x: jax.Array, positions: jax.Array,
+                  *, remat: bool = True, collect_cache: bool = False):
+    """x: (B,S,d) -> (hidden, aux_loss[, cache])."""
+    P = pattern_period(cfg)
+
+    def block(x, stacked):
+        from repro.sharding.hints import constrain_activations, gather_fsdp
+        stacked = gather_fsdp(stacked)
+        aux = jnp.zeros((), jnp.float32)
+        entries = {}
+        x = constrain_activations(x)
+        for j in range(P):
+            x, a, ce = _apply_layer_fwd(stacked[f"pos{j}"], x, cfg, j, positions, collect_cache)
+            aux = aux + a
+            if ce is not None:
+                entries[f"pos{j}"] = ce
+        return constrain_activations(x), (aux, entries)
+
+    body = jax.checkpoint(block) if remat else block
+    x, (auxs, caches) = jax.lax.scan(lambda c, p: body(c, p), x, params,
+                                     unroll=flags.scan_unroll())
+    if collect_cache:
+        return x, auxs.sum(), caches
+    return x, auxs.sum()
+
+
+# --------------------------------------------------------------------- #
+# decode (one token, stateful caches)
+# --------------------------------------------------------------------- #
+
+
+def cache_max_len(cfg: ArchConfig, max_seq: int) -> int:
+    if cfg.sliding_window is not None:
+        return min(max_seq, cfg.sliding_window)
+    return max_seq
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_seq: int, dtype) -> Dict:
+    P = pattern_period(cfg)
+    nrep = cfg.num_layers // P
+    smax = cache_max_len(cfg, max_seq)
+    d = cfg.d_model
+    out: Dict = {"len": jnp.zeros((), jnp.int32)}
+    for j in range(P):
+        mixer, _ = layer_kind(cfg, j)
+        if mixer == "attn":
+            shp = (nrep, batch, smax, cfg.num_kv_heads, cfg.head_dim)
+            out[f"pos{j}"] = {"k": jnp.zeros(shp, dtype), "v": jnp.zeros(shp, dtype)}
+        elif mixer == "mamba":
+            di = cfg.mamba_expand * d
+            out[f"pos{j}"] = {
+                "ssm": jnp.zeros((nrep, batch, di, cfg.mamba_d_state), jnp.float32),
+                "conv": jnp.zeros((nrep, batch, cfg.mamba_d_conv - 1, di), dtype),
+            }
+        elif mixer == "rwkv":
+            hn = d // cfg.rwkv_head_dim
+            out[f"pos{j}"] = {
+                "wkv": jnp.zeros((nrep, batch, hn, cfg.rwkv_head_dim, cfg.rwkv_head_dim), jnp.float32),
+                "shift_tm": jnp.zeros((nrep, batch, d), dtype),
+                "shift_cm": jnp.zeros((nrep, batch, d), dtype),
+            }
+    return out
+
+
+def _apply_layer_decode(p, x, cfg, j, cache_j, cur_len, smax):
+    mixer, mlp = layer_kind(cfg, j)
+    new_cache = {}
+    h = L.rms_norm(x, p["norm1"], cfg.norm_eps)
+    if mixer == "attn":
+        slot = cur_len % smax if cfg.sliding_window is not None else cur_len
+        B = x.shape[0]
+        H, Hkv, Dh = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+        pos = jnp.full((B, 1), cur_len, dtype=jnp.int32)
+        q = L.apply_rope((h @ p["attn"]["wq"]).reshape(B, 1, H, Dh), pos, cfg.rope_theta)
+        k = L.apply_rope((h @ p["attn"]["wk"]).reshape(B, 1, Hkv, Dh), pos, cfg.rope_theta)
+        v = (h @ p["attn"]["wv"]).reshape(B, 1, Hkv, Dh)
+        ck = jax.lax.dynamic_update_slice(cache_j["k"], k.astype(cache_j["k"].dtype), (0, slot, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cache_j["v"], v.astype(cache_j["v"].dtype), (0, slot, 0, 0))
+        n_valid = jnp.minimum(cur_len + 1, smax)
+        o = L.decode_attention(q, ck, cv, n_valid, window=None)
+        x = x + (o.reshape(B, 1, H * Dh) @ p["attn"]["wo"])
+        new_cache = {"k": ck, "v": cv}
+    elif mixer == "mamba":
+        o, (ssm, conv) = M.mamba_fwd(p["mamba"], h, cfg,
+                                     ssm_state=cache_j["ssm"], conv_state=cache_j["conv"])
+        x = x + o
+        new_cache = {"ssm": ssm, "conv": conv}
+    elif mixer == "rwkv":
+        o, (st, sl) = R.rwkv_time_mix(p["rwkv_tm"], h, cfg,
+                                      state=cache_j["wkv"], shift_last=cache_j["shift_tm"])
+        x = x + o
+        new_cache = {"wkv": st, "shift_tm": sl}
+    h = L.rms_norm(x, p["norm2"], cfg.norm_eps)
+    if mlp == "dense":
+        x = x + L.mlp_fwd(p["mlp"], h, cfg)
+    elif mlp == "moe":
+        o, _ = MOE.moe_fwd(p["moe"], h, cfg)
+        x = x + o
+    elif mlp == "rwkv_cm":
+        o, sl_cm = R.rwkv_channel_mix(p["rwkv_cm"], h, shift_last=cache_j["shift_cm"])
+        x = x + o
+        new_cache["shift_cm"] = sl_cm
+    return x, new_cache
+
+
+def stack_decode(params: Dict, cfg: ArchConfig, x: jax.Array, cache: Dict):
+    """x: (B,1,d). Returns (x, new_cache)."""
+    P = pattern_period(cfg)
+    cur_len = cache["len"]
+    smax = None
+    for j in range(P):
+        if layer_kind(cfg, j)[0] == "attn":
+            smax = cache[f"pos{j}"]["k"].shape[2]
+    layer_caches = {k: v for k, v in cache.items() if k != "len"}
+
+    def block(x, inp):
+        stacked, cj = inp
+        new_cj = {}
+        for j in range(P):
+            key = f"pos{j}"
+            x, nc = _apply_layer_decode(stacked[key], x, cfg, j, cj[key], cur_len, smax)
+            new_cj[key] = nc
+        return x, new_cj
+
+    x, new_caches = jax.lax.scan(block, x, (params, layer_caches),
+                                 unroll=flags.scan_unroll())
+    new_cache = dict(new_caches)
+    new_cache["len"] = cur_len + 1
+    return x, new_cache

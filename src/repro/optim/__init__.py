@@ -1,0 +1,3 @@
+from repro.optim.optimizers import Optimizer, adamw, get, momentum, sgd
+
+__all__ = ["Optimizer", "adamw", "get", "momentum", "sgd"]

@@ -1,0 +1,83 @@
+"""Minimal optimizer library (no optax in this environment).
+
+Each optimizer is an (init, update) pair over arbitrary pytrees:
+    state = init(params)
+    params, state = update(params, grads, state, step)
+AdamW keeps f32 moments regardless of param dtype (the production choice —
+moments are sharded like their parameters by the rule engine).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: Callable
+    update: Callable
+
+
+def sgd(lr: float) -> Optimizer:
+    def init(params):
+        return ()
+
+    def update(params, grads, state, step):
+        del step
+        new = jax.tree.map(lambda p, g: (p - lr * g.astype(jnp.float32)).astype(p.dtype),
+                           params, grads)
+        return new, state
+
+    return Optimizer(init, update)
+
+
+def momentum(lr: float, beta: float = 0.9) -> Optimizer:
+    def init(params):
+        return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+    def update(params, grads, state, step):
+        del step
+        new_m = jax.tree.map(lambda m, g: beta * m + g.astype(jnp.float32), state, grads)
+        new_p = jax.tree.map(lambda p, m: (p - lr * m).astype(p.dtype), params, new_m)
+        return new_p, new_m
+
+    return Optimizer(init, update)
+
+
+def adamw(lr: float, b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.0) -> Optimizer:
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {"m": jax.tree.map(zeros, params), "v": jax.tree.map(zeros, params)}
+
+    def update(params, grads, state, step):
+        t = step.astype(jnp.float32) + 1.0
+        c1 = 1.0 - b1 ** t
+        c2 = 1.0 - b2 ** t
+
+        def upd(p, g, m, v):
+            g = g.astype(jnp.float32)
+            m = b1 * m + (1 - b1) * g
+            v = b2 * v + (1 - b2) * jnp.square(g)
+            step_ = lr * (m / c1) / (jnp.sqrt(v / c2) + eps)
+            p32 = p.astype(jnp.float32)
+            p_new = p32 - step_ - lr * weight_decay * p32
+            return p_new.astype(p.dtype), m, v
+
+        flat_p, tdef = jax.tree.flatten(params)
+        flat_g = tdef.flatten_up_to(grads)
+        flat_m = tdef.flatten_up_to(state["m"])
+        flat_v = tdef.flatten_up_to(state["v"])
+        out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+        new_p = tdef.unflatten([o[0] for o in out])
+        new_m = tdef.unflatten([o[1] for o in out])
+        new_v = tdef.unflatten([o[2] for o in out])
+        return new_p, {"m": new_m, "v": new_v}
+
+    return Optimizer(init, update)
+
+
+def get(name: str, lr: float, **kw) -> Optimizer:
+    return {"sgd": sgd, "momentum": momentum, "adamw": adamw}[name](lr, **kw)

@@ -1,0 +1,8 @@
+from repro.sharding.rules import (batch_shardings, batch_spec, cache_shardings,
+                                  cache_spec, params_shardings, replicated,
+                                  spec_for_param)
+
+__all__ = [
+    "batch_shardings", "batch_spec", "cache_shardings", "cache_spec",
+    "params_shardings", "replicated", "spec_for_param",
+]

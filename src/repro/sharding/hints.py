@@ -1,0 +1,126 @@
+"""Activation sharding hints, safe to call from model code.
+
+Model code is mesh-agnostic; these helpers look up the *current* mesh (the
+`jax.set_mesh` context the launcher established) and no-op when there is
+none — so smoke tests and CPU runs are untouched.
+
+`constrain_activations(x)` pins the residual-stream layout between scanned
+blocks to the Megatron convention: batch over ('pod','data'), d_model
+replicated.  Without the pin, XLA propagates a d-sharded layout out of the
+row-parallel matmul and inserts a full f32 activation all-gather inside
+every layer (measured: 63% of llama3-8b train_4k collective bytes — see
+EXPERIMENTS.md §Perf iteration 1).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+
+def _current_mesh():
+    try:
+        mesh = jax.sharding.get_abstract_mesh()
+    except Exception:
+        return None
+    if mesh is None or not mesh.axis_names:
+        return None
+    return mesh
+
+
+def constrain_param_tree(tree):
+    """Pin a parameter-shaped pytree (grad accumulators, scan carries of
+    model copies) to the rule-engine parameter shardings.
+
+    Scan carries don't inherit the in_shardings of the params they were
+    derived from; without the pin the FSVRG aggregate carry materializes as
+    a fully-replicated f32 param copy (32 GB/chip for llama3-8b —
+    EXPERIMENTS.md §Perf iter 5).
+    """
+    mesh = _current_mesh()
+    if mesh is None or "model" not in mesh.axis_names:
+        return tree
+    from repro.sharding import rules
+
+    def one(kp, leaf):
+        spec = rules.spec_for_param(jax.tree_util.keystr(kp), leaf.shape, mesh)
+        return jax.lax.with_sharding_constraint(leaf, spec)
+
+    return jax.tree_util.tree_map_with_path(one, tree)
+
+
+def gather_fsdp(tree):
+    """FSDP weight-gather for the current pattern block's (sliced) params.
+
+    Inside the layer scan, weights keep their TP ('model') sharding but drop
+    the FSDP ('data') axis — an explicit per-layer all-gather.  Without it
+    XLA keeps contraction dims data-sharded and partial-sums *activations*
+    instead: on dbrx-132b train_4k the expert matmuls all-reduced 12.4 TB of
+    f32 (E,C,f) activations per chip per round (EXPERIMENTS.md §Perf
+    iter 8).  Gathering the block's weights costs layer_params/TP bytes —
+    ~15× less.
+    """
+    mesh = _current_mesh()
+    if mesh is None or "model" not in mesh.axis_names or "data" not in mesh.axis_names:
+        return tree
+    if mesh.shape["data"] <= 1:
+        return tree
+    from repro.sharding import rules
+
+    def drop_data(entry):
+        if entry is None:
+            return None
+        axes = entry if isinstance(entry, tuple) else (entry,)
+        kept = tuple(a for a in axes if a != "data")
+        if not kept:
+            return None
+        return kept if len(kept) > 1 else kept[0]
+
+    def one(kp, leaf):
+        spec = rules.spec_for_param(jax.tree_util.keystr(kp), leaf.shape, mesh)
+        return jax.lax.with_sharding_constraint(
+            leaf, P(*[drop_data(e) for e in spec]))
+
+    return jax.tree_util.tree_map_with_path(one, tree)
+
+
+def constrain_activations(x: jax.Array) -> jax.Array:
+    """(B, S, d) residual stream -> batch over ('pod','data'), rest replicated."""
+    mesh = _current_mesh()
+    if mesh is None or "data" not in mesh.axis_names:
+        return x
+    ax = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    size = math.prod(mesh.shape[a] for a in ax)
+    if x.ndim < 1 or size <= 1 or x.shape[0] % size:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, P(ax, *([None] * (x.ndim - 1))))
+
+
+def constrain_heads(x: jax.Array, head_axis: int = 2,
+                    kv_heads: int | None = None) -> jax.Array:
+    """(B, S, H, Dh) attention activations.
+
+    Heads shard over 'model' only when *both* H and the KV-head count
+    divide the axis (otherwise XLA falls back to sharding the contracted
+    head_dim, turning every attention score block into a partial-sum
+    all-reduce — measured 2.1 TB/chip on internvl2-1b train_4k whose 14
+    heads don't divide 16; EXPERIMENTS.md §Perf iter 6).  Indivisible cases
+    replicate heads and keep attention purely data-parallel.
+    """
+    mesh = _current_mesh()
+    if mesh is None or "data" not in mesh.axis_names:
+        return x
+    ax = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    bsize = math.prod(mesh.shape[a] for a in ax)
+    if x.ndim < 3 or bsize <= 1 or x.shape[0] % bsize:
+        return x
+    entries: list = [ax] + [None] * (x.ndim - 1)
+    if "model" in mesh.axis_names:
+        msize = mesh.shape["model"]
+        h = x.shape[head_axis]
+        kv_ok = kv_heads is None or (kv_heads % msize == 0)
+        if h % msize == 0 and kv_ok:
+            entries[head_axis] = "model"
+    return jax.lax.with_sharding_constraint(x, P(*entries))

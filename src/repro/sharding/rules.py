@@ -1,0 +1,198 @@
+"""PartitionSpec rule engine.
+
+Parameters are matched by pytree path substring and assigned a logical spec;
+every axis assignment is guarded by divisibility (a dim that doesn't divide
+the mesh axis falls back to replication — e.g. seamless's 256,206-row vocab
+is not 16-divisible, so its embedding replicates while llama3's 128,256 rows
+shard).
+
+Scheme (single-pod mesh ('data','model'); multi-pod prepends 'pod'):
+  * TP over 'model': attention heads, MLP hidden, experts (expert-parallel),
+    Mamba/RWKV channel dims, vocab rows of the embedding / vocab cols of the
+    unembedding.
+  * FSDP over 'data': the non-TP matrix dim of every large matrix, so
+    parameter + optimizer memory scales with the full chip count.
+  * 'pod' is pure data parallelism — parameters are replicated across pods;
+    in federated mode the pod axis is the client-group axis.
+
+Layer-stacked parameters carry a leading (num_layers/P) axis which is never
+sharded (it is scanned over).
+"""
+from __future__ import annotations
+
+import re
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+# (path-regex, spec for the *trailing* dims of the param)
+# None entries replicate; 'm' = model axis, 'd' = data (FSDP) axis.
+_RULES: Tuple[Tuple[str, Tuple[Optional[str], ...]], ...] = (
+    # embeddings
+    (r"embed", ("m", None)),            # (V, d): vocab-parallel rows
+    (r"unembed", ("d", "m")),           # (d, V): FSDP d, vocab-parallel cols
+    # attention / cross-attention
+    (r"(attn|xattn).*wq", ("d", "m")),
+    (r"(attn|xattn).*wk", ("d", "m")),
+    (r"(attn|xattn).*wv", ("d", "m")),
+    (r"(attn|xattn).*wo", ("m", "d")),
+    # dense MLP
+    (r"mlp.*w_gate", ("d", "m")),
+    (r"mlp.*w_up", ("d", "m")),
+    (r"mlp.*w_down", ("m", "d")),
+    # MoE: experts over 'model' (expert parallelism), FSDP inside the expert
+    (r"moe.*router", (None, None)),
+    (r"moe.*w_gate", ("m", "d", None)),
+    (r"moe.*w_up", ("m", "d", None)),
+    (r"moe.*w_down", ("m", None, "d")),
+    # Mamba
+    (r"mamba.*in_proj", ("d", "m")),
+    (r"mamba.*conv_w", (None, "m")),
+    (r"mamba.*x_bc", ("m", None)),
+    (r"mamba.*x_dt", ("m", None)),
+    (r"mamba.*dt_bias", ("m",)),
+    (r"mamba.*a_log", ("m", None)),
+    (r"mamba.*d_skip", ("m",)),
+    (r"mamba.*out_proj", ("m", "d")),
+    # RWKV
+    (r"rwkv_tm.*w[rkv]$", ("d", "m")),
+    (r"rwkv_tm.*wo", ("m", "d")),
+    (r"rwkv_tm.*decay_a", ("d", None)),
+    (r"rwkv_tm.*decay_b", (None, "m")),
+    (r"rwkv_cm.*wk", ("d", "m")),
+    (r"rwkv_cm.*wv", ("m", "d")),
+)
+
+
+def _axis_name(tag: Optional[str], mesh: Mesh) -> Optional[str]:
+    if tag is None:
+        return None
+    name = {"m": "model", "d": "data"}[tag]
+    return name if name in mesh.axis_names else None
+
+
+def spec_for_param(path: str, shape: Tuple[int, ...], mesh: Mesh,
+                   *, stacked: bool = True) -> P:
+    """PartitionSpec for one parameter; leading stack axes replicate."""
+    for pattern, tags in _RULES:
+        if re.search(pattern, path):
+            ndim_rule = len(tags)
+            lead = len(shape) - ndim_rule
+            if lead < 0:
+                continue
+            entries = [None] * lead
+            for tag, dim in zip(tags, shape[lead:]):
+                ax = _axis_name(tag, mesh)
+                if ax is not None and dim % mesh.shape[ax] == 0:
+                    entries.append(ax)
+                else:
+                    entries.append(None)
+            return P(*entries)
+    return P()  # norms, scalars, mixes: replicate
+
+
+def params_shardings(params, mesh: Mesh):
+    """NamedSharding pytree for a param pytree (works on ShapeDtypeStructs)."""
+
+    def one(kp, leaf):
+        path = jax.tree_util.keystr(kp)
+        return NamedSharding(mesh, spec_for_param(path, leaf.shape, mesh))
+
+    return jax.tree_util.tree_map_with_path(one, params)
+
+
+# --------------------------------------------------------------------- #
+# activations / batches / caches
+# --------------------------------------------------------------------- #
+
+
+def batch_axes(mesh: Mesh) -> Tuple[str, ...]:
+    """Mesh axes that shard the batch dimension ('pod' joins 'data')."""
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def _divides(dim: int, mesh: Mesh, axes: Tuple[str, ...]) -> bool:
+    size = 1
+    for a in axes:
+        size *= mesh.shape[a]
+    return size > 0 and dim % size == 0
+
+
+def batch_spec(shape: Tuple[int, ...], mesh: Mesh, *, client_axis: bool = False) -> P:
+    """Spec for a batch leaf.
+
+    Default: dim0 = batch over ('pod','data').  client_axis=True marks
+    federated client batches with layout (C, T, B_c, ...): the client axis C
+    is scanned (never sharded), B_c (dim 2) takes the batch sharding.
+    """
+    ax = batch_axes(mesh)
+    if client_axis:
+        entries: list = [None, None]
+        if len(shape) > 2 and _divides(shape[2], mesh, ax):
+            entries.append(ax)
+        elif len(shape) > 2:
+            entries.append(None)
+        entries += [None] * (len(shape) - len(entries))
+        return P(*entries)
+    if shape and _divides(shape[0], mesh, ax):
+        return P(ax, *([None] * (len(shape) - 1)))
+    return P(*([None] * len(shape)))
+
+
+def batch_shardings(batch, mesh: Mesh, *, client_axis: bool = False):
+    return jax.tree.map(
+        lambda leaf: NamedSharding(mesh, batch_spec(leaf.shape, mesh, client_axis=client_axis)),
+        batch)
+
+
+def cache_spec(path: str, shape: Tuple[int, ...], mesh: Mesh) -> P:
+    """KV / recurrent-state cache sharding.
+
+    Attention KV (nrep, B, S, Hkv, Dh): batch over ('pod','data'), sequence
+    over 'model' — flash-decoding-style sequence parallelism.  Sharding S
+    (rather than Hkv or Dh) works for every GQA config (Hkv < 16 for most
+    assigned archs) and turns decode attention into per-shard partial
+    softmax + a small all-reduce, instead of the involuntary full-cache
+    rematerialization XLA emits for contracted-dim (Dh) sharding.
+    When B doesn't divide (long_500k B=1), S additionally takes 'data'.
+    Recurrent states (nrep, B, ...): batch over ('pod','data'), channel dim
+    over 'model' where divisible.
+    """
+    ax = batch_axes(mesh)
+    model = "model" if "model" in mesh.axis_names else None
+    entries: list = [None] * len(shape)
+    if len(shape) == 0:
+        return P()
+    bdim = 1 if len(shape) >= 2 else 0
+    is_kv = len(shape) == 5  # (nrep, B, S, Hkv, Dh)
+    if _divides(shape[bdim], mesh, ax):
+        entries[bdim] = ax
+        if is_kv and model is not None and shape[2] % mesh.shape[model] == 0:
+            entries[2] = model
+    elif is_kv:
+        seq_axes = tuple(a for a in (*ax, model) if a is not None)
+        if _divides(shape[2], mesh, seq_axes):
+            entries[2] = seq_axes            # B=1: all axes shard the sequence
+    if not is_kv and model is not None and len(shape) >= 2:
+        # recurrent state: shard the largest trailing channel dim over model
+        dims = sorted(range(bdim + 1, len(shape)), key=lambda d: -shape[d])
+        for d in dims:
+            if shape[d] % mesh.shape[model] == 0 and shape[d] > 1:
+                entries[d] = model
+                break
+    return P(*entries)
+
+
+def cache_shardings(cache, mesh: Mesh):
+    def one(kp, leaf):
+        path = jax.tree_util.keystr(kp)
+        return NamedSharding(mesh, cache_spec(path, leaf.shape, mesh))
+
+    return jax.tree_util.tree_map_with_path(one, cache)
+
+
+def replicated(mesh: Mesh):
+    return NamedSharding(mesh, P())

@@ -1,0 +1,21 @@
+"""Runtime flags (env-var driven, read at trace time).
+
+REPRO_DRYRUN_UNROLL=1 — unroll the matmul-dominated scans (layer stack,
+client waves, loss chunks) so ``compiled.cost_analysis()`` counts their
+FLOPs/bytes correctly: XLA's HloCostAnalysis visits a while-loop body ONCE,
+so scanned structures under-report by their trip count.  Token-level
+recurrent scans (flash-attention blocks, Mamba/RWKV time steps) stay rolled —
+their FLOPs are <1% of the matmul total for every assigned arch (see
+EXPERIMENTS.md §Roofline methodology).
+
+Only ``repro.launch.dryrun`` sets this; training/serving/tests keep compact
+scanned HLO.
+"""
+from __future__ import annotations
+
+import os
+
+
+def scan_unroll():
+    """Value for lax.scan(unroll=...) on matmul-dominated scans."""
+    return True if os.environ.get("REPRO_DRYRUN_UNROLL") == "1" else 1

@@ -1,0 +1,363 @@
+"""Trip-count-aware structural cost analysis of optimized (SPMD) HLO text.
+
+Why this exists: ``compiled.cost_analysis()`` visits every while-loop body
+ONCE, so anything under a `lax.scan` (layer stacks, client waves, flash
+blocks) under-reports FLOPs, bytes and — via HLO-text parsing — collective
+traffic by its trip count.  XLA's optimized HLO carries
+``backend_config={"known_trip_count":{"n":...}}`` on while ops, which lets
+us do the accounting properly:
+
+  cost(computation) = Σ op costs,  with
+  cost(while)  = trip × (cost(body) + cost(cond))
+  cost(fusion) = operand+output bytes, FLOPs of the fused computation
+  cost(call)   = cost(callee);  cost(conditional) = max(branch costs)
+
+FLOPs: dots = 2·prod(out)·prod(contracted dims); elementwise/reduce ≈ one
+flop per output (or input for reduce) element.  Bytes: operands + outputs of
+top-level compute ops (fusion internals excluded — matches post-fusion
+"bytes accessed" semantics).  Collectives: operand bytes × loop multiplier,
+per collective kind.
+
+All values are per-chip (the HLO is the per-partition SPMD module).
+Validated against cost_analysis() on loop-free graphs in
+tests/test_hlo_cost.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1, "f8e3m4": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "s4": 1, "u4": 1, "s2": 1, "u2": 1, "pred": 1,
+    "c64": 8, "c128": 16, "token": 0, "opaque": 0,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_ELEMENTWISE = {
+    "add", "subtract", "multiply", "divide", "power", "maximum", "minimum",
+    "exponential", "log", "tanh", "negate", "abs", "sign", "rsqrt", "sqrt",
+    "compare", "select", "and", "or", "not", "xor", "convert", "floor",
+    "ceil", "round-nearest-afz", "clamp", "atan2", "expm1", "log1p",
+    "logistic", "cosine", "sine", "remainder", "shift-left",
+    "shift-right-logical", "shift-right-arithmetic", "is-finite",
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([\d,]*)\]")
+
+
+@dataclasses.dataclass
+class Shape:
+    dtype: str
+    dims: Tuple[int, ...]
+    parts: Optional[List["Shape"]] = None      # tuple shapes
+
+    @property
+    def elements(self) -> int:
+        if self.parts is not None:
+            return sum(p.elements for p in self.parts)
+        n = 1
+        for d in self.dims:
+            n *= d
+        return n
+
+    @property
+    def bytes(self) -> int:
+        if self.parts is not None:
+            return sum(p.bytes for p in self.parts)
+        return self.elements * _DTYPE_BYTES.get(self.dtype, 4)
+
+
+def _parse_shape(text: str) -> Shape:
+    text = text.strip()
+    if text.startswith("("):
+        depth, parts, cur = 0, [], []
+        for ch in text[1:-1]:
+            if ch in "([{":
+                depth += 1
+            elif ch in ")]}":
+                depth -= 1
+            if ch == "," and depth == 0:
+                parts.append("".join(cur))
+                cur = []
+            else:
+                cur.append(ch)
+        if cur:
+            parts.append("".join(cur))
+        return Shape("tuple", (), [_parse_shape(p) for p in parts if p.strip()])
+    m = _SHAPE_RE.match(text)
+    if not m:
+        return Shape("opaque", ())
+    dims = tuple(int(d) for d in m.group(2).split(",")) if m.group(2) else ()
+    return Shape(m.group(1), dims)
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    shape: Shape
+    opcode: str
+    operands: List[str]
+    raw: str
+
+
+@dataclasses.dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll: Optional[Dict[str, float]] = None
+    transcendentals: float = 0.0
+
+    def __post_init__(self):
+        if self.coll is None:
+            self.coll = {k: 0.0 for k in _COLLECTIVES}
+
+    def __add__(self, o: "Cost") -> "Cost":
+        return Cost(self.flops + o.flops, self.bytes + o.bytes,
+                    {k: self.coll[k] + o.coll[k] for k in self.coll},
+                    self.transcendentals + o.transcendentals)
+
+    def __mul__(self, f: float) -> "Cost":
+        return Cost(self.flops * f, self.bytes * f,
+                    {k: v * f for k, v in self.coll.items()},
+                    self.transcendentals * f)
+
+    @property
+    def coll_bytes(self) -> float:
+        return sum(self.coll.values())
+
+
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->\s*.+\{\s*$")
+_COMMENT_RE = re.compile(r"/\*.*?\*/")
+
+
+def _parse_line(stripped: str):
+    """'%x = <shape> opcode(...)' -> (name, shape_str, opcode, rest) or None.
+
+    Handles tuple shapes with embedded /*index=N*/ comments (which defeat
+    naive regexes) via balanced-paren scanning.
+    """
+    s = stripped.lstrip()
+    if s.startswith("ROOT "):
+        s = s[5:]
+    if not s.startswith("%"):
+        return None
+    eq = s.find(" = ")
+    if eq < 0:
+        return None
+    name = s[1:eq]
+    rest = s[eq + 3:]
+    if rest.startswith("("):
+        depth = 0
+        end = -1
+        for i, ch in enumerate(rest):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    end = i
+                    break
+        if end < 0:
+            return None
+        shape_s = _COMMENT_RE.sub("", rest[: end + 1])
+        tail = rest[end + 1:].lstrip()
+    else:
+        sp = rest.find(" ")
+        if sp < 0:
+            return None
+        shape_s = rest[:sp]
+        tail = rest[sp + 1:].lstrip()
+    par = tail.find("(")
+    if par <= 0:
+        return None
+    opcode = tail[:par].strip()
+    if not re.fullmatch(r"[\w\-]+", opcode):
+        return None
+    return name, shape_s, opcode, tail[par:]
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_CALL_ATTR_RE = re.compile(
+    r"(?:calls|to_apply|body|condition|branch_computations)=\{?%?([\w.\-]+(?:,\s*%?[\w.\-]+)*)\}?")
+
+
+class HloModule:
+    def __init__(self, text: str):
+        self.computations: Dict[str, List[Op]] = {}
+        self.entry: Optional[str] = None
+        self._parse(text)
+        self._cost_cache: Dict[str, Cost] = {}
+
+    def _parse(self, text: str):
+        cur: Optional[str] = None
+        for line in text.splitlines():
+            stripped = line.rstrip()
+            if not stripped:
+                continue
+            mc = _COMP_RE.match(stripped)
+            if mc and stripped.endswith("{"):
+                cur = mc.group(1)
+                self.computations[cur] = []
+                if stripped.startswith("ENTRY"):
+                    self.entry = cur
+                continue
+            if stripped.strip() == "}":
+                cur = None
+                continue
+            if cur is None:
+                continue
+            parsed = _parse_line(stripped)
+            if parsed is None:
+                continue
+            name, shape_s, opcode, rest = parsed
+            self.computations[cur].append(
+                Op(name=name, shape=_parse_shape(shape_s), opcode=opcode,
+                   operands=[], raw=stripped))
+
+    # ------------------------------------------------------------- #
+    def _symbols(self, comp: str) -> Dict[str, Shape]:
+        out = {}
+        for op in self.computations[comp]:
+            out[op.name] = op.shape
+        return out
+
+    def _dot_flops(self, op: Op, syms: Dict[str, Shape]) -> float:
+        # operands: first two %refs in the args portion of the line
+        args = op.raw.split("(", 1)[1]
+        refs = _OPERAND_RE.findall(args)
+        contract = 1
+        mcd = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", op.raw)
+        if mcd and refs:
+            lhs = syms.get(refs[0])
+            if lhs is not None and lhs.dims:
+                for d in mcd.group(1).split(","):
+                    if d:
+                        di = int(d)
+                        if di < len(lhs.dims):
+                            contract *= lhs.dims[di]
+        return 2.0 * op.shape.elements * contract
+
+    def _op_cost(self, op: Op, comp: str, syms: Dict[str, Shape],
+                 *, top_level: bool) -> Cost:
+        oc = op.opcode
+        c = Cost()
+        if oc == "while":
+            trip = 1
+            mt = _TRIP_RE.search(op.raw)
+            if mt:
+                trip = int(mt.group(1))
+            body = re.search(r"body=%?([\w.\-]+)", op.raw)
+            cond = re.search(r"condition=%?([\w.\-]+)", op.raw)
+            sub = Cost()
+            if body:
+                sub = sub + self.computation_cost(body.group(1))
+            if cond:
+                sub = sub + self.computation_cost(cond.group(1))
+            return sub * trip
+        if oc in ("call", "async-start"):
+            m = re.search(r"to_apply=%?([\w.\-]+)", op.raw)
+            if m:
+                return self.computation_cost(m.group(1))
+            return c
+        if oc == "conditional":
+            m = re.search(r"branch_computations=\{([^}]*)\}", op.raw)
+            if m:
+                branches = [b.strip().lstrip("%") for b in m.group(1).split(",")]
+                costs = [self.computation_cost(b) for b in branches if b in self.computations]
+                if costs:
+                    best = max(costs, key=lambda x: x.flops + x.bytes)
+                    return best
+            return c
+        if oc == "fusion":
+            m = re.search(r"calls=%?([\w.\-]+)", op.raw)
+            inner = Cost()
+            if m and m.group(1) in self.computations:
+                inner = self.computation_cost(m.group(1), fused=True)
+            c.flops = inner.flops
+            c.transcendentals = inner.transcendentals
+            c.coll = dict(inner.coll)
+            if top_level:
+                c.bytes = self._io_bytes(op, syms)
+            return c
+        if oc in _COLLECTIVES:
+            b = op.shape.bytes  # result size ≈ shard traffic proxy
+            c.coll[oc] = float(b)
+            c.bytes = self._io_bytes(op, syms) if top_level else 0.0
+            return c
+        if oc == "dot":
+            c.flops = self._dot_flops(op, syms)
+            if top_level:
+                c.bytes = self._io_bytes(op, syms)
+            return c
+        if oc == "convolution":
+            # rough: 2 * out_elements * (kernel spatial * in_features)
+            c.flops = 2.0 * op.shape.elements * 128.0
+            if top_level:
+                c.bytes = self._io_bytes(op, syms)
+            return c
+        if oc == "reduce" or oc == "reduce-window":
+            refs = _OPERAND_RE.findall(op.raw.split("(", 1)[1])
+            in_el = syms.get(refs[0], op.shape).elements if refs else op.shape.elements
+            c.flops = float(in_el)
+            if top_level:
+                c.bytes = self._io_bytes(op, syms)
+            return c
+        if oc in _ELEMENTWISE or oc in ("scatter", "gather", "iota", "broadcast",
+                                        "transpose", "reshape", "concatenate",
+                                        "slice", "dynamic-slice",
+                                        "dynamic-update-slice", "pad", "copy",
+                                        "reverse", "sort", "exponential-minus-one"):
+            if oc in _ELEMENTWISE:
+                c.flops = float(op.shape.elements)
+                if oc in ("exponential", "log", "tanh", "logistic", "power",
+                          "cosine", "sine", "rsqrt", "sqrt", "expm1", "log1p"):
+                    c.transcendentals = float(op.shape.elements)
+            if top_level and oc not in ("reshape", "bitcast"):
+                c.bytes = self._io_bytes(op, syms)
+            return c
+        return c
+
+    def _io_bytes(self, op: Op, syms: Dict[str, Shape]) -> float:
+        args = op.raw.split("(", 1)[1]
+        # cut metadata/backed_config tails to avoid matching comp names
+        args = args.split("metadata=")[0].split("backend_config=")[0]
+        total = float(op.shape.bytes)
+        for ref in _OPERAND_RE.findall(args):
+            s = syms.get(ref)
+            if s is not None:
+                total += s.bytes
+        return total
+
+    def computation_cost(self, comp: str, fused: bool = False) -> Cost:
+        key = f"{comp}|{fused}"
+        if key in self._cost_cache:
+            return self._cost_cache[key]
+        if comp not in self.computations:
+            return Cost()
+        syms = self._symbols(comp)
+        total = Cost()
+        for op in self.computations[comp]:
+            total = total + self._op_cost(op, comp, syms, top_level=not fused)
+        self._cost_cache[key] = total
+        return total
+
+    def entry_cost(self) -> Cost:
+        if self.entry is None:
+            # fall back: the computation with the greatest cost
+            best = Cost()
+            for comp in self.computations:
+                c = self.computation_cost(comp)
+                if c.flops + c.bytes > best.flops + best.bytes:
+                    best = c
+            return best
+        return self.computation_cost(self.entry)
+
+
+def analyze_text(hlo_text: str) -> Cost:
+    return HloModule(hlo_text).entry_cost()

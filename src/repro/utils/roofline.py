@@ -1,0 +1,170 @@
+"""Roofline analysis from a compiled dry-run artifact (no hardware needed).
+
+Three terms per (arch × shape × mesh), all in seconds:
+
+  compute    = HLO_FLOPs          / PEAK_FLOPS
+  memory     = HLO_bytes          / HBM_BW
+  collective = Σ collective-bytes / LINK_BW
+
+``compiled.cost_analysis()`` on an SPMD executable reports *per-partition*
+(per-chip) FLOPs and bytes, so no further division by chip count is applied
+(this matches the formula compute = HLO_FLOPs_total / (chips × peak) since
+HLO_FLOPs_total = chips × per-chip).  Collective bytes are NOT in
+cost_analysis: we parse the optimized HLO text and sum operand sizes of
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute
+ops (per-chip shapes, so the sum is per-chip traffic).
+
+Hardware constants: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Optional
+
+PEAK_FLOPS = 197e12          # bf16 per chip
+HBM_BW = 819e9               # bytes/s per chip
+LINK_BW = 50e9               # bytes/s per ICI link
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# e.g.  %ag = bf16[4,1024,128]{2,1,0} all-gather(...)
+_OP_RE = re.compile(
+    r"=\s*(?:\()?([a-z0-9]+)\[([\d,]*)\][^=]*?\s(" + "|".join(_COLLECTIVES) + r")\(",
+)
+# tuple-result collectives:  = (f32[...], f32[...]) all-reduce(
+_TUPLE_RE = re.compile(
+    r"=\s*\(((?:[a-z0-9]+\[[\d,]*\][^,()]*,?\s*)+)\)\s*(" + "|".join(_COLLECTIVES) + r")\(")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([\d,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    b = _DTYPE_BYTES.get(dtype)
+    if b is None:
+        return 0
+    total = b
+    if dims.strip():
+        for d in dims.split(","):
+            total *= int(d)
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Per-collective-kind byte totals from (S)HLO text."""
+    out = {k: 0 for k in _COLLECTIVES}
+    for m in _OP_RE.finditer(hlo_text):
+        dtype, dims, kind = m.group(1), m.group(2), m.group(3)
+        out[kind] += _shape_bytes(dtype, dims)
+    for m in _TUPLE_RE.finditer(hlo_text):
+        shapes, kind = m.group(1), m.group(2)
+        for sm in _SHAPE_RE.finditer(shapes):
+            out[kind] += _shape_bytes(sm.group(1), sm.group(2))
+    return out
+
+
+@dataclasses.dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    hlo_flops: float
+    hlo_bytes: float
+    coll_bytes: float
+    coll_breakdown: Dict[str, int]
+    model_flops: float           # 6·N·D (dense) or 6·N_active·D
+    bytes_per_chip: Optional[float] = None   # from memory_analysis
+
+    @property
+    def t_compute(self) -> float:
+        return self.hlo_flops / PEAK_FLOPS      # hlo_flops is per-chip
+
+    @property
+    def t_memory(self) -> float:
+        return self.hlo_bytes / HBM_BW          # hlo_bytes is per-chip
+
+    @property
+    def t_collective(self) -> float:
+        # coll_bytes parsed from SPMD HLO is already per-chip traffic
+        return self.coll_bytes / LINK_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        """MODEL_FLOPS / (chips × per-chip HLO_FLOPs)."""
+        total = self.chips * self.hlo_flops
+        return self.model_flops / total if total else 0.0
+
+    def row(self) -> str:
+        return (f"{self.arch:22s} {self.shape:12s} {self.mesh:9s} "
+                f"comp={self.t_compute*1e3:9.2f}ms mem={self.t_memory*1e3:9.2f}ms "
+                f"coll={self.t_collective*1e3:9.2f}ms -> {self.bottleneck:10s} "
+                f"useful={self.useful_flops_ratio:6.3f}")
+
+
+# effective traffic multiplier per collective kind (ring algorithms):
+# all-reduce moves ~2× its payload; gather/scatter/permute ~1×.
+_COLL_FACTOR = {"all-reduce": 2.0, "all-gather": 1.0, "reduce-scatter": 1.0,
+                "all-to-all": 1.0, "collective-permute": 1.0}
+
+
+def analyze(arch, shape, mesh_name, chips, compiled, lowered_text,
+            model_flops) -> Roofline:
+    """Structural, trip-count-aware cost analysis (see utils/hlo_cost.py).
+
+    ``compiled.cost_analysis()`` counts while bodies once, so every scanned
+    structure (layer stacks, client waves) under-reports by its trip count;
+    the structural analyzer multiplies loop bodies by
+    backend_config.known_trip_count.  cost_analysis values are kept in the
+    JSON dump as a cross-check.
+    """
+    from repro.utils import hlo_cost
+
+    cost = hlo_cost.analyze_text(lowered_text)
+    coll = {k: v * _COLL_FACTOR[k] for k, v in cost.coll.items()}
+    mem = None
+    try:
+        ma = compiled.memory_analysis()
+        mem = float(getattr(ma, "temp_size_in_bytes", 0)
+                    + getattr(ma, "argument_size_in_bytes", 0)
+                    + getattr(ma, "output_size_in_bytes", 0))
+    except Exception:
+        pass
+    return Roofline(arch=arch, shape=shape, mesh=mesh_name, chips=chips,
+                    hlo_flops=cost.flops, hlo_bytes=cost.bytes,
+                    coll_bytes=float(sum(coll.values())), coll_breakdown=coll,
+                    model_flops=model_flops, bytes_per_chip=mem)
+
+
+def model_flops_for(cfg, shape, *, federated_waves: int = 4,
+                    local_steps: int = 1) -> float:
+    """MODEL_FLOPS = 6·N·D with D = tokens processed by the step.
+
+    For the FSVRG round the step runs (1 full-grad + 2 per local step)
+    gradient passes over the global batch; a gradient pass ≈ 3× forward, and
+    6·N·D already counts fwd+bwd, so the round's useful FLOPs are
+    (1 + 2·local_steps) × 6·N·D_batch... conservatively we report the
+    single-pass 6·N·D and let `useful_flops_ratio` expose the multiplier.
+    """
+    n_active = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        passes = 1 + 2 * local_steps     # full grad + (new,old) grads per step
+        return 6.0 * n_active * tokens * passes
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens
+    # decode: one token per sequence
+    return 2.0 * n_active * shape.global_batch

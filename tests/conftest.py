@@ -1,0 +1,37 @@
+"""Shared fixtures.  NOTE: no XLA_FLAGS here — tests run on the single real
+CPU device; only repro.launch.dryrun forces 512 placeholder devices.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def tiny_dataset():
+    from repro.configs import get_logreg_config
+    from repro.data.synthetic import generate
+
+    return generate(get_logreg_config().scaled(0.001), seed=3)
+
+
+@pytest.fixture(scope="session")
+def tiny_problem(tiny_dataset):
+    from repro.core import build_problem
+
+    return build_problem(tiny_dataset)
+
+
+@pytest.fixture(scope="session")
+def small_dataset():
+    from repro.configs import get_logreg_config
+    from repro.data.synthetic import generate
+
+    return generate(get_logreg_config().scaled(0.002), seed=0)
+
+
+@pytest.fixture(scope="session")
+def small_problem(small_dataset):
+    from repro.core import build_problem
+
+    return build_problem(small_dataset)

@@ -1,0 +1,100 @@
+"""The paper's two equivalence theorems, tested to float tolerance.
+
+  * Proposition 1 (§3.5): DANE(η=1, µ=0) with one SVRG epoch as the local
+    solver generates the same iterates as naive Federated SVRG (Alg. 3).
+  * Theorem 5 (App. A): for ridge regression the Primal Method (Alg. 5) and
+    the Dual Method (Alg. 6) are equivalent under w = (1/λn)Xα.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+
+@pytest.fixture(autouse=True)
+def _x64():
+    """f64 for machine-precision equivalence checks — scoped to this module
+    so the f32 model tests elsewhere are unaffected."""
+    jax.config.update("jax_enable_x64", True)
+    yield
+    jax.config.update("jax_enable_x64", False)
+
+
+from repro.core import build_problem, naive_fsvrg_round
+from repro.core.cocoa import (dual_method_round, dual_to_primal,
+                              primal_method_init, primal_method_round)
+from repro.core.dane import dane_round_ridge, dane_svrg_round, ridge_grad
+
+
+@pytest.mark.parametrize("stepsize,m", [(0.05, 10), (0.2, 25)])
+def test_proposition_1_dane_svrg_equals_naive_fsvrg(tiny_problem, stepsize, m):
+    prob = tiny_problem
+    w = jax.random.normal(jax.random.PRNGKey(7), (prob.d,)) * 0.2
+    key = jax.random.PRNGKey(11)
+    w_alg3 = naive_fsvrg_round(prob, w, key, stepsize=stepsize, m=m)
+    w_dane = dane_svrg_round(prob, w, key, stepsize=stepsize, m=m)
+    np.testing.assert_allclose(np.asarray(w_alg3), np.asarray(w_dane),
+                               rtol=1e-10, atol=1e-12)
+
+
+@pytest.mark.parametrize("sigma", [1.0, 2.0, 4.0])
+def test_theorem_5_primal_dual_equivalence(sigma):
+    rng = np.random.default_rng(0)
+    K, m, d, lam = 4, 12, 8, 0.1
+    Xs = [jnp.asarray(rng.standard_normal((d, m))) for _ in range(K)]
+    ys = [jnp.asarray(rng.standard_normal(m)) for _ in range(K)]
+    alphas0 = [jnp.asarray(rng.standard_normal(m)) for _ in range(K)]
+
+    w, gs, eta, mu = primal_method_init(Xs, alphas0, lam, sigma)
+    alphas = list(alphas0)
+    for _ in range(6):
+        alphas = dual_method_round(Xs, ys, alphas, lam, sigma)
+        wd = dual_to_primal(Xs, alphas, lam)
+        w, gs = primal_method_round(Xs, ys, w, gs, lam, eta, mu)
+        np.testing.assert_allclose(np.asarray(w), np.asarray(wd),
+                                   rtol=1e-9, atol=1e-11)
+
+
+def test_dual_method_converges_to_ridge_optimum():
+    rng = np.random.default_rng(1)
+    K, m, d, lam = 3, 10, 6, 0.2
+    Xs = [jnp.asarray(rng.standard_normal((d, m))) for _ in range(K)]
+    ys = [jnp.asarray(rng.standard_normal(m)) for _ in range(K)]
+    n = K * m
+    X = jnp.concatenate(Xs, axis=1)
+    y = jnp.concatenate(ys)
+    # closed-form ridge optimum of (1/2n)||X^T w - y||^2 + lam/2 ||w||^2
+    w_star = jnp.linalg.solve(X @ X.T / n + lam * jnp.eye(d), X @ y / n)
+
+    alphas = [jnp.zeros(m, jnp.float64) for _ in range(K)]
+    for _ in range(200):
+        alphas = dual_method_round(Xs, ys, alphas, lam, sigma=float(K))
+    w = dual_to_primal(Xs, alphas, lam)
+    np.testing.assert_allclose(np.asarray(w), np.asarray(w_star), rtol=1e-5, atol=1e-7)
+
+
+def test_dane_exact_solves_identical_data_in_one_round():
+    """Property (D) for DANE (§3.4): identical local datasets, η=1, µ=0 —
+    the local subproblem becomes the global one, solved exactly in 1 round."""
+    rng = np.random.default_rng(2)
+    d, m, lam = 6, 20, 0.1
+    X = jnp.asarray(rng.standard_normal((d, m)))
+    y = jnp.asarray(rng.standard_normal(m))
+    Xs, ys = [X] * 4, [y] * 4
+    w0 = jnp.asarray(rng.standard_normal(d))
+    w1 = dane_round_ridge(Xs, ys, w0, lam, eta=1.0, mu=0.0)
+    gnorm = float(jnp.linalg.norm(ridge_grad(X, y, w1, lam)))
+    assert gnorm < 1e-8, gnorm
+
+
+def test_dane_property_A_fixed_point():
+    rng = np.random.default_rng(3)
+    d, m, lam = 5, 16, 0.1
+    Xs = [jnp.asarray(rng.standard_normal((d, m))) for _ in range(3)]
+    ys = [jnp.asarray(rng.standard_normal(m)) for _ in range(3)]
+    n = 3 * m
+    X = jnp.concatenate(Xs, axis=1)
+    y = jnp.concatenate(ys)
+    w_star = jnp.linalg.solve(X @ X.T / n + lam * jnp.eye(d), X @ y / n)
+    w1 = dane_round_ridge(Xs, ys, w_star, lam, eta=1.0, mu=0.5)
+    np.testing.assert_allclose(np.asarray(w1), np.asarray(w_star), rtol=1e-8)

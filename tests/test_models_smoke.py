@@ -1,0 +1,121 @@
+"""Per-architecture smoke tests: reduced variant (2 layers, d_model<=512,
+<=4 experts), one forward/train step on CPU, assert output shapes + no NaNs.
+Also checks prefill↔incremental-decode consistency per family.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config
+from repro.configs.base import InputShape
+from repro.models import build_model, make_batch
+
+TRAIN_SHAPE = InputShape("smoke-train", 64, 2, "train")
+PREFILL_SHAPE = InputShape("smoke-prefill", 32, 2, "prefill")
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_reduced_train_step(arch):
+    cfg = get_config(arch).reduced()
+    assert cfg.num_layers <= 8 and cfg.d_model <= 512
+    if cfg.moe is not None:
+        assert cfg.moe.num_experts <= 4
+    model = build_model(cfg, jnp.float32)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = make_batch(cfg, TRAIN_SHAPE, dtype=jnp.float32)
+
+    (loss, metrics), grads = jax.value_and_grad(model.loss, has_aux=True)(params, batch)
+    assert loss.shape == ()
+    assert bool(jnp.isfinite(loss)), (arch, loss)
+    for leaf in jax.tree.leaves(grads):
+        assert bool(jnp.isfinite(leaf).all()), arch
+
+    # one SGD step must decrease the (full-batch) loss at lr -> small
+    new_params = jax.tree.map(lambda p, g: p - 0.05 * g.astype(p.dtype), params, grads)
+    loss2 = model.loss(new_params, batch)[0]
+    assert float(loss2) < float(loss), (arch, float(loss), float(loss2))
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_reduced_prefill_decode_consistency(arch):
+    """Logits from prefill(tokens) == logits after feeding tokens one at a
+    time through decode_step from an empty cache."""
+    cfg = get_config(arch).reduced()
+    model = build_model(cfg, jnp.float32)
+    params = model.init(jax.random.PRNGKey(1))
+    batch = make_batch(cfg, PREFILL_SHAPE, jax.random.PRNGKey(2), dtype=jnp.float32)
+
+    logits_pre, cache_pre = jax.jit(model.prefill)(params, batch)
+    assert bool(jnp.isfinite(logits_pre).all()), arch
+    assert logits_pre.shape == (PREFILL_SHAPE.global_batch, cfg.vocab_size)
+
+    if cfg.family == "encdec_audio":
+        # incremental decode continues from the prefill cache
+        tok = jnp.argmax(logits_pre, -1)[:, None]
+        logits_next, _ = jax.jit(model.decode_step)(params, tok, cache_pre)
+        assert bool(jnp.isfinite(logits_next).all())
+        return
+
+    if cfg.family == "vlm":
+        # scratch-decode path doesn't carry the image prefix; just check
+        # continuation from the prefill cache
+        tok = jnp.argmax(logits_pre, -1)[:, None]
+        logits_next, _ = jax.jit(model.decode_step)(params, tok, cache_pre)
+        assert bool(jnp.isfinite(logits_next).all())
+        return
+
+    toks = batch["tokens"]
+    B, S = toks.shape
+    cache = model.init_cache(B, S + 4)
+    step = jax.jit(model.decode_step)
+    logits = None
+    for t in range(S):
+        logits, cache = step(params, toks[:, t : t + 1], cache)
+    np.testing.assert_allclose(np.asarray(logits), np.asarray(logits_pre),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_sliding_window_ring_cache_matches_full_history():
+    """SWA (h2o-danube family): decode with the window ring-buffer cache
+    must match full attention restricted to the window."""
+    cfg = get_config("h2o-danube-1.8b").reduced()
+    assert cfg.sliding_window is not None
+    model = build_model(cfg, jnp.float32)
+    params = model.init(jax.random.PRNGKey(3))
+    W = cfg.sliding_window
+    S = W * 2  # force wrap-around
+    toks = jax.random.randint(jax.random.PRNGKey(4), (2, S), 0, cfg.vocab_size)
+
+    # reference: prefill on the full sequence (flash attention applies the
+    # window mask directly)
+    batch = {"tokens": toks, "labels": toks, "mask": jnp.ones_like(toks, jnp.float32)}
+    logits_ref, _ = jax.jit(model.prefill)(params, batch)
+
+    cache = model.init_cache(2, S)
+    assert cache["pos0"]["k"].shape[2] == W  # ring buffer, not full length
+    step = jax.jit(model.decode_step)
+    logits = None
+    for t in range(S):
+        logits, cache = step(params, toks[:, t : t + 1], cache)
+    np.testing.assert_allclose(np.asarray(logits), np.asarray(logits_ref),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_rwkv_decode_state_is_o1():
+    cfg = get_config("rwkv6-3b").reduced()
+    model = build_model(cfg, jnp.float32)
+    cache = model.init_cache(2, 1_000_000)
+    # no leaf scales with the sequence length
+    for leaf in jax.tree.leaves(cache):
+        assert leaf.size < 4_000_000, leaf.shape
+
+
+def test_jamba_hybrid_structure():
+    from repro.models import transformer as T
+    cfg = get_config("jamba-v0.1-52b")
+    P = T.pattern_period(cfg)
+    assert P == 8
+    kinds = [T.layer_kind(cfg, j) for j in range(P)]
+    assert sum(1 for m, _ in kinds if m == "attn") == 1      # 1:7 interleave
+    assert sum(1 for _, m in kinds if m == "moe") == 4       # every other layer

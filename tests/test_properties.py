@@ -1,0 +1,217 @@
+"""The paper's §3.1 desirable algorithmic properties (A)–(D), plus
+hypothesis property tests of the system's invariants (scaling statistics,
+data pipeline, aggregation algebra).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import FSVRG, FSVRGConfig, build_problem
+from repro.core import scaling
+from repro.core.problem import LogRegProblem
+
+
+def _dense_problem_from_clients(client_rows, d, lam=0.01, seed=0):
+    """Build a FederatedLogReg from explicit per-client (idx,val,y) rows."""
+    import dataclasses
+    from repro.data.synthetic import FederatedDataset
+
+    idx = np.concatenate([c[0] for c in client_rows])
+    val = np.concatenate([c[1] for c in client_rows])
+    y = np.concatenate([c[2] for c in client_rows])
+    sizes = np.array([len(c[2]) for c in client_rows], np.int32)
+    client_of = np.repeat(np.arange(len(client_rows)), sizes)
+    ds = FederatedDataset(
+        idx=idx.astype(np.int32), val=val.astype(np.float32),
+        y=y.astype(np.float32), client_of=client_of.astype(np.int32),
+        client_sizes=sizes, num_features=d,
+        test_idx=idx[:1], test_val=val[:1], test_y=y[:1],
+        test_client_of=client_of[:1])
+    return build_problem(ds, lam=lam)
+
+
+def _random_clients(rng, K, nk, d, nnz, feature_pool=None):
+    out = []
+    for _ in range(K):
+        pool = feature_pool if feature_pool is not None else np.arange(d)
+        idx = rng.choice(pool, size=(nk, nnz))
+        val = np.ones((nk, nnz), np.float32)
+        w = rng.standard_normal(d)
+        marg = val * w[idx]
+        y = np.where(rng.random(nk) < 1 / (1 + np.exp(-marg.sum(1))), 1.0, -1.0)
+        out.append((idx, val, y))
+    return out
+
+
+# ------------------------------------------------------------------ #
+# Property (A): initialized at the optimum, the algorithm stays there.
+# ------------------------------------------------------------------ #
+
+
+def test_property_A_fixed_point_at_optimum(small_problem):
+    prob = small_problem
+    # find near-optimum by many GD steps
+    w = jnp.zeros(prob.d)
+    g = jax.jit(prob.flat.grad)
+    for _ in range(4000):
+        w = w - 2.0 * g(w)
+    gn = float(jnp.linalg.norm(g(w)))
+    assert gn < 1e-4, gn
+
+    solver = FSVRG(prob, FSVRGConfig(stepsize=1.0))
+    w2 = solver.round(w, jax.random.PRNGKey(0))
+    # movement is bounded by the residual gradient scale: each local step
+    # moves ~h_k*|∇f|, amplified at most K/omega by the A-scaling
+    drift = float(jnp.linalg.norm(w2 - w))
+    K = prob.num_clients
+    assert drift < 5 * K * gn + 1e-6, (drift, gn)
+
+
+# ------------------------------------------------------------------ #
+# Property (B): all data on one node -> O(1) rounds (one SVRG pass).
+# ------------------------------------------------------------------ #
+
+
+def test_property_B_single_node_converges_fast():
+    rng = np.random.default_rng(0)
+    clients = _random_clients(rng, K=1, nk=256, d=16, nnz=8)
+    prob = _dense_problem_from_clients(clients, d=16, lam=0.05)
+    f0 = float(prob.flat.loss(jnp.zeros(prob.d)))
+    # optimum
+    w_star = jnp.zeros(prob.d)
+    for _ in range(2000):
+        w_star = w_star - 0.5 * prob.flat.grad(w_star)
+    f_star = float(prob.flat.loss(w_star))
+
+    # best stepsize retrospectively (the paper's protocol)
+    f1 = min(
+        float(prob.flat.loss(FSVRG(prob, FSVRGConfig(stepsize=h)).round(
+            jnp.zeros(prob.d), jax.random.PRNGKey(1))))
+        for h in (1.0, 3.0, 10.0))
+    # one round closes most of the gap to optimal
+    assert (f0 - f1) > 0.8 * (f0 - f_star), (f0, f1, f_star)
+
+
+# ------------------------------------------------------------------ #
+# Property (C): feature-disjoint clients -> ~1 round (A-scaling at work).
+# ------------------------------------------------------------------ #
+
+
+def test_property_C_decomposable_problem():
+    rng = np.random.default_rng(2)
+    K, d_each, nnz = 4, 8, 4
+    d = K * d_each
+    clients = []
+    for k in range(K):
+        pool = np.arange(k * d_each, (k + 1) * d_each)
+        clients += _random_clients(rng, 1, 128, d, nnz, feature_pool=pool)
+    prob = _dense_problem_from_clients(clients, d=d, lam=0.05)
+
+    w_star = jnp.zeros(prob.d)
+    for _ in range(2000):
+        w_star = w_star - 0.5 * prob.flat.grad(w_star)
+    f_star = float(prob.flat.loss(w_star))
+    f0 = float(prob.flat.loss(jnp.zeros(prob.d)))
+
+    def gap(h, **kw):
+        return float(prob.flat.loss(FSVRG(prob, FSVRGConfig(stepsize=h, **kw)).round(
+            jnp.zeros(prob.d), jax.random.PRNGKey(0)))) - f_star
+
+    # A = K/omega recovers most of the gap in one round...
+    gap_scaled = min(gap(h) for h in (1.0, 3.0))
+    assert gap_scaled < 0.35 * (f0 - f_star), (gap_scaled, f0 - f_star)
+    # ...and beats plain averaging at the SAME stepsize.  (With fully
+    # disjoint features A = K·I, so an unconstrained stepsize sweep could
+    # absorb A into h — the per-h comparison is the meaningful one.)
+    for h in (1.0, 3.0):
+        assert gap(h) < gap(h, use_A=False) + 1e-9, h
+
+
+# ------------------------------------------------------------------ #
+# Property (D): identical client datasets -> one round ~ one SVRG pass.
+# ------------------------------------------------------------------ #
+
+
+def test_property_D_identical_clients():
+    rng = np.random.default_rng(3)
+    base = _random_clients(rng, 1, 128, 16, 8)[0]
+    clients = [base] * 4
+    prob = _dense_problem_from_clients(clients, d=16, lam=0.05)
+
+    w_star = jnp.zeros(prob.d)
+    for _ in range(2000):
+        w_star = w_star - 0.5 * prob.flat.grad(w_star)
+    f_star = float(prob.flat.loss(w_star))
+    f0 = float(prob.flat.loss(jnp.zeros(prob.d)))
+
+    f1 = min(
+        float(prob.flat.loss(FSVRG(prob, FSVRGConfig(stepsize=h)).round(
+            jnp.zeros(prob.d), jax.random.PRNGKey(0))))
+        for h in (1.0, 3.0, 10.0))
+    assert (f0 - f1) > 0.8 * (f0 - f_star), (f0, f1, f_star)
+
+
+# ------------------------------------------------------------------ #
+# hypothesis: invariants of the scaling statistics (§3.6.1)
+# ------------------------------------------------------------------ #
+
+
+@settings(deadline=None, max_examples=25)
+@given(st.integers(2, 6), st.integers(4, 32), st.integers(8, 24), st.integers(2, 6),
+       st.integers(0, 10_000))
+def test_scaling_stats_invariants(K, nk, d, nnz, seed):
+    rng = np.random.default_rng(seed)
+    clients = _random_clients(rng, K, nk, d, min(nnz, d))
+    prob = _dense_problem_from_clients(clients, d=d)
+
+    om = np.asarray(scaling.omega(prob))
+    assert om.shape == (d,)
+    assert (om >= 0).all() and (om <= K).all()
+
+    a = np.asarray(scaling.aggregation_diag(prob))
+    # a^j = K/omega^j in [1, K] on covered coords, exactly 1 elsewhere
+    covered = om > 0
+    assert np.allclose(a[covered], K / om[covered])
+    assert (a[covered] >= 1.0 - 1e-6).all() and (a[covered] <= K + 1e-6).all()
+    assert np.allclose(a[~covered], 1.0)
+
+    phi = np.asarray(scaling.global_feature_counts(prob.flat)) / prob.flat.n
+    assert phi.min() >= 0 and phi.max() <= 1.0 + 1e-6
+
+    b = prob.buckets[0]
+    s0 = np.asarray(scaling.s_k_diag(jnp.asarray(phi), b.idx[0], b.val[0], b.n_k[0]))
+    assert (s0 > 0).all()
+    # features the client never sees scale by exactly 1
+    seen = np.zeros(d, bool)
+    seen[np.asarray(b.idx[0]).reshape(-1)[np.asarray(b.val[0]).reshape(-1) != 0]] = True
+    assert np.allclose(s0[~seen], 1.0)
+
+
+@settings(deadline=None, max_examples=20)
+@given(st.integers(2, 5), st.integers(0, 10_000))
+def test_client_weights_sum_to_one(K, seed):
+    rng = np.random.default_rng(seed)
+    clients = _random_clients(rng, K, int(rng.integers(4, 40)), 16, 4)
+    prob = _dense_problem_from_clients(clients, d=16)
+    assert abs(float(prob.client_weights.sum()) - 1.0) < 1e-5
+
+
+# ------------------------------------------------------------------ #
+# hypothesis: flat loss/grad consistency (autodiff oracle)
+# ------------------------------------------------------------------ #
+
+
+@settings(deadline=None, max_examples=15)
+@given(st.integers(4, 64), st.integers(4, 24), st.integers(1, 6), st.integers(0, 9999))
+def test_grad_matches_autodiff(n, d, nnz, seed):
+    rng = np.random.default_rng(seed)
+    idx = jnp.asarray(rng.integers(0, d, size=(n, nnz)), jnp.int32)
+    val = jnp.asarray(rng.standard_normal((n, nnz)), jnp.float32)
+    y = jnp.asarray(np.where(rng.random(n) < 0.5, 1.0, -1.0), jnp.float32)
+    prob = LogRegProblem(idx=idx, val=val, y=y, lam=0.1, num_features=d)
+    w = jnp.asarray(rng.standard_normal(d), jnp.float32)
+    g1 = prob.grad(w)
+    g2 = jax.grad(prob.loss)(w)
+    np.testing.assert_allclose(np.asarray(g1), np.asarray(g2), rtol=2e-4, atol=2e-5)

@@ -1,0 +1,68 @@
+"""Pallas WKV6 kernel vs the sequential oracle: shape/dtype sweeps."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.wkv6 import wkv6
+from repro.models.rwkv import _wkv_sequential
+
+
+def _inputs(seed, B, S, Hn, D, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 6)
+    r = jax.random.normal(ks[0], (B, S, Hn, D), dtype)
+    k = jax.random.normal(ks[1], (B, S, Hn, D), dtype)
+    v = jax.random.normal(ks[2], (B, S, Hn, D), dtype)
+    w = jnp.exp(-jnp.exp(-6.0 + jax.random.normal(ks[3], (B, S, Hn, D)))).astype(dtype)
+    u = (jax.random.normal(ks[4], (Hn, D)) * 0.1).astype(dtype)
+    return r, k, v, w, u
+
+
+def _flat(t, B, Hn, S, D):
+    return t.transpose(0, 2, 1, 3).reshape(B * Hn, S, D)
+
+
+@settings(deadline=None, max_examples=10)
+@given(st.integers(1, 2), st.sampled_from([32, 64, 128]), st.integers(1, 2),
+       st.sampled_from([8, 32]), st.integers(0, 2**28))
+def test_wkv6_kernel_matches_oracle(B, S, Hn, D, seed):
+    r, k, v, w, u = _inputs(seed, B, S, Hn, D, jnp.float32)
+    s0 = jnp.zeros((B, Hn, D, D))
+    out_ref, s_ref = _wkv_sequential(
+        r.astype(jnp.float32), k.astype(jnp.float32), v.astype(jnp.float32),
+        w.astype(jnp.float32), u.astype(jnp.float32), s0)
+    out_k, s_k = wkv6(_flat(r, B, Hn, S, D), _flat(k, B, Hn, S, D),
+                      _flat(v, B, Hn, S, D), _flat(w, B, Hn, S, D),
+                      jnp.tile(u, (B, 1)), interpret=True)
+    out_k = out_k.reshape(B, Hn, S, D).transpose(0, 2, 1, 3)
+    s_k = s_k.reshape(B, Hn, D, D)
+    np.testing.assert_allclose(np.asarray(out_k), np.asarray(out_ref),
+                               rtol=3e-4, atol=3e-4)
+    np.testing.assert_allclose(np.asarray(s_k), np.asarray(s_ref),
+                               rtol=3e-4, atol=3e-4)
+
+
+def test_wkv6_kernel_bf16_inputs():
+    B, S, Hn, D = 1, 64, 1, 16
+    r, k, v, w, u = _inputs(0, B, S, Hn, D, jnp.bfloat16)
+    out_k, s_k = wkv6(_flat(r, B, Hn, S, D), _flat(k, B, Hn, S, D),
+                      _flat(v, B, Hn, S, D), _flat(w, B, Hn, S, D),
+                      jnp.tile(u, (B, 1)), interpret=True)
+    assert out_k.dtype == jnp.bfloat16
+    assert bool(jnp.isfinite(out_k.astype(jnp.float32)).all())
+    s0 = jnp.zeros((B, Hn, D, D))
+    out_ref, _ = _wkv_sequential(
+        r.astype(jnp.float32), k.astype(jnp.float32), v.astype(jnp.float32),
+        w.astype(jnp.float32), u.astype(jnp.float32), s0)
+    np.testing.assert_allclose(np.asarray(out_k.astype(jnp.float32)),
+                               np.asarray(out_ref.reshape(B, S, Hn, D)
+                                          .transpose(0, 2, 1, 3)
+                                          .reshape(B * Hn, S, D)),
+                               rtol=0.08, atol=0.08)
+
+
+def test_wkv6_rejects_ragged_seq():
+    r = jnp.zeros((1, 33, 8))
+    with pytest.raises(ValueError):
+        wkv6(r, r, r, r, jnp.zeros((1, 8)), interpret=True)
