@@ -17,12 +17,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs import get_logreg_config
-from repro.core import FSVRG, FSVRGConfig, build_problem, build_test_problem
-from repro.core.baselines import (fedavg_round, majority_baseline_error,
-                                  one_shot_average, run_gd)
+from repro.configs import get_fedavg_config, get_logreg_config
+from repro.core import (FSVRG, FSVRGConfig, FedAvg, FedAvgConfig,
+                        build_problem, build_test_problem)
+from repro.core.baselines import majority_baseline_error, one_shot_average
 from repro.core.cocoa import CoCoAPlus
 from repro.data.synthetic import generate
+
+ALGOS = ("fsvrg", "fsvrgr", "gd", "cocoa", "fedavg", "oneshot")
 
 
 def optimum(prob, iters=6000, lr=2.0):
@@ -55,7 +57,12 @@ def main(argv=None):
     ap.add_argument("--rounds", type=int, default=30)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--json", default=None)
+    ap.add_argument("--algo", default="all", choices=("all",) + ALGOS,
+                    help="run a single comparison curve instead of all of them")
     args = ap.parse_args(argv)
+
+    def want(name):
+        return args.algo in ("all", name)
 
     cfg = get_logreg_config().scaled(args.scale)
     ds = generate(cfg, seed=args.seed)
@@ -83,91 +90,106 @@ def main(argv=None):
         return {"f": float(prob.flat.loss(w)), "err": float(te.error_rate(w))}
 
     # ---- FSVRG ---- #
-    def run_fsvrg(h, rounds, problem=prob):
-        solver = FSVRG(problem, FSVRGConfig(stepsize=h))
-        w = jnp.zeros(problem.d)
-        hist = []
-        for r in range(rounds):
-            w = solver.round(w, jax.random.fold_in(jax.random.PRNGKey(1), r))
-            hist.append(eval_w(w) if problem is prob else
-                        {"f": float(problem.flat.loss(w)), "err": float("nan")})
-        return hist
+    if want("fsvrg"):
+        def run_fsvrg(h, rounds, problem=prob):
+            solver = FSVRG(problem, FSVRGConfig(stepsize=h))
+            w = jnp.zeros(problem.d)
+            hist = []
+            for r in range(rounds):
+                w = solver.round(w, jax.random.fold_in(jax.random.PRNGKey(1), r))
+                hist.append(eval_w(w) if problem is prob else
+                            {"f": float(problem.flat.loss(w)), "err": float("nan")})
+            return hist
 
-    t0 = time.time()
-    hist, h_best = sweep_stepsize(run_fsvrg, prob, (0.3, 1.0, 3.0), args.rounds)
-    results["fsvrg"] = {"h": h_best, "hist": hist}
-    print(f"FSVRG   (h={h_best}): " + " ".join(
-        f"r{r+1}={p['f']:.4f}" for r, p in list(enumerate(hist))[::max(1, args.rounds // 6)])
-        + f"  err={hist[-1]['err']:.4f}  [{time.time()-t0:.0f}s]")
+        t0 = time.time()
+        hist, h_best = sweep_stepsize(run_fsvrg, prob, (0.3, 1.0, 3.0), args.rounds)
+        results["fsvrg"] = {"h": h_best, "hist": hist}
+        print(f"FSVRG   (h={h_best}): " + " ".join(
+            f"r{r+1}={p['f']:.4f}" for r, p in list(enumerate(hist))[::max(1, args.rounds // 6)])
+            + f"  err={hist[-1]['err']:.4f}  [{time.time()-t0:.0f}s]")
 
     # ---- FSVRGR: same algorithm, randomly reshuffled data ---- #
-    rng = np.random.default_rng(123)
-    perm = rng.permutation(ds.num_examples)
-    ds_r = dataclasses.replace(ds, idx=ds.idx[perm], val=ds.val[perm], y=ds.y[perm])
-    prob_r = build_problem(ds_r)
+    if want("fsvrgr"):
+        rng = np.random.default_rng(123)
+        perm = rng.permutation(ds.num_examples)
+        ds_r = dataclasses.replace(ds, idx=ds.idx[perm], val=ds.val[perm], y=ds.y[perm])
+        prob_r = build_problem(ds_r)
 
-    def run_fsvrgr(h, rounds):
-        solver = FSVRG(prob_r, FSVRGConfig(stepsize=h))
-        w = jnp.zeros(prob_r.d)
-        hist = []
-        for r in range(rounds):
-            w = solver.round(w, jax.random.fold_in(jax.random.PRNGKey(1), r))
-            hist.append({"f": float(prob_r.flat.loss(w)),
-                         "err": float(te.error_rate(w))})
-        return hist
+        def run_fsvrgr(h, rounds):
+            solver = FSVRG(prob_r, FSVRGConfig(stepsize=h))
+            w = jnp.zeros(prob_r.d)
+            hist = []
+            for r in range(rounds):
+                w = solver.round(w, jax.random.fold_in(jax.random.PRNGKey(1), r))
+                hist.append({"f": float(prob_r.flat.loss(w)),
+                             "err": float(te.error_rate(w))})
+            return hist
 
-    hist_r, h_r = sweep_stepsize(run_fsvrgr, prob_r, (0.3, 1.0, 3.0), args.rounds)
-    results["fsvrgr"] = {"h": h_r, "hist": hist_r}
-    print(f"FSVRGR  (h={h_r}): final f={hist_r[-1]['f']:.4f} err={hist_r[-1]['err']:.4f}")
+        hist_r, h_r = sweep_stepsize(run_fsvrgr, prob_r, (0.3, 1.0, 3.0), args.rounds)
+        results["fsvrgr"] = {"h": h_r, "hist": hist_r}
+        print(f"FSVRGR  (h={h_r}): final f={hist_r[-1]['f']:.4f} err={hist_r[-1]['err']:.4f}")
 
     # ---- distributed GD ---- #
-    def run_gd_h(h, rounds):
-        w = jnp.zeros(prob.d)
-        g = jax.jit(prob.flat.grad)
-        hist = []
-        for r in range(rounds):
-            w = w - h * g(w)
-            hist.append(eval_w(w))
-        return hist
+    if want("gd"):
+        def run_gd_h(h, rounds):
+            w = jnp.zeros(prob.d)
+            g = jax.jit(prob.flat.grad)
+            hist = []
+            for r in range(rounds):
+                w = w - h * g(w)
+                hist.append(eval_w(w))
+            return hist
 
-    hist_gd, h_gd = sweep_stepsize(run_gd_h, prob, (0.5, 2.0, 8.0, 32.0), args.rounds)
-    results["gd"] = {"h": h_gd, "hist": hist_gd}
-    print(f"GD      (h={h_gd}): final f={hist_gd[-1]['f']:.4f} err={hist_gd[-1]['err']:.4f}")
+        hist_gd, h_gd = sweep_stepsize(run_gd_h, prob, (0.5, 2.0, 8.0, 32.0), args.rounds)
+        results["gd"] = {"h": h_gd, "hist": hist_gd}
+        print(f"GD      (h={h_gd}): final f={hist_gd[-1]['f']:.4f} err={hist_gd[-1]['err']:.4f}")
 
     # ---- CoCoA+ ---- #
-    solver = CoCoAPlus(prob)
-    hist_c = []
-    for r in range(args.rounds):
-        solver.round(jax.random.PRNGKey(r))
-        hist_c.append(eval_w(solver.w))
-    results["cocoa"] = {"sigma": solver.sigma, "hist": hist_c}
-    print(f"CoCoA+  (s'={solver.sigma:.0f}): final f={hist_c[-1]['f']:.4f} "
-          f"err={hist_c[-1]['err']:.4f}")
+    if want("cocoa"):
+        solver = CoCoAPlus(prob)
+        hist_c = []
+        for r in range(args.rounds):
+            solver.round(jax.random.PRNGKey(r))
+            hist_c.append(eval_w(solver.w))
+        results["cocoa"] = {"sigma": solver.sigma, "hist": hist_c}
+        print(f"CoCoA+  (s'={solver.sigma:.0f}): final f={hist_c[-1]['f']:.4f} "
+              f"err={hist_c[-1]['err']:.4f}")
 
-    # ---- FedAvg-style local SGD ---- #
-    def run_fedavg(h, rounds):
-        w = jnp.zeros(prob.d)
-        hist = []
-        for r in range(rounds):
-            w = fedavg_round(prob, w, jax.random.fold_in(jax.random.PRNGKey(2), r), h)
-            hist.append(eval_w(w))
-        return hist
+    # ---- FedAvg (engine subsystem; E and sweep from the config entry) ---- #
+    if want("fedavg"):
+        facfg = get_fedavg_config()
 
-    hist_fa, h_fa = sweep_stepsize(run_fedavg, prob, (0.1, 0.5, 2.0), args.rounds)
-    results["fedavg"] = {"h": h_fa, "hist": hist_fa}
-    print(f"FedAvg  (h={h_fa}): final f={hist_fa[-1]['f']:.4f} err={hist_fa[-1]['err']:.4f}")
+        def run_fedavg(h, rounds):
+            solver = FedAvg(prob, FedAvgConfig(
+                stepsize=h, local_epochs=facfg.local_epochs,
+                participation=facfg.participation))
+            w = jnp.zeros(prob.d)
+            hist = []
+            for r in range(rounds):
+                w = solver.round(w, jax.random.fold_in(jax.random.PRNGKey(2), r))
+                hist.append(eval_w(w))
+            return hist
+
+        hist_fa, h_fa = sweep_stepsize(run_fedavg, prob, facfg.stepsize_sweep,
+                                       args.rounds)
+        results["fedavg"] = {"h": h_fa, "E": facfg.local_epochs, "hist": hist_fa}
+        print(f"FedAvg  (h={h_fa},E={facfg.local_epochs}): "
+              f"final f={hist_fa[-1]['f']:.4f} err={hist_fa[-1]['err']:.4f}")
 
     # ---- one-shot averaging ---- #
-    w_os = one_shot_average(prob, jnp.zeros(prob.d), jax.random.PRNGKey(3),
-                            stepsize=0.5, epochs=20)
-    results["oneshot"] = eval_w(w_os)
-    print(f"OneShot: f={results['oneshot']['f']:.4f} err={results['oneshot']['err']:.4f}")
+    if want("oneshot"):
+        w_os = one_shot_average(prob, jnp.zeros(prob.d), jax.random.PRNGKey(3),
+                                stepsize=0.5, epochs=20)
+        results["oneshot"] = eval_w(w_os)
+        print(f"OneShot: f={results['oneshot']['f']:.4f} err={results['oneshot']['err']:.4f}")
 
     # rounds-to-within-10%-of-optimal-gap table
     f0 = float(prob.flat.loss(jnp.zeros(prob.d)))
     target = f_star + 0.1 * (f0 - f_star)
     print("\nname,rounds_to_10pct_gap,final_f,final_err")
     for name in ("fsvrg", "fsvrgr", "gd", "cocoa", "fedavg"):
+        if name not in results:
+            continue
         hist_n = results[name]["hist"]
         rto = next((r + 1 for r, p in enumerate(hist_n) if p["f"] <= target), None)
         print(f"{name},{rto},{hist_n[-1]['f']:.5f},{hist_n[-1]['err']:.4f}")

@@ -53,6 +53,11 @@ def bench_kernels():
     us_ref, _ = _timeit(lambda: ref.fsvrg_update_ref(w, s, gn, go, gb, 0.1))
     print(f"ref_fsvrg_update_d{d},{us_ref:.1f},jnp")
 
+    us, _ = _timeit(lambda: ops.fedavg_update(w, gn, 0.1, 1e-4))
+    print(f"kernel_fedavg_update_d{d},{us:.1f},interpret")
+    us_ref, _ = _timeit(lambda: ref.fedavg_update_ref(w, gn, 0.1, 1e-4))
+    print(f"ref_fedavg_update_d{d},{us_ref:.1f},jnp")
+
     K = 64
     wks = jax.random.normal(ks[1], (K, d))
     wts = jnp.full((K,), 1.0 / K)

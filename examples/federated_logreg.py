@@ -8,8 +8,9 @@ import argparse
 import jax
 import jax.numpy as jnp
 
-from repro.configs import get_logreg_config
-from repro.core import FSVRG, FSVRGConfig, build_problem, build_test_problem
+from repro.configs import get_fedavg_config, get_logreg_config
+from repro.core import (FSVRG, FSVRGConfig, FedAvg, FedAvgConfig,
+                        build_problem, build_test_problem)
 from repro.core.baselines import majority_baseline_error, run_gd
 from repro.core.cocoa import CoCoAPlus
 from repro.data.synthetic import generate
@@ -51,6 +52,14 @@ def main(argv=None):
     w_gd, _ = run_gd(prob, jnp.zeros(prob.d), args.rounds, 2.0)
     print(f"{'GD':34s} f={float(prob.flat.loss(w_gd)):.5f} "
           f"err={float(te.error_rate(w_gd)):.4f}")
+
+    facfg = get_fedavg_config()
+    w_fa, _ = FedAvg(prob, FedAvgConfig(stepsize=facfg.stepsize,
+                                        local_epochs=facfg.local_epochs)).run(
+        jnp.zeros(prob.d), args.rounds, seed=0)
+    print(f"{'FedAvg (E=%d local SGD)' % facfg.local_epochs:34s} "
+          f"f={float(prob.flat.loss(w_fa)):.5f} "
+          f"err={float(te.error_rate(w_fa)):.4f}")
 
     cc = CoCoAPlus(prob)
     for r in range(args.rounds):

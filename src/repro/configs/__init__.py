@@ -34,7 +34,12 @@ def get_logreg_config():
     return mod.CONFIG
 
 
+def get_fedavg_config():
+    mod = importlib.import_module("repro.configs.fedavg_gplus")
+    return mod.CONFIG
+
+
 __all__ = [
     "ArchConfig", "InputShape", "MoEConfig", "INPUT_SHAPES", "SHAPES",
-    "ARCH_IDS", "get_config", "get_logreg_config",
+    "ARCH_IDS", "get_config", "get_logreg_config", "get_fedavg_config",
 ]

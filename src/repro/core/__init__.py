@@ -1,18 +1,24 @@
 """The paper's contribution: federated optimization algorithms.
 
   problem.py   — federated finite-sum problem (sparse logreg), bucketed clients
+  engine.py    — unified round engine: client sampling, vmap-over-bucket
+                 passes, pluggable aggregation (shared by all algorithms)
   scaling.py   — S_k / A sparsity statistics (§3.6.1)
-  fsvrg.py     — Algorithms 3 & 4 (the paper's method)
+  fsvrg.py     — Algorithms 3 & 4 (the paper's method), on the engine
+  fedavg.py    — Federated Averaging (1602.05629), on the engine
   dane.py      — Algorithm 2 + the Proposition-1 DANE↔SVRG construction
   cocoa.py     — Appendix-A Algorithms 5 & 6, Theorem 5, CoCoA+
-  baselines.py — distributed GD, one-shot averaging, FedAvg local SGD
+  baselines.py — distributed GD (engine), one-shot averaging, FedAvg wrappers
   neural.py    — FSVRG/FedAvg for neural-network pytrees over the mesh
 """
 from repro.core.problem import (ClientBucket, FederatedLogReg, LogRegProblem,
                                 build_problem, build_test_problem)
+from repro.core.engine import EngineConfig, RoundEngine
 from repro.core.fsvrg import FSVRG, FSVRGConfig, naive_fsvrg_round
+from repro.core.fedavg import FedAvg, FedAvgConfig
 
 __all__ = [
     "ClientBucket", "FederatedLogReg", "LogRegProblem", "build_problem",
-    "build_test_problem", "FSVRG", "FSVRGConfig", "naive_fsvrg_round",
+    "build_test_problem", "EngineConfig", "RoundEngine",
+    "FSVRG", "FSVRGConfig", "naive_fsvrg_round", "FedAvg", "FedAvgConfig",
 ]

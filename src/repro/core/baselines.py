@@ -5,8 +5,14 @@
     once; the paper cites [91, App. A] showing it cannot beat a single
     machine in general.  We include it because it is the extreme point of
     the communication-efficiency spectrum.
-  * FedAvg-style local SGD [62] — local epochs + n_k/n-weighted averaging
-    (the follow-up paper's algorithm; a natural baseline here).
+  * FedAvg-style local SGD [62] — local epochs + n_k/n-weighted averaging;
+    the full subsystem lives in :mod:`repro.core.fedavg`, the wrappers here
+    keep the original one-call entry points.
+
+All round-based baselines run on the shared
+:class:`~repro.core.engine.RoundEngine`: distributed GD is the degenerate
+client pass ``delta_k = −h (∇f_k(w) + λw)``, whose n_k/n-weighted aggregate
+is exactly ``−h ∇f(w)`` (Σ_k n_k/n = 1).
 """
 from __future__ import annotations
 
@@ -16,15 +22,63 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.core.engine import EngineConfig, RoundEngine
+from repro.core.fedavg import FedAvg, FedAvgConfig
 from repro.core.problem import FederatedLogReg
 
 
 def gd_round(problem: FederatedLogReg, w: jax.Array, stepsize: float) -> jax.Array:
-    """One round of distributed gradient descent (1 communication)."""
+    """One round of distributed gradient descent (1 communication), computed
+    on the flat view — the cheap reference for :class:`DistributedGD`."""
     return w - stepsize * problem.flat.grad(w)
 
 
+def _gd_client_pass(w, bucket, lam, stepsize):
+    """vmapped over clients: delta_k = −h (mean data grad on P_k + λw)."""
+
+    def one_client(idx, val, y, n_k):
+        nkf = jnp.maximum(n_k.astype(jnp.float32), 1.0)
+        z = (val * w[idx]).sum(axis=1)                       # (m_pad,)
+        g_sc = -y * jax.nn.sigmoid(-y * z) / nkf             # padded rows: val==0
+        g = jnp.zeros_like(w).at[idx].add(g_sc[:, None] * val)
+        return -stepsize * (g + lam * w)
+
+    return jax.vmap(one_client)(bucket.idx, bucket.val, bucket.y, bucket.n_k)
+
+
+class DistributedGD:
+    """Distributed GD expressed on the RoundEngine (client pass = exact local
+    gradient, n_k/n aggregation)."""
+
+    def __init__(self, problem: FederatedLogReg, stepsize: float):
+        self.problem = problem
+        self.stepsize = stepsize
+        self.engine = RoundEngine(problem, EngineConfig())
+        self._passes = [
+            jax.jit(functools.partial(_gd_client_pass, bucket=b,
+                                      lam=problem.flat.lam, stepsize=stepsize))
+            for b in problem.buckets
+        ]
+
+    def round(self, w: jax.Array, key: Optional[jax.Array] = None) -> jax.Array:
+        key = jax.random.PRNGKey(0) if key is None else key
+        return self.engine.round(w, key, lambda w, bi, b, kb: self._passes[bi](w))
+
+    def run(self, w0: jax.Array, rounds: int, callback=None):
+        w = w0
+        hist = []
+        for r in range(rounds):
+            w = self.round(w)
+            if callback:
+                hist.append(callback(w, r))
+        return w, hist
+
+
 def run_gd(problem, w0, rounds: int, stepsize: float, callback=None):
+    """Round loop on the flat view — one jitted O(d) gradient per round.
+    Mathematically identical to :class:`DistributedGD` (see
+    tests/test_engine.py), which materializes per-client deltas and is kept
+    for engine parity, not for the hot path."""
     w = w0
     hist = []
     g = jax.jit(problem.flat.grad)
@@ -35,46 +89,10 @@ def run_gd(problem, w0, rounds: int, stepsize: float, callback=None):
     return w, hist
 
 
-def _local_sgd_pass(w0, bucket, lam, stepsize, epochs, key):
-    """vmap over clients: `epochs` permutation passes of plain SGD."""
-
-    def one_client(idx, val, y, n_k, ck):
-        d = w0.shape[0]
-        nkf = jnp.maximum(n_k.astype(jnp.float32), 1.0)
-        m_pad = y.shape[0]
-
-        def epoch(wk, ek):
-            perm = jax.random.permutation(ek, m_pad)
-
-            def step(wk, i):
-                xi, vi, yi = idx[i], val[i], y[i]
-                valid = (i < n_k).astype(jnp.float32)
-                z = (vi * wk[xi]).sum()
-                g_sc = -yi * jax.nn.sigmoid(-yi * z)
-                grad = jnp.zeros((d,)).at[xi].add(g_sc * vi) + lam * wk
-                return wk - valid * stepsize * grad, None
-
-            wk, _ = jax.lax.scan(step, wk, perm)
-            return wk, None
-
-        wk, _ = jax.lax.scan(epoch, w0, jax.random.split(ck, epochs))
-        return wk - w0
-
-    keys = jax.random.split(key, bucket.num_clients)
-    return jax.vmap(one_client)(bucket.idx, bucket.val, bucket.y, bucket.n_k, keys)
-
-
 def fedavg_round(problem: FederatedLogReg, w, key, stepsize: float, epochs: int = 1):
     """Local SGD + n_k/n-weighted averaging (FedAvg, [62])."""
-    agg = jnp.zeros_like(w)
-    wi = 0
-    for b in problem.buckets:
-        deltas = _local_sgd_pass(w, b, problem.flat.lam, stepsize, epochs,
-                                 jax.random.fold_in(key, wi))
-        wts = problem.client_weights[wi : wi + b.num_clients]
-        agg = agg + (wts[:, None] * deltas).sum(axis=0)
-        wi += b.num_clients
-    return w + agg
+    cfg = FedAvgConfig(stepsize=stepsize, local_epochs=epochs)
+    return FedAvg(problem, cfg).round(w, key)
 
 
 def one_shot_average(problem: FederatedLogReg, w0, key, stepsize: float,

@@ -1,0 +1,181 @@
+"""Unified federated round engine — the paper's round template (§1, §3).
+
+Every algorithm in this repo follows the same communication pattern:
+
+  1. (algorithm) server broadcasts state to clients
+  2. clients compute local updates in parallel         — vmap over buckets
+  3. server samples/weights the participating clients  — full or i.i.d. partial
+  4. server aggregates deltas and applies the update   — uniform / n_k/n /
+                                                         A-scaled (Pallas)
+
+Steps 2–4 are algorithm-independent: FSVRG (Alg. 4), naive SVRG (Alg. 3),
+FedAvg, and distributed GD differ only in the *client pass* that produces the
+per-client deltas ``w_k − w`` and in the weighting/scaling choices.  The
+``RoundEngine`` owns steps 2–4 so algorithms supply one function instead of
+hand-rolling the loop (the pre-refactor state: four divergent copies).
+
+Aggregation is pluggable:
+
+  * ``weighting``      — ``"nk"`` (n_k/n, the paper's mod. 2) or ``"uniform"``
+  * ``server_scaling`` — ``"none"`` or ``"diag"`` (A = Diag(K/ω), mod. 4)
+  * ``aggregator``     — ``"dense"`` (eager jnp weighted sum, the reference
+                          path) or ``"pallas"`` (one HBM pass over the stacked
+                          client deltas via ``kernels.scaled_aggregate``)
+
+Partial participation samples clients i.i.d. with probability
+``participation`` per round and reweights the aggregate by
+(expected mass / realized mass) so the update direction stays unbiased —
+the deployment reality the paper motivates in §1.2 (devices participate
+only when charging / on wi-fi).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.problem import ClientBucket, FederatedLogReg
+
+#: client_pass(w, bucket_index, bucket, key) -> (Kb, d) deltas w_k - w
+ClientPassFn = Callable[[jax.Array, int, ClientBucket, jax.Array], jax.Array]
+
+_WEIGHTINGS = ("nk", "uniform")
+_SCALINGS = ("none", "diag")
+_AGGREGATORS = ("dense", "pallas")
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    """Round-scheduling knobs shared by every federated algorithm."""
+
+    participation: float = 1.0     # i.i.d. per-round client participation prob
+    weighting: str = "nk"          # "nk" (n_k/n) | "uniform" (1/K)
+    server_scaling: str = "none"   # "none" | "diag" (apply a_diag coordinatewise)
+    aggregator: str = "dense"      # "dense" | "pallas" (scaled_aggregate kernel)
+
+    def __post_init__(self):
+        if self.weighting not in _WEIGHTINGS:
+            raise ValueError(f"weighting must be one of {_WEIGHTINGS}")
+        if self.server_scaling not in _SCALINGS:
+            raise ValueError(f"server_scaling must be one of {_SCALINGS}")
+        if self.aggregator not in _AGGREGATORS:
+            raise ValueError(f"aggregator must be one of {_AGGREGATORS}")
+        if not 0.0 < self.participation <= 1.0:
+            raise ValueError("participation must be in (0, 1]")
+
+
+@functools.partial(jax.jit, static_argnames=("scaled",))
+def _apply_server_update(w, agg, a_diag, scaled: bool):
+    return w + (a_diag if scaled else 1.0) * agg
+
+
+class RoundEngine:
+    """Owns client sampling, the vmap-over-bucket client pass, and server
+    aggregation.  Algorithms provide a :data:`ClientPassFn`; the engine never
+    looks inside the deltas it aggregates."""
+
+    def __init__(self, problem: FederatedLogReg, cfg: EngineConfig = EngineConfig(),
+                 *, a_diag: Optional[jax.Array] = None):
+        self.problem = problem
+        self.cfg = cfg
+        if cfg.server_scaling == "diag" and a_diag is None:
+            raise ValueError("server_scaling='diag' requires an a_diag")
+        self.a_diag = jnp.ones((problem.d,)) if a_diag is None else a_diag
+
+    # -- step 3: sampling & weighting ------------------------------------- #
+
+    def bucket_weights(self, wi: int, num_clients: int) -> jax.Array:
+        """Aggregation weights for the bucket whose first client is ``wi``."""
+        if self.cfg.weighting == "uniform":
+            return jnp.full((num_clients,), 1.0 / self.problem.num_clients)
+        return self.problem.client_weights[wi : wi + num_clients]
+
+    def participation_mask(self, bucket_key: jax.Array, num_clients: int) -> jax.Array:
+        """i.i.d. Bernoulli(participation) mask, 1.0 = client is in-round."""
+        return (jax.random.uniform(jax.random.fold_in(bucket_key, 997),
+                                   (num_clients,))
+                < self.cfg.participation).astype(jnp.float32)
+
+    # -- step 4: aggregation ----------------------------------------------- #
+
+    def aggregate(self, w: jax.Array, deltas_by_bucket: Sequence[jax.Array],
+                  key: jax.Array) -> jax.Array:
+        """Weight, subsample, reweight, scale, and apply the client deltas.
+
+        ``deltas_by_bucket[i]`` is the (Kb, d) output of the client pass for
+        bucket i; ``key`` must be the same round key handed to the passes so
+        the participation draw is tied to the round.
+        """
+        cfg = self.cfg
+        pallas = cfg.aggregator == "pallas"
+        agg = jnp.zeros_like(w)
+        stacked: List[jax.Array] = []
+        stacked_wts: List[jax.Array] = []
+        wi = 0
+        total_mass = jnp.zeros(())
+        expected_mass = jnp.zeros(())
+        for b, deltas in zip(self.problem.buckets, deltas_by_bucket):
+            kb = jax.random.fold_in(key, wi)
+            wts = self.bucket_weights(wi, b.num_clients)
+            if cfg.participation < 1.0:
+                sel = self.participation_mask(kb, b.num_clients)
+                total_mass = total_mass + (wts * sel).sum()
+                expected_mass = expected_mass + wts.sum()
+                wts = wts * sel
+            if pallas:
+                stacked.append(deltas)
+                stacked_wts.append(wts)
+            else:
+                agg = agg + (wts[:, None] * deltas).sum(axis=0)
+            wi += b.num_clients
+
+        scale = expected_mass / jnp.maximum(total_mass, 1e-9) \
+            if cfg.participation < 1.0 else None
+
+        if pallas:
+            from repro.kernels import ops
+            wts_all = jnp.concatenate(stacked_wts)
+            if scale is not None:
+                wts_all = wts_all * scale
+            w_ks = w[None, :] + jnp.concatenate(stacked, axis=0)
+            a = self.a_diag if cfg.server_scaling == "diag" else jnp.ones_like(w)
+            return ops.scaled_aggregate(w, w_ks, wts_all, a).astype(w.dtype)
+
+        if scale is not None:
+            agg = agg * scale
+        return _apply_server_update(w, agg, self.a_diag,
+                                    cfg.server_scaling == "diag")
+
+    # -- steps 2-4: one full round ----------------------------------------- #
+
+    def round(self, w: jax.Array, key: jax.Array,
+              client_pass: ClientPassFn) -> jax.Array:
+        """Run the client passes over every bucket, then aggregate.
+
+        Each bucket's pass receives ``fold_in(key, wi)`` where ``wi`` is the
+        bucket's first client index — the same key the aggregation step uses
+        for that bucket's participation draw.
+        """
+        deltas: List[jax.Array] = []
+        wi = 0
+        for bi, b in enumerate(self.problem.buckets):
+            kb = jax.random.fold_in(key, wi)
+            deltas.append(client_pass(w, bi, b, kb))
+            wi += b.num_clients
+        return self.aggregate(w, deltas, key)
+
+    def run(self, w0: jax.Array, rounds: int, client_pass: ClientPassFn,
+            seed: int = 0, callback=None):
+        """Round loop with the shared per-round key schedule
+        (``fold_in(PRNGKey(seed), r)``)."""
+        w = w0
+        key = jax.random.PRNGKey(seed)
+        history = []
+        for r in range(rounds):
+            w = self.round(w, jax.random.fold_in(key, r), client_pass)
+            if callback is not None:
+                history.append(callback(w, r))
+        return w, history

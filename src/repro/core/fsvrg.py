@@ -27,6 +27,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import scaling
+from repro.core.engine import EngineConfig, RoundEngine
 from repro.core.problem import ClientBucket, FederatedLogReg
 
 
@@ -95,14 +96,11 @@ def _client_pass(w0, full_grad, bucket: ClientBucket, lam, phi, cfg: FSVRGConfig
     return jax.vmap(one_client)(bucket.idx, bucket.val, bucket.y, bucket.n_k, keys)
 
 
-@functools.partial(jax.jit, static_argnames=("cfg",))
-def _round_from_parts(w, full_grad, deltas_weighted_sum, a_diag, cfg: FSVRGConfig):
-    del full_grad
-    return w + (a_diag if (cfg.use_A and not cfg.naive) else 1.0) * deltas_weighted_sum
-
-
 class FSVRG:
-    """Stateful driver: precomputes φ and A once, then runs rounds."""
+    """Stateful driver: precomputes φ and A once, then runs rounds on the
+    shared :class:`~repro.core.engine.RoundEngine` (which owns client
+    sampling, weighting, and aggregation — mods. 2 & 4 map onto its
+    ``weighting`` / ``server_scaling`` knobs)."""
 
     def __init__(self, problem: FederatedLogReg, cfg: FSVRGConfig = FSVRGConfig()):
         self.problem = problem
@@ -115,34 +113,24 @@ class FSVRG:
             jax.jit(functools.partial(_client_pass, bucket=b, lam=flat.lam, cfg=cfg))
             for b in problem.buckets
         ]
+        plain = cfg.naive  # Alg. 3: uniform aggregation, no A scaling
+        self.engine = RoundEngine(
+            problem,
+            EngineConfig(
+                participation=cfg.participation,
+                weighting="uniform" if (plain or not cfg.use_weighted_agg) else "nk",
+                server_scaling="diag" if (cfg.use_A and not plain) else "none",
+            ),
+            a_diag=self.a_diag,
+        )
 
     def round(self, w: jax.Array, key: jax.Array) -> jax.Array:
-        flat = self.problem.flat
-        full_grad = flat.grad(w)
-        agg = jnp.zeros_like(w)
-        wi = 0
-        total_mass = jnp.zeros(())
-        expected_mass = jnp.zeros(())
-        for b, pass_fn in zip(self.problem.buckets, self._passes):
-            kb = jax.random.fold_in(key, wi)
-            deltas = pass_fn(w, full_grad, phi=self.phi, key=kb)   # (Kb, d)
-            if self.cfg.naive or not self.cfg.use_weighted_agg:
-                wts = jnp.full((b.num_clients,), 1.0 / self.problem.num_clients)
-            else:
-                wts = self.problem.client_weights[wi : wi + b.num_clients]
-            if self.cfg.participation < 1.0:
-                sel = (jax.random.uniform(jax.random.fold_in(kb, 997),
-                                          (b.num_clients,))
-                       < self.cfg.participation).astype(jnp.float32)
-                total_mass = total_mass + (wts * sel).sum()
-                expected_mass = expected_mass + wts.sum()
-                wts = wts * sel
-            agg = agg + (wts[:, None] * deltas).sum(axis=0)
-            wi += b.num_clients
-        if self.cfg.participation < 1.0:
-            # reweight by realized participating mass -> unbiased direction
-            agg = agg * (expected_mass / jnp.maximum(total_mass, 1e-9))
-        return _round_from_parts(w, full_grad, agg, self.a_diag, self.cfg)
+        full_grad = self.problem.flat.grad(w)
+
+        def fsvrg_pass(w, bi, bucket, kb):
+            return self._passes[bi](w, full_grad, phi=self.phi, key=kb)
+
+        return self.engine.round(w, key, fsvrg_pass)
 
     def run(self, w0: jax.Array, rounds: int, seed: int = 0, callback=None):
         w = w0

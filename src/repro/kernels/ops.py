@@ -8,6 +8,7 @@ from __future__ import annotations
 
 import jax
 
+from repro.kernels.fedavg_update import fedavg_update as _fedavg_update
 from repro.kernels.fsvrg_update import fsvrg_update as _fsvrg_update
 from repro.kernels.scaled_aggregate import scaled_aggregate as _scaled_aggregate
 from repro.kernels.wkv6 import wkv6 as _wkv6
@@ -20,6 +21,11 @@ def _on_tpu() -> bool:
 def fsvrg_update(w, s, g_new, g_old, g_bar, h, **kw):
     kw.setdefault("interpret", not _on_tpu())
     return _fsvrg_update(w, s, g_new, g_old, g_bar, h, **kw)
+
+
+def fedavg_update(w, g, h, lam, **kw):
+    kw.setdefault("interpret", not _on_tpu())
+    return _fedavg_update(w, g, h, lam, **kw)
 
 
 def scaled_aggregate(w_t, w_ks, weights, a_diag, **kw):

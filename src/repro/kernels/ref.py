@@ -12,6 +12,14 @@ def fsvrg_update_ref(w, s, g_new, g_old, g_bar, h):
     return (w.astype(jnp.float32) - jnp.asarray(h, jnp.float32) * upd).astype(w.dtype)
 
 
+def fedavg_update_ref(w, g, h, lam):
+    """(1 − h·λ)·w − h·g, computed in f32, cast back."""
+    h = jnp.asarray(h, jnp.float32)
+    lam = jnp.asarray(lam, jnp.float32)
+    out = (1.0 - h * lam) * w.astype(jnp.float32) - h * g.astype(jnp.float32)
+    return out.astype(w.dtype)
+
+
 def scaled_aggregate_ref(w_t, w_ks, weights, a_diag):
     """w^t + A ⊙ Σ_k weights_k (w_k − w^t), in f32."""
     wt = w_t.astype(jnp.float32)

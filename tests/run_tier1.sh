@@ -1,0 +1,6 @@
+#!/usr/bin/env sh
+# Tier-1 verify entrypoint (see ROADMAP.md).  Extra args pass through to
+# pytest, e.g.:  tests/run_tier1.sh -m "not slow"
+set -e
+cd "$(dirname "$0")/.."
+PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" exec python -m pytest -x -q "$@"

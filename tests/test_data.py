@@ -4,6 +4,8 @@ unbalanced, sparse), plus bucketing integrity.
 """
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")  # optional dev dep; see requirements-dev.txt
 from hypothesis import given, settings, strategies as st
 
 from repro.configs import get_logreg_config

@@ -1,0 +1,83 @@
+"""Interpret-mode Pallas parity at fixed non-multiple-of-block sizes.
+
+Unlike test_kernels.py (hypothesis sweeps, skipped where hypothesis is not
+installed), this module has no optional dependencies — CPU-only CI always
+exercises every Pallas kernel path against the kernels/ref.py oracles, at
+sizes that force ragged padding of the (rows, 128) / (K_BLOCK, D_BLOCK)
+grids (d=1000 and 999, K=5)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+DTYPES = (jnp.float32, jnp.bfloat16)
+
+
+def _tol(dtype):
+    return 1e-6 if dtype == jnp.float32 else 0.05
+
+
+@pytest.mark.parametrize("dtype", DTYPES, ids=("f32", "bf16"))
+@pytest.mark.parametrize("d", [1, 127, 1000])
+def test_fsvrg_update_parity(d, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(0), 5)
+    w, s, gn, go, gb = [jax.random.normal(k, (d,), dtype) for k in ks]
+    h = 0.7
+    out = ops.fsvrg_update(w, s, gn, go, gb, h)
+    expect = ref.fsvrg_update_ref(w, s, gn, go, gb, h)
+    assert out.dtype == dtype
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(expect, np.float32),
+                               rtol=_tol(dtype), atol=_tol(dtype) * 10)
+
+
+@pytest.mark.parametrize("dtype", DTYPES, ids=("f32", "bf16"))
+@pytest.mark.parametrize("d", [1, 127, 1000])
+def test_fedavg_update_parity(d, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(1), 2)
+    w = jax.random.normal(ks[0], (d,), dtype)
+    g = jax.random.normal(ks[1], (d,), dtype)
+    h, lam = 0.3, 0.05
+    out = ops.fedavg_update(w, g, h, lam)
+    expect = ref.fedavg_update_ref(w, g, h, lam)
+    assert out.dtype == dtype
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(expect, np.float32),
+                               rtol=_tol(dtype), atol=_tol(dtype) * 10)
+
+
+def test_fedavg_update_zero_stepsize_is_noop():
+    """h=0 must be an exact no-op — the padded-slot masking contract."""
+    w = jax.random.normal(jax.random.PRNGKey(2), (1000,))
+    g = jax.random.normal(jax.random.PRNGKey(3), (1000,))
+    out = ops.fedavg_update(w, g, 0.0, 0.05)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(w))
+
+
+def test_fedavg_update_semantics():
+    """The fused kernel is exactly one regularized SGD step."""
+    d = 257
+    w = jax.random.normal(jax.random.PRNGKey(4), (d,))
+    g = jax.random.normal(jax.random.PRNGKey(5), (d,))
+    h, lam = 0.2, 0.1
+    manual = w - h * (g + lam * w)
+    out = ops.fedavg_update(w, g, h, lam)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(manual),
+                               rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.parametrize("dtype", DTYPES, ids=("f32", "bf16"))
+@pytest.mark.parametrize("K,d", [(5, 1000), (1, 999), (5, 1)])
+def test_scaled_aggregate_parity(K, d, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(6), 4)
+    wt = jax.random.normal(ks[0], (d,), dtype)
+    wks = jax.random.normal(ks[1], (K, d), dtype)
+    wts = jax.nn.softmax(jax.random.normal(ks[2], (K,)))
+    a = jnp.abs(jax.random.normal(ks[3], (d,))) + 0.5
+    out = ops.scaled_aggregate(wt, wks, wts, a)
+    expect = ref.scaled_aggregate_ref(wt, wks, wts, a)
+    tol = 1e-5 if dtype == jnp.float32 else 0.05
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               rtol=tol, atol=tol)

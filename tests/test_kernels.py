@@ -5,11 +5,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")  # optional dev dep; see requirements-dev.txt
 from hypothesis import given, settings, strategies as st
 
 from repro.kernels import ops, ref
 
 
+@pytest.mark.slow
 @settings(deadline=None, max_examples=30)
 @given(
     d=st.integers(1, 5000),
@@ -33,6 +36,7 @@ def test_fsvrg_update_matches_ref(d, h, seed, dtype):
                                rtol=tol, atol=tol * (1.0 + 10 * h))
 
 
+@pytest.mark.slow
 @settings(deadline=None, max_examples=20)
 @given(
     K=st.integers(1, 24),

@@ -32,9 +32,15 @@ def test_reduced_train_step(arch):
         assert bool(jnp.isfinite(leaf).all()), arch
 
     # one SGD step must decrease the (full-batch) loss at lr -> small
-    new_params = jax.tree.map(lambda p, g: p - 0.05 * g.astype(p.dtype), params, grads)
-    loss2 = model.loss(new_params, batch)[0]
-    assert float(loss2) < float(loss), (arch, float(loss), float(loss2))
+    # (0.05 overshoots on the stiffest reduced configs, e.g. jamba; a
+    # descent direction only guarantees decrease for small enough lr)
+    def loss_after_step(lr):
+        new_params = jax.tree.map(lambda p, g: p - lr * g.astype(p.dtype),
+                                  params, grads)
+        return float(model.loss(new_params, batch)[0])
+
+    losses2 = [loss_after_step(lr) for lr in (0.05, 0.005)]
+    assert min(losses2) < float(loss), (arch, float(loss), losses2)
 
 
 @pytest.mark.parametrize("arch", ARCH_IDS)

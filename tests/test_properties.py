@@ -6,6 +6,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")  # optional dev dep; see requirements-dev.txt
 from hypothesis import given, settings, strategies as st
 
 from repro.core import FSVRG, FSVRGConfig, build_problem
@@ -158,6 +160,7 @@ def test_property_D_identical_clients():
 # ------------------------------------------------------------------ #
 
 
+@pytest.mark.slow
 @settings(deadline=None, max_examples=25)
 @given(st.integers(2, 6), st.integers(4, 32), st.integers(8, 24), st.integers(2, 6),
        st.integers(0, 10_000))
@@ -189,6 +192,7 @@ def test_scaling_stats_invariants(K, nk, d, nnz, seed):
     assert np.allclose(s0[~seen], 1.0)
 
 
+@pytest.mark.slow
 @settings(deadline=None, max_examples=20)
 @given(st.integers(2, 5), st.integers(0, 10_000))
 def test_client_weights_sum_to_one(K, seed):
