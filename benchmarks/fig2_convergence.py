@@ -1,10 +1,11 @@
 """Fig. 2 reproduction: rounds of communication vs objective / test error.
 
 Compares (as in the paper): OPT (offline optimum), GD (best stepsize),
-CoCoA+, FSVRG, FSVRGR (same algorithm, randomly reshuffled data), plus the
-FedAvg/local-SGD and one-shot baselines.  Scale is controlled by
---scale (default CI-friendly 0.005 ≈ 50 clients; the paper's full setting
-is scale=1.0: K=10,000, n≈2.2M, d=20,002).
+CoCoA+, DANE, FSVRG, FSVRGR (same algorithm, randomly reshuffled data), plus
+the FedAvg/local-SGD and one-shot baselines — every round-based curve runs
+on the shared RoundEngine.  Scale is controlled by --scale (default
+CI-friendly 0.005 ≈ 50 clients; the paper's full setting is scale=1.0:
+K=10,000, n≈2.2M, d=20,002).
 """
 from __future__ import annotations
 
@@ -17,14 +18,15 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs import get_fedavg_config, get_logreg_config
-from repro.core import (FSVRG, FSVRGConfig, FedAvg, FedAvgConfig,
-                        build_problem, build_test_problem)
+from repro.configs import (get_cocoa_config, get_dane_config,
+                           get_fedavg_config, get_logreg_config)
+from repro.core import (DANE, DANEConfig, FSVRG, FSVRGConfig, FedAvg,
+                        FedAvgConfig, build_problem, build_test_problem)
 from repro.core.baselines import majority_baseline_error, one_shot_average
 from repro.core.cocoa import CoCoAPlus
 from repro.data.synthetic import generate
 
-ALGOS = ("fsvrg", "fsvrgr", "gd", "cocoa", "fedavg", "oneshot")
+ALGOS = ("fsvrg", "fsvrgr", "gd", "dane", "cocoa", "fedavg", "oneshot")
 
 
 def optimum(prob, iters=6000, lr=2.0):
@@ -56,6 +58,9 @@ def main(argv=None):
     ap.add_argument("--scale", type=float, default=0.005)
     ap.add_argument("--rounds", type=int, default=30)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--opt-iters", type=int, default=6000,
+                    help="GD iterations for the offline OPT reference "
+                         "(lower it for smoke runs)")
     ap.add_argument("--json", default=None)
     ap.add_argument("--algo", default="all", choices=("all",) + ALGOS,
                     help="run a single comparison curve instead of all of them")
@@ -71,7 +76,7 @@ def main(argv=None):
     print(f"# K={ds.num_clients} n={ds.num_examples} d={ds.num_features} "
           f"n_k in [{ds.client_sizes.min()},{ds.client_sizes.max()}]")
 
-    w_star = optimum(prob)
+    w_star = optimum(prob, iters=args.opt_iters)
     f_star = float(prob.flat.loss(w_star))
     err_star = float(te.error_rate(w_star))
 
@@ -144,9 +149,32 @@ def main(argv=None):
         results["gd"] = {"h": h_gd, "hist": hist_gd}
         print(f"GD      (h={h_gd}): final f={hist_gd[-1]['f']:.4f} err={hist_gd[-1]['err']:.4f}")
 
-    # ---- CoCoA+ ---- #
+    # ---- DANE (engine subsystem; η/µ from the config, local lr swept) ---- #
+    if want("dane"):
+        dcfg = get_dane_config()
+
+        def run_dane(lr, rounds):
+            solver = DANE(prob, DANEConfig(
+                eta=dcfg.eta, mu=dcfg.mu, local_steps=dcfg.local_steps,
+                local_lr=lr))
+            w = jnp.zeros(prob.d)
+            hist = []
+            for r in range(rounds):
+                w = solver.round(w, jax.random.fold_in(jax.random.PRNGKey(4), r))
+                hist.append(eval_w(w))
+            return hist
+
+        hist_d, lr_d = sweep_stepsize(run_dane, prob, dcfg.local_lr_sweep,
+                                      args.rounds)
+        results["dane"] = {"local_lr": lr_d, "eta": dcfg.eta, "mu": dcfg.mu,
+                           "hist": hist_d}
+        print(f"DANE    (lr={lr_d},mu={dcfg.mu}): final f={hist_d[-1]['f']:.4f} "
+              f"err={hist_d[-1]['err']:.4f}")
+
+    # ---- CoCoA+ (engine subsystem; σ' from the config) ---- #
     if want("cocoa"):
-        solver = CoCoAPlus(prob)
+        ccfg = get_cocoa_config()
+        solver = CoCoAPlus(prob, sigma=ccfg.sigma)
         hist_c = []
         for r in range(args.rounds):
             solver.round(jax.random.PRNGKey(r))
@@ -187,7 +215,7 @@ def main(argv=None):
     f0 = float(prob.flat.loss(jnp.zeros(prob.d)))
     target = f_star + 0.1 * (f0 - f_star)
     print("\nname,rounds_to_10pct_gap,final_f,final_err")
-    for name in ("fsvrg", "fsvrgr", "gd", "cocoa", "fedavg"):
+    for name in ("fsvrg", "fsvrgr", "gd", "dane", "cocoa", "fedavg"):
         if name not in results:
             continue
         hist_n = results[name]["hist"]

@@ -8,9 +8,10 @@ import argparse
 import jax
 import jax.numpy as jnp
 
-from repro.configs import get_fedavg_config, get_logreg_config
-from repro.core import (FSVRG, FSVRGConfig, FedAvg, FedAvgConfig,
-                        build_problem, build_test_problem)
+from repro.configs import (get_cocoa_config, get_dane_config,
+                           get_fedavg_config, get_logreg_config)
+from repro.core import (DANE, DANEConfig, FSVRG, FSVRGConfig, FedAvg,
+                        FedAvgConfig, build_problem, build_test_problem)
 from repro.core.baselines import majority_baseline_error, run_gd
 from repro.core.cocoa import CoCoAPlus
 from repro.data.synthetic import generate
@@ -61,7 +62,16 @@ def main(argv=None):
           f"f={float(prob.flat.loss(w_fa)):.5f} "
           f"err={float(te.error_rate(w_fa)):.4f}")
 
-    cc = CoCoAPlus(prob)
+    dcfg = get_dane_config()
+    w_da, _ = DANE(prob, DANEConfig(eta=dcfg.eta, mu=dcfg.mu,
+                                    local_steps=dcfg.local_steps,
+                                    local_lr=dcfg.local_lr)).run(
+        jnp.zeros(prob.d), args.rounds, seed=0)
+    print(f"{'DANE (mu=%g, GD local solver)' % dcfg.mu:34s} "
+          f"f={float(prob.flat.loss(w_da)):.5f} "
+          f"err={float(te.error_rate(w_da)):.4f}")
+
+    cc = CoCoAPlus(prob, sigma=get_cocoa_config().sigma)
     for r in range(args.rounds):
         cc.round(jax.random.PRNGKey(r))
     print(f"{'CoCoA+ (sigma=K)':34s} f={float(prob.flat.loss(cc.w)):.5f} "

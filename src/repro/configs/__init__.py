@@ -39,7 +39,18 @@ def get_fedavg_config():
     return mod.CONFIG
 
 
+def get_dane_config():
+    mod = importlib.import_module("repro.configs.dane_gplus")
+    return mod.CONFIG
+
+
+def get_cocoa_config():
+    mod = importlib.import_module("repro.configs.cocoa_gplus")
+    return mod.CONFIG
+
+
 __all__ = [
     "ArchConfig", "InputShape", "MoEConfig", "INPUT_SHAPES", "SHAPES",
     "ARCH_IDS", "get_config", "get_logreg_config", "get_fedavg_config",
+    "get_dane_config", "get_cocoa_config",
 ]

@@ -1,24 +1,34 @@
 """The paper's contribution: federated optimization algorithms.
 
-  problem.py   — federated finite-sum problem (sparse logreg), bucketed clients
+  problem.py   — federated finite-sum problem (sparse logreg), bucketed
+                 clients; build_dense_problem for ridge data on the engine
   engine.py    — unified round engine: client sampling, vmap-over-bucket
-                 passes, pluggable aggregation (shared by all algorithms)
+                 passes, pluggable aggregation, per-client dual-state hook
+                 (shared by all algorithms)
   scaling.py   — S_k / A sparsity statistics (§3.6.1)
   fsvrg.py     — Algorithms 3 & 4 (the paper's method), on the engine
   fedavg.py    — Federated Averaging (1602.05629), on the engine
-  dane.py      — Algorithm 2 + the Proposition-1 DANE↔SVRG construction
-  cocoa.py     — Appendix-A Algorithms 5 & 6, Theorem 5, CoCoA+
+  dane.py      — Algorithm 2 (GD/SVRG local solvers, exact ridge) + the
+                 Proposition-1 DANE↔SVRG construction, on the engine
+  cocoa.py     — CoCoA+ and Appendix-A Algorithms 5 & 6 (Theorem 5), on the
+                 engine's dual-state hook
   baselines.py — distributed GD (engine), one-shot averaging, FedAvg wrappers
   neural.py    — FSVRG/FedAvg for neural-network pytrees over the mesh
 """
 from repro.core.problem import (ClientBucket, FederatedLogReg, LogRegProblem,
-                                build_problem, build_test_problem)
+                                build_dense_problem, build_problem,
+                                build_test_problem)
 from repro.core.engine import EngineConfig, RoundEngine
 from repro.core.fsvrg import FSVRG, FSVRGConfig, naive_fsvrg_round
 from repro.core.fedavg import FedAvg, FedAvgConfig
+from repro.core.dane import DANE, DANEConfig, DANERidge, dane_svrg_round
+from repro.core.cocoa import (CoCoAConfig, CoCoAPlus, DualMethod,
+                              PrimalMethod)
 
 __all__ = [
-    "ClientBucket", "FederatedLogReg", "LogRegProblem", "build_problem",
-    "build_test_problem", "EngineConfig", "RoundEngine",
+    "ClientBucket", "FederatedLogReg", "LogRegProblem", "build_dense_problem",
+    "build_problem", "build_test_problem", "EngineConfig", "RoundEngine",
     "FSVRG", "FSVRGConfig", "naive_fsvrg_round", "FedAvg", "FedAvgConfig",
+    "DANE", "DANEConfig", "DANERidge", "dane_svrg_round",
+    "CoCoAConfig", "CoCoAPlus", "DualMethod", "PrimalMethod",
 ]

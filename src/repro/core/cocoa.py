@@ -1,90 +1,49 @@
-"""Appendix-A methods and CoCoA+.
+"""CoCoA+ and the Appendix-A primal/dual methods, on the RoundEngine.
 
-  * Algorithm 5 (Primal Method) — quadratic-perturbation method with
-    perturbation vectors a_k^t = ∇F_k(w^t) − (η∇F_k(w^t) + g_k^t).
-  * Algorithm 6 (Dual Method) — dual block proximal gradient ascent.
-  * Theorem 5: for ridge regression the two generate identical iterates
-    under w^t = (1/λn) X α^t — checked in tests/test_equivalence.py.
-  * CoCoA+ [57] — the inexact version of Algorithm 6 (local SDCA instead of
-    an exact block solve); used in the Fig.-2 reproduction, where the paper
-    shows it converges slowly on sparse non-IID data because the safe
-    aggregation parameter σ' scales with K.
+All three algorithms carry *per-client state across rounds* — exactly the
+case the engine's :meth:`~repro.core.engine.RoundEngine.round_with_state`
+hook exists for: the client pass receives and returns its bucket's state,
+and the primal deltas flow through the ordinary aggregation path with
+``weighting="sum"`` (each delta already carries its 1/(λn) normalization,
+so the server update is the plain Σ_k of Algorithm 6 / CoCoA+).
 
-Appendix-A methods assume equal n_k (as the paper does, "for simplicity");
-CoCoA+ runs on the general bucketed sparse problem.
+  * :class:`CoCoAPlus` — CoCoA+ [arXiv:1502.03508] with γ=1 (adding) and the
+    safe σ′ = γK, on the general bucketed sparse logreg problem.  State is
+    the dual block α_k (Kb, m_pad) per bucket; the local solver is one
+    permutation pass of SDCA whose per-coordinate subproblem (from eq. 15)
+    is solved by clipped Newton — fused across the vmapped client batch by
+    the Pallas kernel :func:`repro.kernels.cocoa_sdca.cocoa_sdca_update` on
+    TPU, the identical jnp recursion elsewhere.  The paper's Fig. 2 shows it
+    converging slowly on sparse non-IID data because σ′ scales with K.
+  * :class:`PrimalMethod` — Algorithm 5: quadratic-perturbation method with
+    perturbation vectors a_k^t = ∇F_k(w^t) − (η∇F_k(w^t) + g_k^t); state is
+    g_k, updated from the aggregated w^{t+1} after the round.
+  * :class:`DualMethod` — Algorithm 6: dual block proximal gradient ascent
+    with exact block solves (eq. 19); state is α_k, and the iterate tracks
+    w^t = (1/λn) X α^t incrementally through the sum-weighted deltas.
+  * Theorem 5: for ridge regression Algorithms 5 and 6 generate identical
+    iterates under w^t = (1/λn) X α^t — checked on the engine ports in
+    tests/test_equivalence.py (both classes assume equal n_k, as the paper
+    does "for simplicity", on a :func:`build_dense_problem` layout).
+
+The pre-port list-based implementations survive verbatim in
+tests/_oracles.py and pin these ports round-by-round.
 """
 from __future__ import annotations
 
-from typing import List, Sequence, Tuple
+import dataclasses
+from typing import List, Optional
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.problem import FederatedLogReg
-
-
-# --------------------------------------------------------------------- #
-# Appendix A, ridge regression, dense per-client data  X_k: (d, m)
-# --------------------------------------------------------------------- #
-
-
-def _Fk_grad_ridge(X, y, w, lam, n, K):
-    """F_k(w) = (K/2n)||X^T w − y||² + (λ/2)||w||²  (eq. 12 normalization)."""
-    return (K / n) * (X @ (X.T @ w - y)) + lam * w
-
-
-def primal_method_init(Xs: Sequence[jax.Array], alphas0: Sequence[jax.Array],
-                       lam: float, sigma: float):
-    """Steps 3–5 of Algorithm 5. Returns (w0, g0 list, eta, mu)."""
-    K = len(Xs)
-    n = sum(int(a.shape[0]) for a in alphas0)
-    eta = K / sigma
-    mu = lam * (eta - 1.0)
-    w0 = sum(X @ a for X, a in zip(Xs, alphas0)) / (lam * n)
-    g0 = [eta * ((K / n) * (X @ a) - lam * w0) for X, a in zip(Xs, alphas0)]
-    return w0, g0, eta, mu
-
-
-def primal_method_round(Xs, ys, w, gs: List[jax.Array], lam, eta, mu):
-    """One round of Algorithm 5 (exact local solves; ridge)."""
-    K = len(Xs)
-    n = sum(int(y.shape[0]) for y in ys)
-    d = w.shape[0]
-    w_ks = []
-    for k in range(K):
-        X, y = Xs[k], ys[k]
-        # argmin F_k(w') − (∇F_k(w^t) − (η∇F_k(w^t) + g_k))ᵀ w' + µ/2||w'−w^t||²
-        b_k = (1.0 - eta) * _Fk_grad_ridge(X, y, w, lam, n, K) - gs[k]
-        # ∇F_k(w') = (K/n) X Xᵀ w' − (K/n) X y + λ w'
-        H = (K / n) * (X @ X.T) + (lam + mu) * jnp.eye(d)
-        rhs = (K / n) * (X @ y) + b_k + mu * w
-        w_ks.append(jnp.linalg.solve(H, rhs))
-    w_next = sum(w_ks) / K
-    gs_next = [gs[k] + lam * eta * (w_ks[k] - w_next) for k in range(K)]
-    return w_next, gs_next
-
-
-def dual_method_round(Xs, ys, alphas: List[jax.Array], lam, sigma):
-    """One round of Algorithm 6 (exact block solves; ridge φ_i(t)=½(t−y_i)²).
-
-    Block subproblem (19): h_k = argmin (σ/2λn)||X_k h||² + ½||h||²
-                                        − (y_k − X_kᵀw^t − α_k)ᵀ h
-    """
-    K = len(Xs)
-    n = sum(int(a.shape[0]) for a in alphas)
-    w = sum(X @ a for X, a in zip(Xs, alphas)) / (lam * n)
-    new_alphas = []
-    for k in range(K):
-        X, y, a = Xs[k], ys[k], alphas[k]
-        m = a.shape[0]
-        c = y - X.T @ w - a
-        M = (sigma / (lam * n)) * (X.T @ X) + jnp.eye(m)
-        h = jnp.linalg.solve(M, c)
-        new_alphas.append(a + h)
-    return new_alphas
+from repro.core.engine import EngineConfig, RoundEngine
+from repro.core.problem import (ClientBucket, FederatedLogReg,
+                                build_dense_problem)
 
 
 def dual_to_primal(Xs, alphas, lam):
+    """w = (1/λn) Σ_k X_k α_k for list-of-arrays dual blocks."""
     n = sum(int(a.shape[0]) for a in alphas)
     return sum(X @ a for X, a in zip(Xs, alphas)) / (lam * n)
 
@@ -94,7 +53,8 @@ def dual_to_primal(Xs, alphas, lam):
 # --------------------------------------------------------------------- #
 
 
-def _sdca_local_pass(w, alpha_b, bucket, lam, n, sigma, key):
+def _sdca_local_pass(w, alpha_b, bucket: ClientBucket, lam, n, sigma,
+                     use_kernel, key):
     """One permutation pass of SDCA on each client's local dual subproblem.
 
     For logistic loss with y∈{−1,1} we parametrize β_i = y_i α_i ∈ (0,1);
@@ -102,74 +62,227 @@ def _sdca_local_pass(w, alpha_b, bucket, lam, n, sigma, key):
 
         min_{β∈(0,1)}  m_i (β − β_old) + c_i (β − β_old)² + H(β),
         m_i = y_i x_iᵀ(w + (σ/λn) r),  c_i = σ||x_i||²/(2λn),
-        H(β) = β log β + (1−β) log(1−β),
+        H(β) = β log β + (1−β) log(1−β).
 
-    solved with clipped Newton.  r = X_k u tracks this client's own updates
-    within the round (the cross terms of the local block).
+    r = X_k u tracks each client's own updates within the round (the cross
+    terms of the local block).  The scan runs at the *bucket* level: at step
+    t every client processes the t-th coordinate of its own permutation
+    (clients are independent, so lockstep order is exactly the per-client
+    sequential order), which turns the clipped-Newton β-solve into ONE
+    (Kb,)-vector call per step — the fused Pallas kernel when
+    ``use_kernel``, the identical jnp recursion elsewhere.
     """
+    Kb = bucket.num_clients
+    m_pad = bucket.m_pad
+    d = w.shape[0]
+    keys = jax.random.split(key, Kb)
+    perms = jax.vmap(lambda ck: jax.random.permutation(ck, m_pad))(keys)
 
-    def one_client(idx, val, y, n_k, alpha_k, ck):
-        d = w.shape[0]
-        m_pad = y.shape[0]
-        perm = jax.random.permutation(ck, m_pad)
+    def coeffs_one(idx, val, y, alpha_k, r, i):
+        xi, vi, yi = idx[i], val[i], y[i]
+        beta_old = jnp.clip(yi * alpha_k[i], 1e-6, 1.0 - 1e-6)
+        xn2 = (vi * vi).sum()
+        mcoef = yi * ((vi * w[xi]).sum() + (sigma / (lam * n)) * (vi * r[xi]).sum())
+        ccoef = sigma * xn2 / (2.0 * lam * n)
+        return beta_old, mcoef, ccoef
 
-        def newton_beta(beta0, mcoef, ccoef):
-            def it(b, _):
-                gb = mcoef + 2.0 * ccoef * (b - beta0) + jnp.log(b / (1.0 - b))
-                hb = 2.0 * ccoef + 1.0 / (b * (1.0 - b))
-                return jnp.clip(b - gb / hb, 1e-6, 1.0 - 1e-6), None
-            b0 = jnp.clip(jax.nn.sigmoid(-mcoef), 1e-6, 1.0 - 1e-6)
-            b, _ = jax.lax.scan(it, b0, None, length=12)
-            return b
+    def apply_one(idx, val, y, n_k, u, r, i, beta_old, beta):
+        xi, vi, yi = idx[i], val[i], y[i]
+        valid = (i < n_k).astype(jnp.float32)
+        du = valid * yi * (beta - beta_old)
+        return u.at[i].add(du), r.at[xi].add(du * vi)
 
-        def step(carry, t):
-            u, r = carry
-            i = perm[t]
-            xi, vi, yi = idx[i], val[i], y[i]
-            valid = (i < n_k).astype(jnp.float32)
-            beta_old = yi * alpha_k[i]
-            beta_old = jnp.clip(beta_old, 1e-6, 1.0 - 1e-6)
-            xn2 = (vi * vi).sum()
-            mcoef = yi * ((vi * w[xi]).sum() + (sigma / (lam * n)) * (vi * r[xi]).sum())
-            ccoef = sigma * xn2 / (2.0 * lam * n)
-            beta = newton_beta(beta_old, mcoef, ccoef)
-            du = valid * yi * (beta - beta_old)
-            u = u.at[i].add(du)
-            r = r.at[xi].add(du * vi)
-            return (u, r), None
+    def newton_batch(beta0, mcoef, ccoef):          # all (Kb,)
+        if use_kernel:
+            from repro.kernels import ops
+            return ops.cocoa_sdca_update(beta0, mcoef, ccoef)
+        from repro.kernels import ref
+        return ref.cocoa_sdca_update_ref(beta0, mcoef, ccoef)
 
-        u0 = jnp.zeros((m_pad,))
-        r0 = jnp.zeros((d,))
-        (u, r), _ = jax.lax.scan(step, (u0, r0), jnp.arange(m_pad))
-        return u, r
+    def step(carry, t):
+        u, r = carry                               # (Kb, m_pad), (Kb, d)
+        i = perms[:, t]                            # (Kb,)
+        beta_old, mcoef, ccoef = jax.vmap(coeffs_one)(
+            bucket.idx, bucket.val, bucket.y, alpha_b, r, i)
+        beta = newton_batch(beta_old, mcoef, ccoef)
+        u, r = jax.vmap(apply_one)(bucket.idx, bucket.val, bucket.y,
+                                   bucket.n_k, u, r, i, beta_old, beta)
+        return (u, r), None
 
-    keys = jax.random.split(key, bucket.num_clients)
-    return jax.vmap(one_client)(bucket.idx, bucket.val, bucket.y,
-                                bucket.n_k, alpha_b, keys)
+    u0 = jnp.zeros((Kb, m_pad))
+    r0 = jnp.zeros((Kb, d))
+    (u, r), _ = jax.lax.scan(step, (u0, r0), jnp.arange(m_pad))
+    return u, r
+
+
+@dataclasses.dataclass(frozen=True)
+class CoCoAConfig:
+    """CoCoA+ knobs (γ is fixed at 1, the "adding" variant)."""
+
+    sigma: Optional[float] = None  # σ': None -> the safe γK
+    participation: float = 1.0     # i.i.d. per-round client participation
+    aggregator: str = "dense"      # engine aggregator: "dense" | "pallas"
+    # None -> auto: fused Pallas cocoa_sdca kernel on TPU, jnp elsewhere.
+    use_kernel: Optional[bool] = None
 
 
 class CoCoAPlus:
-    """CoCoA+ with γ=1 (adding) and safe σ' = γK by default."""
+    """CoCoA+ with γ=1 and safe σ′ = γK by default, on the engine.
 
-    def __init__(self, problem: FederatedLogReg, sigma: float | None = None):
+    Dual blocks α_k live in ``self.alphas`` (one (Kb, m_pad) array per
+    bucket) and travel through :meth:`RoundEngine.round_with_state`; the
+    per-client primal contributions X_k u_k / (λn) are the deltas, summed
+    by the engine (``weighting="sum"``) into w^{t+1} = w^t + (γ/λn) Σ_k
+    X_k u_k.  Under partial participation the engine freezes the dual
+    blocks of the clients its Bernoulli draw left out."""
+
+    def __init__(self, problem: FederatedLogReg, sigma: Optional[float] = None,
+                 cfg: CoCoAConfig = CoCoAConfig()):
+        if sigma is not None:
+            cfg = dataclasses.replace(cfg, sigma=sigma)
         self.problem = problem
-        self.sigma = float(sigma if sigma is not None else problem.num_clients)
-        self.alphas = [jnp.zeros((b.num_clients, b.m_pad)) for b in problem.buckets]
+        self.cfg = cfg
+        self.sigma = float(cfg.sigma if cfg.sigma is not None
+                           else problem.num_clients)
+        use_kernel = cfg.use_kernel
+        if use_kernel is None:
+            use_kernel = jax.default_backend() == "tpu"
         n = problem.flat.n
         lam = problem.flat.lam
+        self._scale = 1.0 / (lam * n)
+        self.alphas: List[jax.Array] = [
+            jnp.zeros((b.num_clients, b.m_pad)) for b in problem.buckets]
         self.w = jnp.zeros((problem.d,))
         self._pass = [
             jax.jit(lambda w, a, key, b=b: _sdca_local_pass(
-                w, a, b, lam, n, self.sigma, key))
+                w, a, b, lam, n, self.sigma, use_kernel, key))
             for b in problem.buckets
         ]
+        self.engine = RoundEngine(
+            problem,
+            EngineConfig(weighting="sum", participation=cfg.participation,
+                         aggregator=cfg.aggregator),
+        )
 
-    def round(self, key):
-        lam, n = self.problem.flat.lam, self.problem.flat.n
-        dw = jnp.zeros_like(self.w)
-        for bi, (b, pfn) in enumerate(zip(self.problem.buckets, self._pass)):
-            u, r = pfn(self.w, self.alphas[bi], jax.random.fold_in(key, bi))
-            self.alphas[bi] = self.alphas[bi] + u
-            dw = dw + r.sum(axis=0)
-        self.w = self.w + dw / (lam * n)
+    def round(self, key) -> jax.Array:
+        def cocoa_pass(w, bi, bucket, alpha_b, kb):
+            u, r = self._pass[bi](w, alpha_b, kb)
+            return r * self._scale, alpha_b + u
+
+        self.w, self.alphas = self.engine.round_with_state(
+            self.w, self.alphas, key, cocoa_pass)
+        return self.w
+
+    def run(self, rounds: int, seed: int = 0, callback=None):
+        key = jax.random.PRNGKey(seed)
+        history = []
+        for r in range(rounds):
+            w = self.round(jax.random.fold_in(key, r))
+            if callback is not None:
+                history.append(callback(w, r))
+        return self.w, history
+
+
+# --------------------------------------------------------------------- #
+# Appendix A, ridge regression, engine-ported (equal n_k, dense buckets)
+# --------------------------------------------------------------------- #
+
+
+def _check_equal_sizes(problem: FederatedLogReg):
+    for b in problem.buckets:
+        if int(b.n_k.min()) != int(b.n_k.max()):
+            raise ValueError("Appendix-A methods assume equal n_k")
+    if len(problem.buckets) != 1:
+        raise ValueError("Appendix-A methods assume equal n_k (one bucket)")
+
+
+class PrimalMethod:
+    """Algorithm 5 (Primal Method) with exact local solves, on the engine.
+
+    Per-client state g_k (steps 4/9) rides through ``round_with_state``:
+    the pass returns each exact subproblem solution w_k as the bucket state,
+    the engine's uniform weighting forms w^{t+1} = (1/K) Σ w_k, and step 9
+    (g_k ← g_k + λη(w_k − w^{t+1})) closes the round with the aggregate."""
+
+    def __init__(self, Xs, ys, alphas0, lam: float, sigma: float):
+        self.problem = build_dense_problem(Xs, ys, lam)
+        _check_equal_sizes(self.problem)
+        K = self.problem.num_clients
+        n = self.problem.flat.n
+        self.lam = float(lam)
+        self.eta = K / float(sigma)
+        self.mu = self.lam * (self.eta - 1.0)
+        b = self.problem.buckets[0]
+        alpha = jnp.stack([jnp.asarray(a) for a in alphas0])     # (K, m)
+        # steps 3-5: w^0 = (1/λn) Σ X_k α_k;  g_k^0 = η((K/n) X_k α_k − λw^0)
+        xa = jnp.einsum("kmd,km->kd", b.val, alpha)              # X_k α_k
+        self.w = xa.sum(axis=0) / (self.lam * n)
+        self.gs = [self.eta * ((K / n) * xa - self.lam * self.w)]
+        self.engine = RoundEngine(self.problem,
+                                  EngineConfig(weighting="uniform"))
+
+    def round(self, key: Optional[jax.Array] = None) -> jax.Array:
+        key = jax.random.PRNGKey(0) if key is None else key
+        lam, eta, mu = self.lam, self.eta, self.mu
+        K, n = self.problem.num_clients, self.problem.flat.n
+
+        def primal_pass(w, bi, bucket, gs_b, kb):
+            def one_client(val, y, g_k):
+                d = w.shape[0]
+                X = val.T
+                # argmin F_k(w') − (∇F_k(w^t) − (η∇F_k(w^t) + g_k))ᵀw'
+                #        + µ/2||w'−w^t||²,  F_k as in eq. 12 ((K/n)-normalized)
+                Fk = (K / n) * (X @ (X.T @ w - y)) + lam * w
+                b_k = (1.0 - eta) * Fk - g_k
+                H = (K / n) * (X @ X.T) + (lam + mu) * jnp.eye(d, dtype=val.dtype)
+                rhs = (K / n) * (X @ y) + b_k + mu * w
+                wk = jnp.linalg.solve(H, rhs)
+                return wk - w, wk
+
+            return jax.vmap(one_client)(bucket.val, bucket.y, gs_b)
+
+        w_next, wks = self.engine.round_with_state(self.w, self.gs, key,
+                                                   primal_pass)
+        self.gs = [g + lam * eta * (wk - w_next)
+                   for g, wk in zip(self.gs, wks)]
+        self.w = w_next
+        return w_next
+
+
+class DualMethod:
+    """Algorithm 6 (Dual Method) with exact block solves, on the engine.
+
+    Block subproblem (19): h_k = argmin (σ/2λn)||X_k h||² + ½||h||²
+                                        − (y_k − X_kᵀw^t − α_k)ᵀ h
+    State is the dual block α_k; the pass returns X_k h_k/(λn) as the delta,
+    so the engine's plain sum tracks w^{t+1} = (1/λn) X α^{t+1} exactly."""
+
+    def __init__(self, Xs, ys, alphas0, lam: float, sigma: float):
+        self.problem = build_dense_problem(Xs, ys, lam)
+        _check_equal_sizes(self.problem)
+        self.lam, self.sigma = float(lam), float(sigma)
+        b = self.problem.buckets[0]
+        self.alphas = [jnp.stack([jnp.asarray(a) for a in alphas0])]  # (K, m)
+        n = self.problem.flat.n
+        self.w = jnp.einsum("kmd,km->d", b.val, self.alphas[0]) / (self.lam * n)
+        self.engine = RoundEngine(self.problem, EngineConfig(weighting="sum"))
+
+    def round(self, key: Optional[jax.Array] = None) -> jax.Array:
+        key = jax.random.PRNGKey(0) if key is None else key
+        lam, sigma = self.lam, self.sigma
+        n = self.problem.flat.n
+
+        def dual_pass(w, bi, bucket, alpha_b, kb):
+            def one_client(val, y, a):
+                X = val.T
+                m = a.shape[0]
+                c = y - X.T @ w - a
+                M = (sigma / (lam * n)) * (X.T @ X) + jnp.eye(m, dtype=val.dtype)
+                h = jnp.linalg.solve(M, c)
+                return (X @ h) / (lam * n), a + h
+
+            return jax.vmap(one_client)(bucket.val, bucket.y, alpha_b)
+
+        self.w, self.alphas = self.engine.round_with_state(
+            self.w, self.alphas, key, dual_pass)
         return self.w

@@ -1,33 +1,48 @@
-"""DANE — Distributed Approximate Newton (Algorithm 2), and the Prop.-1
-variant (DANE with a single epoch of SVRG as the local solver).
+"""DANE — Distributed Approximate Newton (Algorithm 2) on the RoundEngine.
 
-Local subproblem (10):
+Local subproblem (eq. 10):
+
     w_k = argmin_w F_k(w) − (∇F_k(w^t) − η∇f(w^t))ᵀ w + (µ/2)||w − w^t||²
 
-We provide
-  * an exact solver for ridge regression (d×d linear solve) — used for the
-    convergence comparisons and the Appendix-A tests,
-  * an inexact GD local solver for logistic regression,
-  * :func:`dane_svrg_round` — the Prop.-1 construction: the subproblem is
-    built explicitly (linear perturbation and all) and solved with one epoch
-    of generic SVRG.  Proposition 1 says its iterates are *identical* to
-    naive FSVRG (Algorithm 3) given the same sample sequence; the test
-    suite checks this to float tolerance against an independently coded
-    Algorithm 3.
+Every variant is expressed as a :data:`~repro.core.engine.ClientPassFn`
+returning per-client deltas ``w_k − w^t``; the shared
+:class:`~repro.core.engine.RoundEngine` owns client sampling and the
+(uniform, per the paper's "averages the solutions" step) aggregation:
+
+  * :class:`DANE` — sparse L2-logistic regression (the Fig.-2 problem), with
+    two inexact local solvers: ``local_solver="gd"`` runs ``local_steps``
+    gradient steps on the subproblem (each step the fused Pallas
+    :func:`repro.kernels.dane_update.dane_update` on TPU, the identical jnp
+    expression elsewhere); ``local_solver="svrg"`` is the Proposition-1
+    construction — one epoch of generic SVRG on the *explicitly
+    materialized* subproblem (linear perturbation and all), whose iterates
+    Prop. 1 proves identical to naive Federated SVRG (Algorithm 3) given
+    the same sample sequence.  tests/test_equivalence.py checks this to
+    float tolerance against the independently coded Algorithm 3.
+  * :class:`DANERidge` — the exact solver for ridge regression (per-client
+    d×d linear solves, vmapped over each bucket of a
+    :func:`~repro.core.problem.build_dense_problem` layout); used for the
+    §3.4 property tests (one-round solve on identical data, Property A
+    fixed point) and pinned against the pre-port list implementation in
+    tests/test_dane_cocoa_engine.py.
+
+:func:`dane_svrg_round` keeps the original one-call entry point for the
+Prop.-1 equivalence test.
 """
 from __future__ import annotations
 
-from typing import List, Sequence
+import dataclasses
+import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.problem import FederatedLogReg
+from repro.core.engine import EngineConfig, RoundEngine
+from repro.core.problem import (ClientBucket, FederatedLogReg,
+                                build_dense_problem)
 
-
-# --------------------------------------------------------------------- #
-# exact DANE for ridge regression (dense per-client data)
-# --------------------------------------------------------------------- #
+_SOLVERS = ("gd", "svrg")
 
 
 def ridge_grad(X, y, w, lam):
@@ -36,77 +51,70 @@ def ridge_grad(X, y, w, lam):
     return X @ (X.T @ w - y) / m + lam * w
 
 
-def dane_round_ridge(Xs: Sequence[jax.Array], ys: Sequence[jax.Array], w, lam,
-                     eta: float = 1.0, mu: float = 0.0):
-    """One exact DANE round on ridge. Xs[k]: (d, n_k)."""
-    K = len(Xs)
-    n = sum(int(y.shape[0]) for y in ys)
-    # ∇f(w^t) = Σ (n_k/n) ∇F_k(w^t)
-    full_grad = sum((ys[k].shape[0] / n) * ridge_grad(Xs[k], ys[k], w, lam)
-                    for k in range(K))
-    d = w.shape[0]
-    w_next = jnp.zeros_like(w)
-    for k in range(K):
-        X, y = Xs[k], ys[k]
-        m = y.shape[0]
-        a_k = ridge_grad(X, y, w, lam) - eta * full_grad
-        # (H_k + µI) w = c_k + a_k + µ w^t,  H_k = XXᵀ/m + λI, c_k = Xy/m
-        H = X @ X.T / m + (lam + mu) * jnp.eye(d)
-        rhs = X @ y / m + a_k + mu * w
-        w_next = w_next + jnp.linalg.solve(H, rhs) / K
-    return w_next
+@dataclasses.dataclass(frozen=True)
+class DANEConfig:
+    """Knobs of Algorithm 2 and its local solvers."""
+
+    eta: float = 1.0               # η: full-gradient weight in a_k (eq. 10)
+    mu: float = 0.0                # µ: prox coefficient (eq. 10)
+    local_solver: str = "gd"       # "gd" | "svrg" (the Prop.-1 construction)
+    local_steps: int = 50          # GD solver: iterations on the subproblem
+    local_lr: float = 1.0          # GD solver: stepsize
+    svrg_stepsize: float = 0.05    # SVRG solver: stepsize h
+    svrg_steps: int = 25           # SVRG solver: samples m per epoch
+    participation: float = 1.0     # i.i.d. per-round client participation
+    # None -> auto: fused Pallas dane_update kernel on TPU, jnp elsewhere.
+    use_kernel: Optional[bool] = None
+
+    def __post_init__(self):
+        if self.local_solver not in _SOLVERS:
+            raise ValueError(f"local_solver must be one of {_SOLVERS}")
 
 
-# --------------------------------------------------------------------- #
-# inexact DANE for logistic regression (GD local solver)
-# --------------------------------------------------------------------- #
+def _dane_gd_pass(w0, full_grad, bucket: ClientBucket, lam, cfg: DANEConfig,
+                  use_kernel: bool, key):
+    """vmapped over clients: ``local_steps`` GD steps on subproblem (10).
+    Deterministic — ``key`` is part of the ClientPassFn signature only.
+    Returns (Kb, d) client deltas w_k − w0."""
+    del key
+    lr, eta, mu = cfg.local_lr, cfg.eta, cfg.mu
+
+    def one_client(idx, val, y, n_k):
+        d = w0.shape[0]
+        nkf = jnp.maximum(n_k.astype(jnp.float32), 1.0)
+        valid = (jnp.arange(y.shape[0]) < n_k).astype(jnp.float32)
+
+        def data_grad(wk):
+            """Sparse data part of ∇F_k; the dense λ·wk part is fused into
+            the update step."""
+            z = y * (val * wk[idx]).sum(axis=1)
+            gs = -y * jax.nn.sigmoid(-y * z) * valid / nkf
+            return jnp.zeros((d,)).at[idx].add(gs[:, None] * val)
+
+        a_k = data_grad(w0) + lam * w0 - eta * full_grad   # ∇F_k(w^t) − η∇f(w^t)
+
+        def gd_step(wk, _):
+            g = data_grad(wk)
+            if use_kernel:
+                from repro.kernels import ops
+                wk = ops.dane_update(wk, g, a_k, w0, lr, lam, mu)
+            else:
+                wk = ((1.0 - lr * (lam + mu)) * wk - lr * g + lr * a_k
+                      + lr * mu * w0)
+            return wk, None
+
+        wk, _ = jax.lax.scan(gd_step, w0, None, length=cfg.local_steps)
+        return wk - w0
+
+    return jax.vmap(one_client)(bucket.idx, bucket.val, bucket.y, bucket.n_k)
 
 
-def dane_round_logreg_gd(problem: FederatedLogReg, w, *, eta: float = 1.0,
-                         mu: float = 0.0, local_steps: int = 50,
-                         local_lr: float = 1.0):
-    """DANE with a GD local solver, on the bucketed sparse problem."""
-    flat = problem.flat
-    full_grad = flat.grad(w)
-    lam = flat.lam
-    agg = jnp.zeros_like(w)
-    wi = 0
-    for b in problem.buckets:
+def _dane_svrg_pass(w0, full_grad, bucket: ClientBucket, lam, cfg: DANEConfig,
+                    key):
+    """Proposition 1: solve subproblem (10) *as a subproblem* (η=1, µ=0)
+    with one epoch of generic SVRG.  Returns (Kb, d) deltas w_k − w0.
 
-        def one_client(idx, val, y, n_k):
-            d = w.shape[0]
-            nkf = jnp.maximum(n_k.astype(jnp.float32), 1.0)
-            valid = (jnp.arange(y.shape[0]) < n_k).astype(jnp.float32)
-
-            def Fk_grad(wk):
-                z = y * (val * wk[idx]).sum(axis=1)
-                gs = -y * jax.nn.sigmoid(-y * z) * valid / nkf
-                return jnp.zeros((d,)).at[idx].add(gs[:, None] * val) + lam * wk
-
-            a_k = Fk_grad(w) - eta * full_grad
-
-            def gd_step(wk, _):
-                g = Fk_grad(wk) - a_k + mu * (wk - w)
-                return wk - local_lr * g, None
-
-            wk, _ = jax.lax.scan(gd_step, w, None, length=local_steps)
-            return wk
-
-        wks = jax.vmap(one_client)(b.idx, b.val, b.y, b.n_k)   # (Kb, d)
-        agg = agg + wks.sum(axis=0)
-        wi += b.num_clients
-    return agg / problem.num_clients
-
-
-# --------------------------------------------------------------------- #
-# Proposition 1: DANE(η=1, µ=0) + one SVRG epoch as the local solver
-# --------------------------------------------------------------------- #
-
-
-def dane_svrg_round(problem: FederatedLogReg, w, key, stepsize: float, m: int):
-    """Solve the DANE subproblem *as a subproblem* with one SVRG epoch.
-
-    The SVRG epoch on G_k(w') = F_k(w') − a_kᵀw' (µ=0, η=1) starting at w^t:
+    The SVRG epoch on G_k(w') = F_k(w') − a_kᵀw' starting at w^t:
       full gradient of G_k at anchor w^t is ∇F_k(w^t) − a_k = ∇f(w^t)
       (no extra pass needed — exactly the observation in §3.5);
       stochastic update uses ∇g_i(w') − ∇g_i(w^t) + ∇G_k(w^t), where
@@ -115,46 +123,140 @@ def dane_svrg_round(problem: FederatedLogReg, w, key, stepsize: float, m: int):
       linear term explicitly* so the equivalence with Algorithm 3 is a real
       test, not a tautology.
     """
-    flat = problem.flat
-    full_grad = flat.grad(w)
-    lam = flat.lam
-    agg = jnp.zeros_like(w)
-    wi = 0
-    for b in problem.buckets:
-        kb = jax.random.fold_in(key, wi)
+    stepsize, m = cfg.svrg_stepsize, cfg.svrg_steps
 
-        def one_client(idx, val, y, n_k, ck):
-            d = w.shape[0]
-            nkf = jnp.maximum(n_k.astype(jnp.float32), 1.0)
-            valid_rows = (jnp.arange(y.shape[0]) < n_k).astype(jnp.float32)
+    def one_client(idx, val, y, n_k, ck):
+        d = w0.shape[0]
+        nkf = jnp.maximum(n_k.astype(jnp.float32), 1.0)
+        valid_rows = (jnp.arange(y.shape[0]) < n_k).astype(jnp.float32)
 
-            def Fk_grad(wk):
-                z = y * (val * wk[idx]).sum(axis=1)
-                gs = -y * jax.nn.sigmoid(-y * z) * valid_rows / nkf
-                return jnp.zeros((d,)).at[idx].add(gs[:, None] * val) + lam * wk
+        def Fk_grad(wk):
+            z = y * (val * wk[idx]).sum(axis=1)
+            gs = -y * jax.nn.sigmoid(-y * z) * valid_rows / nkf
+            return jnp.zeros((d,)).at[idx].add(gs[:, None] * val) + lam * wk
 
-            a_k = Fk_grad(w) - full_grad           # η = 1
-            G_anchor_grad = Fk_grad(w) - a_k       # = ∇f(w^t), materialized
+        a_k = Fk_grad(w0) - full_grad          # η = 1
+        G_anchor_grad = Fk_grad(w0) - a_k      # = ∇f(w^t), materialized
 
-            def fi_grad(wk, i):
-                xi, vi, yi = idx[i], val[i], y[i]
-                z = (vi * wk[xi]).sum()
-                gs = -yi * jax.nn.sigmoid(-yi * z)
-                return jnp.zeros((d,)).at[xi].add(gs * vi) + lam * wk
+        def fi_grad(wk, i):
+            xi, vi, yi = idx[i], val[i], y[i]
+            z = (vi * wk[xi]).sum()
+            gs = -yi * jax.nn.sigmoid(-yi * z)
+            return jnp.zeros((d,)).at[xi].add(gs * vi) + lam * wk
 
-            samples = jax.random.randint(ck, (m,), 0, jnp.maximum(n_k, 1))
+        samples = jax.random.randint(ck, (m,), 0, jnp.maximum(n_k, 1))
 
-            def step(wk, i):
-                gi_new = fi_grad(wk, i) - a_k      # ∇g_i(w')
-                gi_old = fi_grad(w, i) - a_k       # ∇g_i(w^t)
-                wk = wk - stepsize * (gi_new - gi_old + G_anchor_grad)
-                return wk, None
+        def step(wk, i):
+            gi_new = fi_grad(wk, i) - a_k      # ∇g_i(w')
+            gi_old = fi_grad(w0, i) - a_k      # ∇g_i(w^t)
+            wk = wk - stepsize * (gi_new - gi_old + G_anchor_grad)
+            return wk, None
 
-            wk, _ = jax.lax.scan(step, w, samples)
-            return wk - w
+        wk, _ = jax.lax.scan(step, w0, samples)
+        return wk - w0
 
-        keys = jax.random.split(kb, b.num_clients)
-        deltas = jax.vmap(one_client)(b.idx, b.val, b.y, b.n_k, keys)
-        agg = agg + deltas.sum(axis=0)
-        wi += b.num_clients
-    return w + agg / problem.num_clients
+    keys = jax.random.split(key, bucket.num_clients)
+    return jax.vmap(one_client)(bucket.idx, bucket.val, bucket.y, bucket.n_k,
+                                keys)
+
+
+class DANE:
+    """Stateful driver mirroring :class:`repro.core.fsvrg.FSVRG`: per-round
+    full gradient (1 extra communication, as in Alg. 2 step 1) closed over
+    the client pass; sampling/aggregation on the shared engine with uniform
+    1/K weighting (Alg. 2 step 3: "averages the solutions")."""
+
+    def __init__(self, problem: FederatedLogReg, cfg: DANEConfig = DANEConfig()):
+        self.problem = problem
+        self.cfg = cfg
+        use_kernel = cfg.use_kernel
+        if use_kernel is None:
+            use_kernel = jax.default_backend() == "tpu"
+        lam = problem.flat.lam
+        if cfg.local_solver == "gd":
+            self._passes = [
+                jax.jit(functools.partial(_dane_gd_pass, bucket=b, lam=lam,
+                                          cfg=cfg, use_kernel=use_kernel))
+                for b in problem.buckets
+            ]
+        else:
+            self._passes = [
+                jax.jit(functools.partial(_dane_svrg_pass, bucket=b, lam=lam,
+                                          cfg=cfg))
+                for b in problem.buckets
+            ]
+        self.engine = RoundEngine(
+            problem,
+            EngineConfig(participation=cfg.participation, weighting="uniform"),
+        )
+
+    def round(self, w: jax.Array, key: jax.Array) -> jax.Array:
+        full_grad = self.problem.flat.grad(w)
+
+        def dane_pass(w, bi, bucket, kb):
+            return self._passes[bi](w, full_grad, key=kb)
+
+        return self.engine.round(w, key, dane_pass)
+
+    def run(self, w0: jax.Array, rounds: int, seed: int = 0, callback=None):
+        w = w0
+        key = jax.random.PRNGKey(seed)
+        history = []
+        for r in range(rounds):
+            w = self.round(w, jax.random.fold_in(key, r))
+            if callback is not None:
+                history.append(callback(w, r))
+        return w, history
+
+
+def dane_svrg_round(problem: FederatedLogReg, w, key, stepsize: float, m: int):
+    """One Prop.-1 round (DANE η=1, µ=0, one SVRG epoch as local solver) —
+    the original entry point, now a thin wrapper over the engine port."""
+    cfg = DANEConfig(eta=1.0, mu=0.0, local_solver="svrg",
+                     svrg_stepsize=stepsize, svrg_steps=m)
+    return DANE(problem, cfg).round(w, key)
+
+
+class DANERidge:
+    """Exact DANE for ridge regression (d×d local solves) on the engine.
+
+    F_k(w) = 1/(2 n_k)||X_kᵀw − y_k||² + (λ/2)||w||²; subproblem (10) is the
+    linear system (H_k + µI) w = c_k + a_k + µw^t with H_k = X_kX_kᵀ/n_k + λI
+    and c_k = X_k y_k / n_k, solved exactly per client (vmapped over each
+    bucket) and uniformly averaged by the engine."""
+
+    def __init__(self, Xs, ys, lam: float, *, eta: float = 1.0,
+                 mu: float = 0.0):
+        self.problem = build_dense_problem(Xs, ys, lam)
+        self.lam, self.eta, self.mu = float(lam), float(eta), float(mu)
+        self.engine = RoundEngine(self.problem,
+                                  EngineConfig(weighting="uniform"))
+
+    def full_grad(self, w: jax.Array) -> jax.Array:
+        """∇f(w) = (1/n) Σ_k X_k (X_kᵀ w − y_k) + λw, from the buckets."""
+        n = self.problem.flat.n
+        g = self.lam * w
+        for b in self.problem.buckets:
+            resid = jnp.einsum("kmd,d->km", b.val, w) - b.y
+            g = g + jnp.einsum("kmd,km->d", b.val, resid) / n
+        return g
+
+    def round(self, w: jax.Array, key: Optional[jax.Array] = None) -> jax.Array:
+        key = jax.random.PRNGKey(0) if key is None else key
+        fg = self.full_grad(w)
+        lam, eta, mu = self.lam, self.eta, self.mu
+
+        def ridge_pass(w, bi, bucket, kb):
+            def one_client(val, y, n_k):
+                d = w.shape[0]
+                X = val.T                                  # (d, m)
+                m = jnp.maximum(n_k, 1).astype(val.dtype)
+                grad_k = X @ (X.T @ w - y) / m + lam * w
+                a_k = grad_k - eta * fg
+                H = X @ X.T / m + (lam + mu) * jnp.eye(d, dtype=val.dtype)
+                rhs = X @ y / m + a_k + mu * w
+                return jnp.linalg.solve(H, rhs) - w
+
+            return jax.vmap(one_client)(bucket.val, bucket.y, bucket.n_k)
+
+        return self.engine.round(w, key, ridge_pass)

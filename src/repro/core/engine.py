@@ -16,23 +16,35 @@ hand-rolling the loop (the pre-refactor state: four divergent copies).
 
 Aggregation is pluggable:
 
-  * ``weighting``      — ``"nk"`` (n_k/n, the paper's mod. 2) or ``"uniform"``
+  * ``weighting``      — ``"nk"`` (n_k/n, the paper's mod. 2), ``"uniform"``
+                          (1/K), or ``"sum"`` (weight 1 per client — the plain
+                          Σ_k used by dual methods, where each delta already
+                          carries its own normalization)
   * ``server_scaling`` — ``"none"`` or ``"diag"`` (A = Diag(K/ω), mod. 4)
   * ``aggregator``     — ``"dense"`` (eager jnp weighted sum, the reference
                           path) or ``"pallas"`` (one HBM pass over the stacked
                           client deltas via ``kernels.scaled_aggregate``)
 
+Algorithms whose clients carry *auxiliary per-client state* across rounds —
+CoCoA+'s dual blocks α_k, the Primal Method's perturbation vectors g_k —
+use :meth:`RoundEngine.round_with_state`: the client pass receives and
+returns the bucket's state alongside the deltas, and under partial
+participation the engine freezes the state of exactly the clients whose
+aggregation weight the same Bernoulli draw zeroed.
+
 Partial participation samples clients i.i.d. with probability
 ``participation`` per round and reweights the aggregate by
 (expected mass / realized mass) so the update direction stays unbiased —
 the deployment reality the paper motivates in §1.2 (devices participate
-only when charging / on wi-fi).
+only when charging / on wi-fi).  ``weighting="sum"`` is exempt from the
+reweighting: dual methods need the plain sum of the participants' deltas,
+matching their frozen dual blocks exactly.
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Callable, List, Optional, Sequence
+from typing import Any, Callable, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -42,7 +54,12 @@ from repro.core.problem import ClientBucket, FederatedLogReg
 #: client_pass(w, bucket_index, bucket, key) -> (Kb, d) deltas w_k - w
 ClientPassFn = Callable[[jax.Array, int, ClientBucket, jax.Array], jax.Array]
 
-_WEIGHTINGS = ("nk", "uniform")
+#: dual_pass(w, bucket_index, bucket, state_b, key) -> (deltas, new_state_b);
+#: state_b is any pytree of arrays with a leading client axis (Kb, ...)
+DualClientPassFn = Callable[
+    [jax.Array, int, ClientBucket, Any, jax.Array], Tuple[jax.Array, Any]]
+
+_WEIGHTINGS = ("nk", "uniform", "sum")
 _SCALINGS = ("none", "diag")
 _AGGREGATORS = ("dense", "pallas")
 
@@ -52,7 +69,7 @@ class EngineConfig:
     """Round-scheduling knobs shared by every federated algorithm."""
 
     participation: float = 1.0     # i.i.d. per-round client participation prob
-    weighting: str = "nk"          # "nk" (n_k/n) | "uniform" (1/K)
+    weighting: str = "nk"          # "nk" (n_k/n) | "uniform" (1/K) | "sum" (1)
     server_scaling: str = "none"   # "none" | "diag" (apply a_diag coordinatewise)
     aggregator: str = "dense"      # "dense" | "pallas" (scaled_aggregate kernel)
 
@@ -91,6 +108,8 @@ class RoundEngine:
         """Aggregation weights for the bucket whose first client is ``wi``."""
         if self.cfg.weighting == "uniform":
             return jnp.full((num_clients,), 1.0 / self.problem.num_clients)
+        if self.cfg.weighting == "sum":
+            return jnp.ones((num_clients,))
         return self.problem.client_weights[wi : wi + num_clients]
 
     def participation_mask(self, bucket_key: jax.Array, num_clients: int) -> jax.Array:
@@ -132,8 +151,14 @@ class RoundEngine:
                 agg = agg + (wts[:, None] * deltas).sum(axis=0)
             wi += b.num_clients
 
+        # Reweighting by expected/realized mass keeps the *average* direction
+        # unbiased; a "sum" aggregation must stay the plain partial sum — for
+        # dual methods each participant's delta enters exactly once so the
+        # primal iterate keeps tracking the (frozen-for-non-participants)
+        # dual blocks, w = (1/λn)Xα.
+        reweight = cfg.participation < 1.0 and cfg.weighting != "sum"
         scale = expected_mass / jnp.maximum(total_mass, 1e-9) \
-            if cfg.participation < 1.0 else None
+            if reweight else None
 
         if pallas:
             from repro.kernels import ops
@@ -166,6 +191,41 @@ class RoundEngine:
             deltas.append(client_pass(w, bi, b, kb))
             wi += b.num_clients
         return self.aggregate(w, deltas, key)
+
+    def round_with_state(self, w: jax.Array, states: Sequence[Any],
+                         key: jax.Array, client_pass: DualClientPassFn
+                         ) -> Tuple[jax.Array, List[Any]]:
+        """:meth:`round` for algorithms with per-client auxiliary state.
+
+        ``states[i]`` is bucket i's state — any pytree of arrays whose leading
+        axis is the bucket's client axis (e.g. CoCoA+'s dual blocks α_k of
+        shape (Kb, m_pad), or the Primal Method's g_k of shape (Kb, d)).  The
+        pass receives it alongside the bucket and returns the updated state
+        with the deltas; deltas flow through the same :meth:`aggregate` path
+        (weighting/scaling/participation) as stateless rounds.
+
+        Under partial participation, a client whose aggregation weight is
+        zeroed by the round's Bernoulli draw also keeps its previous state —
+        the draw is re-derived from the same ``fold_in`` chain that
+        :meth:`aggregate` uses, so primal and dual views never diverge.
+        """
+        deltas: List[jax.Array] = []
+        new_states: List[Any] = []
+        wi = 0
+        for bi, b in enumerate(self.problem.buckets):
+            kb = jax.random.fold_in(key, wi)
+            d_b, s_b = client_pass(w, bi, b, states[bi], kb)
+            if self.cfg.participation < 1.0:
+                sel = self.participation_mask(kb, b.num_clients)
+                s_b = jax.tree_util.tree_map(
+                    lambda new, old: jnp.where(
+                        sel.reshape((b.num_clients,) + (1,) * (new.ndim - 1))
+                        > 0, new, old),
+                    s_b, states[bi])
+            deltas.append(d_b)
+            new_states.append(s_b)
+            wi += b.num_clients
+        return self.aggregate(w, deltas, key), new_states
 
     def run(self, w0: jax.Array, rounds: int, client_pass: ClientPassFn,
             seed: int = 0, callback=None):

@@ -129,6 +129,53 @@ def build_problem(ds, lam: float | None = None) -> FederatedLogReg:
     )
 
 
+def build_dense_problem(Xs, ys, lam: float) -> FederatedLogReg:
+    """Dense per-client data (X_k: (d, m_k), y_k: (m_k,)) as a bucketed
+    :class:`FederatedLogReg`, so the ridge algorithms (DANERidge and the
+    Appendix-A primal/dual methods) run on the same :class:`RoundEngine`
+    layout as the sparse logreg ones.
+
+    Each example row stores its *dense* feature vector (idx = arange(d),
+    val = x_i) — the fixed-nnz sparse format degenerates to dense.  Clients
+    are grouped into one bucket per distinct m_k (stable, so equal-size
+    clients keep their input order), and every client in a bucket has
+    exactly m_k rows — no padding.  The flat view's loss/grad are logistic
+    and are NOT meaningful for ridge data — ridge algorithms use only the
+    bucket layout, ``client_weights``, and ``flat.n``/``flat.lam``.
+    """
+    d = int(Xs[0].shape[0])
+    sizes = [int(y.shape[0]) for y in ys]
+    n = sum(sizes)
+    dtype = jnp.result_type(*[X.dtype for X in Xs])
+
+    order = sorted(range(len(Xs)), key=lambda k: sizes[k])
+    buckets: List[ClientBucket] = []
+    weights: List[float] = []
+    i = 0
+    while i < len(order):
+        members = [k for k in order[i:] if sizes[k] == sizes[order[i]]]
+        i += len(members)
+        m = sizes[members[0]]
+        bi = jnp.tile(jnp.arange(d, dtype=jnp.int32), (len(members), m, 1))
+        bv = jnp.stack([jnp.asarray(Xs[k], dtype).T for k in members])
+        by = jnp.stack([jnp.asarray(ys[k], dtype) for k in members])
+        nk = jnp.full((len(members),), m, jnp.int32)
+        weights.extend(sizes[k] / n for k in members)
+        buckets.append(ClientBucket(bi, bv, by, nk))
+
+    flat = LogRegProblem(
+        idx=jnp.tile(jnp.arange(d, dtype=jnp.int32), (n, 1)),
+        val=jnp.concatenate([jnp.asarray(X, dtype).T for X in Xs], axis=0),
+        y=jnp.concatenate([jnp.asarray(y, dtype) for y in ys]),
+        lam=float(lam), num_features=d,
+    )
+    return FederatedLogReg(
+        flat=flat, buckets=buckets,
+        client_weights=jnp.asarray(np.array(weights, np.float32)),
+        num_clients=len(Xs),
+    )
+
+
 def build_test_problem(ds, lam: float | None = None) -> LogRegProblem:
     n = ds.num_examples
     lam = (1.0 / n) if lam is None else lam

@@ -8,6 +8,8 @@ from __future__ import annotations
 
 import jax
 
+from repro.kernels.cocoa_sdca import cocoa_sdca_update as _cocoa_sdca_update
+from repro.kernels.dane_update import dane_update as _dane_update
 from repro.kernels.fedavg_update import fedavg_update as _fedavg_update
 from repro.kernels.fsvrg_update import fsvrg_update as _fsvrg_update
 from repro.kernels.scaled_aggregate import scaled_aggregate as _scaled_aggregate
@@ -26,6 +28,16 @@ def fsvrg_update(w, s, g_new, g_old, g_bar, h, **kw):
 def fedavg_update(w, g, h, lam, **kw):
     kw.setdefault("interpret", not _on_tpu())
     return _fedavg_update(w, g, h, lam, **kw)
+
+
+def dane_update(w, g, a, w_t, lr, lam, mu, **kw):
+    kw.setdefault("interpret", not _on_tpu())
+    return _dane_update(w, g, a, w_t, lr, lam, mu, **kw)
+
+
+def cocoa_sdca_update(beta0, mcoef, ccoef, **kw):
+    kw.setdefault("interpret", not _on_tpu())
+    return _cocoa_sdca_update(beta0, mcoef, ccoef, **kw)
 
 
 def scaled_aggregate(w_t, w_ks, weights, a_diag, **kw):

@@ -1,6 +1,7 @@
 """Pure-jnp oracles for the Pallas kernels (the allclose reference)."""
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 
 
@@ -18,6 +19,40 @@ def fedavg_update_ref(w, g, h, lam):
     lam = jnp.asarray(lam, jnp.float32)
     out = (1.0 - h * lam) * w.astype(jnp.float32) - h * g.astype(jnp.float32)
     return out.astype(w.dtype)
+
+
+def dane_update_ref(w, g, a, w_t, lr, lam, mu):
+    """(1 − lr(λ+µ))·w − lr·g + lr·a + lr·µ·w_t, computed in f32, cast back."""
+    lr = jnp.asarray(lr, jnp.float32)
+    lam = jnp.asarray(lam, jnp.float32)
+    mu = jnp.asarray(mu, jnp.float32)
+    out = ((1.0 - lr * (lam + mu)) * w.astype(jnp.float32)
+           - lr * g.astype(jnp.float32) + lr * a.astype(jnp.float32)
+           + lr * mu * w_t.astype(jnp.float32))
+    return out.astype(w.dtype)
+
+
+def cocoa_sdca_update_ref(beta0, mcoef, ccoef, newton_iters: int = 12):
+    """Clipped-Newton solve of the per-coordinate SDCA dual subproblem
+    min_β m(β−β₀) + c(β−β₀)² + β log β + (1−β)log(1−β), in f32.
+
+    Also the jnp fallback path of ``repro.core.cocoa._sdca_local_pass``;
+    the Newton recursion is a rolled ``fori_loop`` on purpose — a
+    Python-unrolled loop embedded in the SDCA scan body blows XLA CPU
+    compile time up by two orders of magnitude."""
+    eps = 1e-6
+    b0 = beta0.astype(jnp.float32)
+    m = mcoef.astype(jnp.float32)
+    c = ccoef.astype(jnp.float32)
+
+    def it(_, b):
+        gb = m + 2.0 * c * (b - b0) + jnp.log(b / (1.0 - b))
+        hb = 2.0 * c + 1.0 / (b * (1.0 - b))
+        return jnp.clip(b - gb / hb, eps, 1.0 - eps)
+
+    b = jnp.clip(jax.nn.sigmoid(-m), eps, 1.0 - eps)
+    b = jax.lax.fori_loop(0, newton_iters, it, b)
+    return b.astype(beta0.dtype)
 
 
 def scaled_aggregate_ref(w_t, w_ks, weights, a_diag):

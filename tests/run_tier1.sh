@@ -3,4 +3,16 @@
 # pytest, e.g.:  tests/run_tier1.sh -m "not slow"
 set -e
 cd "$(dirname "$0")/.."
-PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" exec python -m pytest -x -q "$@"
+PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+export PYTHONPATH
+
+# Collection guard: a collection error must fail the run loudly on its own —
+# the seed suite's hypothesis ImportError masked two real test failures.
+python -m pytest --collect-only -q > /dev/null
+
+# Benchmark smoke: the fig2 --algo wiring must run end-to-end (tiny config,
+# 2 rounds, truncated OPT) so engine/benchmark plumbing can't rot silently.
+python benchmarks/fig2_convergence.py --algo dane --rounds 2 --scale 0.001 \
+    --opt-iters 50 > /dev/null
+
+exec python -m pytest -x -q "$@"

@@ -140,6 +140,60 @@ def test_distributed_gd_on_engine_matches_flat_gd(tiny_problem):
                                    rtol=1e-5, atol=1e-6)
 
 
+def test_sum_weighting_is_plain_delta_sum(small_problem):
+    """weighting='sum' (the dual-method aggregation) applies weight 1 per
+    client: the round update is exactly Σ_k δ_k."""
+    prob = small_problem
+    w = jnp.zeros(prob.d)
+    rng = np.random.default_rng(2)
+    deltas = [
+        jnp.asarray(rng.standard_normal((b.num_clients, prob.d)), jnp.float32)
+        for b in prob.buckets
+    ]
+    eng = RoundEngine(prob, EngineConfig(weighting="sum"))
+    out = eng.aggregate(w, deltas, jax.random.PRNGKey(0))
+    expect = sum(d.sum(axis=0) for d in deltas)
+    np.testing.assert_allclose(np.asarray(out - w), np.asarray(expect),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_round_with_state_threads_and_masks_state(small_problem):
+    """round_with_state hands each bucket its own state, returns the pass's
+    update, and under partial participation freezes exactly the clients the
+    aggregation draw zeroes."""
+    prob = small_problem
+    w = jnp.zeros(prob.d)
+    states = [jnp.zeros((b.num_clients, 3)) for b in prob.buckets]
+
+    def pass_fn(w, bi, bucket, state_b, kb):
+        deltas = jnp.zeros((bucket.num_clients, prob.d))
+        return deltas, state_b + 1.0
+
+    # full participation: every client's state advances
+    eng = RoundEngine(prob, EngineConfig())
+    _, new_states = eng.round_with_state(w, states, jax.random.PRNGKey(0),
+                                         pass_fn)
+    for s in new_states:
+        np.testing.assert_array_equal(np.asarray(s), 1.0)
+
+    # partial participation: non-participants keep their state, and the
+    # frozen set is exactly the complement of the engine's Bernoulli draw
+    eng_p = RoundEngine(prob, EngineConfig(participation=0.5))
+    key = jax.random.PRNGKey(1)
+    _, new_states = eng_p.round_with_state(w, states, key, pass_fn)
+    wi = 0
+    advanced = frozen = 0
+    for b, s in zip(prob.buckets, new_states):
+        sel = np.asarray(eng_p.participation_mask(
+            jax.random.fold_in(key, wi), b.num_clients))
+        np.testing.assert_array_equal(np.asarray(s)[sel == 1.0], 1.0)
+        np.testing.assert_array_equal(np.asarray(s)[sel == 0.0], 0.0)
+        advanced += int(sel.sum())
+        frozen += int((1 - sel).sum())
+        wi += b.num_clients
+    assert advanced > 0 and frozen > 0
+
+
 def test_engine_config_validation(tiny_problem):
     with pytest.raises(ValueError):
         EngineConfig(weighting="bogus")

@@ -1,9 +1,15 @@
-"""The paper's two equivalence theorems, tested to float tolerance.
+"""The paper's two equivalence theorems, tested to float tolerance on the
+engine-ported implementations.
 
   * Proposition 1 (§3.5): DANE(η=1, µ=0) with one SVRG epoch as the local
     solver generates the same iterates as naive Federated SVRG (Alg. 3).
   * Theorem 5 (App. A): for ridge regression the Primal Method (Alg. 5) and
     the Dual Method (Alg. 6) are equivalent under w = (1/λn)Xα.
+
+Both sides of each equivalence run on the RoundEngine (the list-based
+pre-port implementations are pinned separately in
+tests/test_dane_cocoa_engine.py), so these tests also guard the engine's
+key schedule: a change to the fold_in chain breaks Prop. 1 immediately.
 """
 import jax
 import jax.numpy as jnp
@@ -20,10 +26,10 @@ def _x64():
     jax.config.update("jax_enable_x64", False)
 
 
-from repro.core import build_problem, naive_fsvrg_round
-from repro.core.cocoa import (dual_method_round, dual_to_primal,
-                              primal_method_init, primal_method_round)
-from repro.core.dane import dane_round_ridge, dane_svrg_round, ridge_grad
+from repro.core import (DANERidge, DualMethod, PrimalMethod,
+                        naive_fsvrg_round)
+from repro.core.cocoa import dual_to_primal
+from repro.core.dane import dane_svrg_round, ridge_grad
 
 
 @pytest.mark.parametrize("stepsize,m", [(0.05, 10), (0.2, 25)])
@@ -45,14 +51,18 @@ def test_theorem_5_primal_dual_equivalence(sigma):
     ys = [jnp.asarray(rng.standard_normal(m)) for _ in range(K)]
     alphas0 = [jnp.asarray(rng.standard_normal(m)) for _ in range(K)]
 
-    w, gs, eta, mu = primal_method_init(Xs, alphas0, lam, sigma)
-    alphas = list(alphas0)
+    primal = PrimalMethod(Xs, ys, alphas0, lam, sigma)
+    dual = DualMethod(Xs, ys, alphas0, lam, sigma)
     for _ in range(6):
-        alphas = dual_method_round(Xs, ys, alphas, lam, sigma)
-        wd = dual_to_primal(Xs, alphas, lam)
-        w, gs = primal_method_round(Xs, ys, w, gs, lam, eta, mu)
-        np.testing.assert_allclose(np.asarray(w), np.asarray(wd),
+        wd = dual.round()
+        wp = primal.round()
+        np.testing.assert_allclose(np.asarray(wp), np.asarray(wd),
                                    rtol=1e-9, atol=1e-11)
+        # the dual iterate really is (1/λn) X α for the current dual blocks
+        alphas = list(dual.alphas[0])
+        np.testing.assert_allclose(
+            np.asarray(wd), np.asarray(dual_to_primal(Xs, alphas, lam)),
+            rtol=1e-9, atol=1e-11)
 
 
 def test_dual_method_converges_to_ridge_optimum():
@@ -66,10 +76,10 @@ def test_dual_method_converges_to_ridge_optimum():
     # closed-form ridge optimum of (1/2n)||X^T w - y||^2 + lam/2 ||w||^2
     w_star = jnp.linalg.solve(X @ X.T / n + lam * jnp.eye(d), X @ y / n)
 
-    alphas = [jnp.zeros(m, jnp.float64) for _ in range(K)]
+    alphas0 = [jnp.zeros(m, jnp.float64) for _ in range(K)]
+    solver = DualMethod(Xs, ys, alphas0, lam, sigma=float(K))
     for _ in range(200):
-        alphas = dual_method_round(Xs, ys, alphas, lam, sigma=float(K))
-    w = dual_to_primal(Xs, alphas, lam)
+        w = solver.round()
     np.testing.assert_allclose(np.asarray(w), np.asarray(w_star), rtol=1e-5, atol=1e-7)
 
 
@@ -82,7 +92,7 @@ def test_dane_exact_solves_identical_data_in_one_round():
     y = jnp.asarray(rng.standard_normal(m))
     Xs, ys = [X] * 4, [y] * 4
     w0 = jnp.asarray(rng.standard_normal(d))
-    w1 = dane_round_ridge(Xs, ys, w0, lam, eta=1.0, mu=0.0)
+    w1 = DANERidge(Xs, ys, lam, eta=1.0, mu=0.0).round(w0)
     gnorm = float(jnp.linalg.norm(ridge_grad(X, y, w1, lam)))
     assert gnorm < 1e-8, gnorm
 
@@ -96,5 +106,5 @@ def test_dane_property_A_fixed_point():
     X = jnp.concatenate(Xs, axis=1)
     y = jnp.concatenate(ys)
     w_star = jnp.linalg.solve(X @ X.T / n + lam * jnp.eye(d), X @ y / n)
-    w1 = dane_round_ridge(Xs, ys, w_star, lam, eta=1.0, mu=0.5)
+    w1 = DANERidge(Xs, ys, lam, eta=1.0, mu=0.5).round(w_star)
     np.testing.assert_allclose(np.asarray(w1), np.asarray(w_star), rtol=1e-8)

@@ -69,6 +69,75 @@ def test_fedavg_update_semantics():
 
 
 @pytest.mark.parametrize("dtype", DTYPES, ids=("f32", "bf16"))
+@pytest.mark.parametrize("d", [1, 127, 1000])
+def test_dane_update_parity(d, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(7), 4)
+    w, g, a, wt = [jax.random.normal(k, (d,), dtype) for k in ks]
+    lr, lam, mu = 0.4, 0.03, 0.2
+    out = ops.dane_update(w, g, a, wt, lr, lam, mu)
+    expect = ref.dane_update_ref(w, g, a, wt, lr, lam, mu)
+    assert out.dtype == dtype
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(expect, np.float32),
+                               rtol=_tol(dtype), atol=_tol(dtype) * 10)
+
+
+def test_dane_update_zero_stepsize_is_noop():
+    """lr=0 must be an exact no-op (the masking contract shared with
+    fedavg_update)."""
+    ks = jax.random.split(jax.random.PRNGKey(8), 4)
+    w, g, a, wt = [jax.random.normal(k, (1000,)) for k in ks]
+    out = ops.dane_update(w, g, a, wt, 0.0, 0.05, 0.3)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(w))
+
+
+def test_dane_update_semantics():
+    """The fused kernel is exactly one GD step on DANE's local subproblem:
+    w − lr(∇F_k(w) − a_k + µ(w − w^t)) with ∇F_k split as g + λw."""
+    d = 257
+    ks = jax.random.split(jax.random.PRNGKey(9), 4)
+    w, g, a, wt = [jax.random.normal(k, (d,)) for k in ks]
+    lr, lam, mu = 0.2, 0.1, 0.4
+    manual = w - lr * ((g + lam * w) - a + mu * (w - wt))
+    out = ops.dane_update(w, g, a, wt, lr, lam, mu)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(manual),
+                               rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.parametrize("dtype", DTYPES, ids=("f32", "bf16"))
+@pytest.mark.parametrize("d", [1, 127, 1000])
+def test_cocoa_sdca_parity(d, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(10), 3)
+    beta0 = jax.random.uniform(ks[0], (d,), minval=0.05, maxval=0.95).astype(dtype)
+    m = jax.random.normal(ks[1], (d,), dtype)
+    c = (jnp.abs(jax.random.normal(ks[2], (d,))) * 0.5).astype(dtype)
+    out = ops.cocoa_sdca_update(beta0, m, c)
+    expect = ref.cocoa_sdca_update_ref(beta0, m, c)
+    assert out.dtype == dtype
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(expect, np.float32),
+                               rtol=_tol(dtype), atol=_tol(dtype) * 10)
+    # solutions live strictly inside the (0,1) dual box
+    outf = np.asarray(out, np.float32)
+    assert outf.min() > 0.0 and outf.max() < 1.0
+
+
+def test_cocoa_sdca_solves_scalar_subproblem():
+    """The Newton solve really minimizes m(β−β₀)+c(β−β₀)²+H(β): the
+    stationarity residual at the returned β is ~0 for interior solutions."""
+    d = 321
+    ks = jax.random.split(jax.random.PRNGKey(11), 3)
+    beta0 = jax.random.uniform(ks[0], (d,), minval=0.2, maxval=0.8)
+    m = jax.random.normal(ks[1], (d,)) * 0.5
+    c = jnp.abs(jax.random.normal(ks[2], (d,))) * 0.5
+    b = ops.cocoa_sdca_update(beta0, m, c)
+    resid = m + 2.0 * c * (b - beta0) + jnp.log(b / (1.0 - b))
+    interior = (np.asarray(b) > 1e-4) & (np.asarray(b) < 1.0 - 1e-4)
+    assert interior.mean() > 0.9
+    np.testing.assert_allclose(np.asarray(resid)[interior], 0.0, atol=1e-4)
+
+
+@pytest.mark.parametrize("dtype", DTYPES, ids=("f32", "bf16"))
 @pytest.mark.parametrize("K,d", [(5, 1000), (1, 999), (5, 1)])
 def test_scaled_aggregate_parity(K, d, dtype):
     ks = jax.random.split(jax.random.PRNGKey(6), 4)
