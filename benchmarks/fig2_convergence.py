@@ -2,10 +2,16 @@
 
 Compares (as in the paper): OPT (offline optimum), GD (best stepsize),
 CoCoA+, DANE, FSVRG, FSVRGR (same algorithm, randomly reshuffled data), plus
-the FedAvg/local-SGD and one-shot baselines — every round-based curve runs
-on the shared RoundEngine.  Scale is controlled by --scale (default
-CI-friendly 0.005 ≈ 50 clients; the paper's full setting is scale=1.0:
-K=10,000, n≈2.2M, d=20,002).
+the FedAvg/local-SGD and one-shot baselines.  Every round-based curve is a
+row in the data-driven ``CURVES`` table: the solver comes from the registry
+(``make_solver``), the round loop and key schedule from the shared
+:class:`repro.core.Trainer` (all derived from ``--seed``), and the
+retrospective stepsize sweep from :func:`repro.core.sweep` — no
+per-algorithm hand-rolled loops.  Adding an algorithm to the comparison is
+one table row.
+
+Scale is controlled by --scale (default CI-friendly 0.005 ≈ 50 clients; the
+paper's full setting is scale=1.0: K=10,000, n≈2.2M, d=20,002).
 """
 from __future__ import annotations
 
@@ -13,18 +19,42 @@ import argparse
 import dataclasses
 import json
 import time
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import (get_cocoa_config, get_dane_config,
-                           get_fedavg_config, get_logreg_config)
-from repro.core import (DANE, DANEConfig, FSVRG, FSVRGConfig, FedAvg,
-                        FedAvgConfig, build_problem, build_test_problem)
+                           get_fedavg_config, get_fsvrg_config,
+                           get_gd_config, get_logreg_config)
+from repro.core import (Trainer, build_problem, build_test_problem,
+                        make_solver, sweep)
 from repro.core.baselines import majority_baseline_error, one_shot_average
-from repro.core.cocoa import CoCoAPlus
 from repro.data.synthetic import generate
+
+
+@dataclasses.dataclass(frozen=True)
+class Curve:
+    """One comparison curve: a registry solver + its retrospective sweep."""
+
+    solver: str                                  # registry name
+    sweep_param: Optional[str] = None            # hyperparam swept (None: none)
+    sweep: Tuple[float, ...] = ()
+    reshuffle: bool = False                      # FSVRGR: same algo, shuffled data
+
+
+def _curves():
+    return {
+        "fsvrg": Curve("fsvrg", "stepsize", get_fsvrg_config().stepsize_sweep),
+        "fsvrgr": Curve("fsvrg", "stepsize", get_fsvrg_config().stepsize_sweep,
+                        reshuffle=True),
+        "gd": Curve("gd", "stepsize", get_gd_config().stepsize_sweep),
+        "dane": Curve("dane", "local_lr", get_dane_config().local_lr_sweep),
+        "cocoa": Curve("cocoa"),
+        "fedavg": Curve("fedavg", "stepsize", get_fedavg_config().stepsize_sweep),
+    }
+
 
 ALGOS = ("fsvrg", "fsvrgr", "gd", "dane", "cocoa", "fedavg", "oneshot")
 
@@ -42,22 +72,13 @@ def optimum(prob, iters=6000, lr=2.0):
     return best
 
 
-def sweep_stepsize(run_fn, prob, candidates, rounds):
-    """Retrospectively pick the best stepsize (the paper's protocol)."""
-    best_hist, best_f, best_h = None, np.inf, None
-    for h in candidates:
-        hist = run_fn(h, rounds)
-        f = hist[-1]["f"]
-        if np.isfinite(f) and f < best_f:
-            best_f, best_hist, best_h = f, hist, h
-    return best_hist, best_h
-
-
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--scale", type=float, default=0.005)
     ap.add_argument("--rounds", type=int, default=30)
-    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--seed", type=int, default=0,
+                    help="drives the data generator AND every curve's "
+                         "per-round key schedule (via the Trainer)")
     ap.add_argument("--opt-iters", type=int, default=6000,
                     help="GD iterations for the offline OPT reference "
                          "(lower it for smoke runs)")
@@ -91,125 +112,63 @@ def main(argv=None):
                "const_err": err_const, "majority_err": err_majority,
                "config": dataclasses.asdict(cfg)}
 
-    def eval_w(w):
-        return {"f": float(prob.flat.loss(w)), "err": float(te.error_rate(w))}
+    # FSVRGR's reshuffled problem (built lazily, derived from --seed too)
+    prob_r = None
 
-    # ---- FSVRG ---- #
-    if want("fsvrg"):
-        def run_fsvrg(h, rounds, problem=prob):
-            solver = FSVRG(problem, FSVRGConfig(stepsize=h))
-            w = jnp.zeros(problem.d)
-            hist = []
-            for r in range(rounds):
-                w = solver.round(w, jax.random.fold_in(jax.random.PRNGKey(1), r))
-                hist.append(eval_w(w) if problem is prob else
-                            {"f": float(problem.flat.loss(w)), "err": float("nan")})
-            return hist
+    def reshuffled():
+        nonlocal prob_r
+        if prob_r is None:
+            rng = np.random.default_rng(args.seed)
+            perm = rng.permutation(ds.num_examples)
+            ds_r = dataclasses.replace(ds, idx=ds.idx[perm], val=ds.val[perm],
+                                       y=ds.y[perm])
+            prob_r = build_problem(ds_r)
+        return prob_r
+
+    # ---- every round-based curve: one registry-driven sweep ---- #
+    for name, c in _curves().items():
+        if not want(name):
+            continue
+        problem = reshuffled() if c.reshuffle else prob
+
+        def eval_w(w, problem=problem):
+            return {"f": problem.flat.loss(w), "err": te.error_rate(w)}
 
         t0 = time.time()
-        hist, h_best = sweep_stepsize(run_fsvrg, prob, (0.3, 1.0, 3.0), args.rounds)
-        results["fsvrg"] = {"h": h_best, "hist": hist}
-        print(f"FSVRG   (h={h_best}): " + " ".join(
-            f"r{r+1}={p['f']:.4f}" for r, p in list(enumerate(hist))[::max(1, args.rounds // 6)])
+        if c.sweep_param is not None:
+            res, best = sweep(
+                lambda v: make_solver(c.solver, problem, **{c.sweep_param: v}),
+                c.sweep, rounds=args.rounds, seed=args.seed, eval_fn=eval_w)
+            if res is None:
+                print(f"{name}: every candidate in {c.sweep} diverged")
+                continue
+            swept = {c.sweep_param: best}
+        else:
+            res = Trainer(make_solver(c.solver, problem), rounds=args.rounds,
+                          seed=args.seed, eval_fn=eval_w).fit()
+            swept = {}
+        hist = res.history
+        results[name] = {
+            "solver": c.solver, "swept": swept, "hist": hist,
+            # JSON-friendly hyperparams of the (best) run
+            "hyperparams": {
+                k: v for k, v in res.solver.hyperparams.items()
+                if isinstance(v, (int, float, str, bool, type(None)))}}
+        tag = ",".join(f"{k}={v}" for k, v in swept.items()) or "defaults"
+        print(f"{name:7s} ({tag}): " + " ".join(
+            f"r{r+1}={p['f']:.4f}"
+            for r, p in list(enumerate(hist))[::max(1, args.rounds // 6)])
             + f"  err={hist[-1]['err']:.4f}  [{time.time()-t0:.0f}s]")
 
-    # ---- FSVRGR: same algorithm, randomly reshuffled data ---- #
-    if want("fsvrgr"):
-        rng = np.random.default_rng(123)
-        perm = rng.permutation(ds.num_examples)
-        ds_r = dataclasses.replace(ds, idx=ds.idx[perm], val=ds.val[perm], y=ds.y[perm])
-        prob_r = build_problem(ds_r)
-
-        def run_fsvrgr(h, rounds):
-            solver = FSVRG(prob_r, FSVRGConfig(stepsize=h))
-            w = jnp.zeros(prob_r.d)
-            hist = []
-            for r in range(rounds):
-                w = solver.round(w, jax.random.fold_in(jax.random.PRNGKey(1), r))
-                hist.append({"f": float(prob_r.flat.loss(w)),
-                             "err": float(te.error_rate(w))})
-            return hist
-
-        hist_r, h_r = sweep_stepsize(run_fsvrgr, prob_r, (0.3, 1.0, 3.0), args.rounds)
-        results["fsvrgr"] = {"h": h_r, "hist": hist_r}
-        print(f"FSVRGR  (h={h_r}): final f={hist_r[-1]['f']:.4f} err={hist_r[-1]['err']:.4f}")
-
-    # ---- distributed GD ---- #
-    if want("gd"):
-        def run_gd_h(h, rounds):
-            w = jnp.zeros(prob.d)
-            g = jax.jit(prob.flat.grad)
-            hist = []
-            for r in range(rounds):
-                w = w - h * g(w)
-                hist.append(eval_w(w))
-            return hist
-
-        hist_gd, h_gd = sweep_stepsize(run_gd_h, prob, (0.5, 2.0, 8.0, 32.0), args.rounds)
-        results["gd"] = {"h": h_gd, "hist": hist_gd}
-        print(f"GD      (h={h_gd}): final f={hist_gd[-1]['f']:.4f} err={hist_gd[-1]['err']:.4f}")
-
-    # ---- DANE (engine subsystem; η/µ from the config, local lr swept) ---- #
-    if want("dane"):
-        dcfg = get_dane_config()
-
-        def run_dane(lr, rounds):
-            solver = DANE(prob, DANEConfig(
-                eta=dcfg.eta, mu=dcfg.mu, local_steps=dcfg.local_steps,
-                local_lr=lr))
-            w = jnp.zeros(prob.d)
-            hist = []
-            for r in range(rounds):
-                w = solver.round(w, jax.random.fold_in(jax.random.PRNGKey(4), r))
-                hist.append(eval_w(w))
-            return hist
-
-        hist_d, lr_d = sweep_stepsize(run_dane, prob, dcfg.local_lr_sweep,
-                                      args.rounds)
-        results["dane"] = {"local_lr": lr_d, "eta": dcfg.eta, "mu": dcfg.mu,
-                           "hist": hist_d}
-        print(f"DANE    (lr={lr_d},mu={dcfg.mu}): final f={hist_d[-1]['f']:.4f} "
-              f"err={hist_d[-1]['err']:.4f}")
-
-    # ---- CoCoA+ (engine subsystem; σ' from the config) ---- #
-    if want("cocoa"):
-        ccfg = get_cocoa_config()
-        solver = CoCoAPlus(prob, sigma=ccfg.sigma)
-        hist_c = []
-        for r in range(args.rounds):
-            solver.round(jax.random.PRNGKey(r))
-            hist_c.append(eval_w(solver.w))
-        results["cocoa"] = {"sigma": solver.sigma, "hist": hist_c}
-        print(f"CoCoA+  (s'={solver.sigma:.0f}): final f={hist_c[-1]['f']:.4f} "
-              f"err={hist_c[-1]['err']:.4f}")
-
-    # ---- FedAvg (engine subsystem; E and sweep from the config entry) ---- #
-    if want("fedavg"):
-        facfg = get_fedavg_config()
-
-        def run_fedavg(h, rounds):
-            solver = FedAvg(prob, FedAvgConfig(
-                stepsize=h, local_epochs=facfg.local_epochs,
-                participation=facfg.participation))
-            w = jnp.zeros(prob.d)
-            hist = []
-            for r in range(rounds):
-                w = solver.round(w, jax.random.fold_in(jax.random.PRNGKey(2), r))
-                hist.append(eval_w(w))
-            return hist
-
-        hist_fa, h_fa = sweep_stepsize(run_fedavg, prob, facfg.stepsize_sweep,
-                                       args.rounds)
-        results["fedavg"] = {"h": h_fa, "E": facfg.local_epochs, "hist": hist_fa}
-        print(f"FedAvg  (h={h_fa},E={facfg.local_epochs}): "
-              f"final f={hist_fa[-1]['f']:.4f} err={hist_fa[-1]['err']:.4f}")
-
-    # ---- one-shot averaging ---- #
+    # ---- one-shot averaging (not round-based: single communication) ---- #
     if want("oneshot"):
-        w_os = one_shot_average(prob, jnp.zeros(prob.d), jax.random.PRNGKey(3),
+        key_os = jax.random.fold_in(jax.random.PRNGKey(args.seed), 10_000)
+        w_os = one_shot_average(prob, jnp.zeros(prob.d), key_os,
                                 stepsize=0.5, epochs=20)
-        results["oneshot"] = eval_w(w_os)
-        print(f"OneShot: f={results['oneshot']['f']:.4f} err={results['oneshot']['err']:.4f}")
+        results["oneshot"] = {"f": float(prob.flat.loss(w_os)),
+                              "err": float(te.error_rate(w_os))}
+        print(f"oneshot: f={results['oneshot']['f']:.4f} "
+              f"err={results['oneshot']['err']:.4f}")
 
     # rounds-to-within-10%-of-optimal-gap table
     f0 = float(prob.flat.loss(jnp.zeros(prob.d)))

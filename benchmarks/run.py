@@ -82,7 +82,8 @@ def bench_round_cost(quick: bool):
     w = jnp.zeros(prob.d)
 
     solver = FSVRG(prob, FSVRGConfig(stepsize=1.0))
-    us, _ = _timeit(lambda: solver.round(w, jax.random.PRNGKey(0)), reps=3)
+    st = solver.init(w)
+    us, _ = _timeit(lambda: solver.round(st, jax.random.PRNGKey(0)).w, reps=3)
     print(f"fsvrg_round_K{ds.num_clients},{us:.0f},1 communication")
 
     g = jax.jit(prob.flat.grad)
@@ -90,7 +91,8 @@ def bench_round_cost(quick: bool):
     print(f"gd_round_K{ds.num_clients},{us:.0f},1 communication")
 
     cc = CoCoAPlus(prob)
-    us, _ = _timeit(lambda: cc.round(jax.random.PRNGKey(0)), reps=3)
+    st_cc = cc.init()
+    us, _ = _timeit(lambda: cc.round(st_cc, jax.random.PRNGKey(0)).w, reps=3)
     print(f"cocoa_round_K{ds.num_clients},{us:.0f},1 communication")
 
 
@@ -128,10 +130,12 @@ def bench_properties_table():
         f_star = float(prob.flat.loss(w_star))
         f0 = float(prob.flat.loss(jnp.zeros(prob.d)))
         # best stepsize retrospectively (the paper's protocol)
-        f1 = min(
-            float(prob.flat.loss(FSVRG(prob, FSVRGConfig(stepsize=h)).round(
-                jnp.zeros(prob.d), jax.random.PRNGKey(0))))
-            for h in (1.0, 3.0, 10.0))
+        def one_round_f(h):
+            solver = FSVRG(prob, FSVRGConfig(stepsize=h))
+            st = solver.round(solver.init(), jax.random.PRNGKey(0))
+            return float(prob.flat.loss(st.w))
+
+        f1 = min(one_round_f(h) for h in (1.0, 3.0, 10.0))
         return (f0 - f1) / max(f0 - f_star, 1e-12)
 
     p_b = _dense_problem_from_clients(_random_clients(rng, 1, 256, 16, 8), 16, lam=0.05)

@@ -1,19 +1,17 @@
 """The paper's §4 experiment end-to-end, with every compared method and the
 four FSVRG-modification ablations (§3.6.2).
 
+Every run is a row in a data-driven table: the solver comes from the
+registry (``make_solver(name, prob, **overrides)``), the round loop from
+the shared Trainer (``solver.fit``) — no per-algorithm loops.
+
     PYTHONPATH=src python examples/federated_logreg.py --scale 0.01 --rounds 30
 """
 import argparse
 
-import jax
-import jax.numpy as jnp
-
-from repro.configs import (get_cocoa_config, get_dane_config,
-                           get_fedavg_config, get_logreg_config)
-from repro.core import (DANE, DANEConfig, FSVRG, FSVRGConfig, FedAvg,
-                        FedAvgConfig, build_problem, build_test_problem)
-from repro.core.baselines import majority_baseline_error, run_gd
-from repro.core.cocoa import CoCoAPlus
+from repro.configs import get_logreg_config
+from repro.core import build_problem, build_test_problem, make_solver
+from repro.core.baselines import majority_baseline_error
 from repro.data.synthetic import generate
 
 
@@ -22,10 +20,11 @@ def main(argv=None):
     ap.add_argument("--scale", type=float, default=0.005)
     ap.add_argument("--rounds", type=int, default=20)
     ap.add_argument("--stepsize", type=float, default=1.0)
+    ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
     cfg = get_logreg_config().scaled(args.scale)
-    ds = generate(cfg, seed=0)
+    ds = generate(cfg, seed=args.seed)
     prob = build_problem(ds)
     te = build_test_problem(ds)
     print(f"K={ds.num_clients} n={ds.num_examples} d={ds.num_features}")
@@ -35,47 +34,31 @@ def main(argv=None):
     err_maj = majority_baseline_error(ds.y, ds.client_of, ds.test_y, ds.test_client_of)
     print(f"predict-constant err={err_const:.4f}  per-author-majority err={err_maj:.4f}")
 
-    def run(cfg_fsvrg, label):
-        w, _ = FSVRG(prob, cfg_fsvrg).run(jnp.zeros(prob.d), args.rounds, seed=0)
-        print(f"{label:34s} f={float(prob.flat.loss(w)):.5f} "
-              f"err={float(te.error_rate(w)):.4f}")
-        return w
-
     h = args.stepsize
-    run(FSVRGConfig(stepsize=h), "FSVRG (Algorithm 4, all mods)")
-    run(FSVRGConfig(stepsize=h, use_S=False), "  − S_k gradient scaling")
-    run(FSVRGConfig(stepsize=h, use_A=False), "  − A aggregation scaling")
-    run(FSVRGConfig(stepsize=h, use_local_stepsize=False), "  − local stepsize h/n_k")
-    run(FSVRGConfig(stepsize=h, use_weighted_agg=False), "  − n_k/n weighted aggregation")
-    run(FSVRGConfig(stepsize=h / 100, naive=True, naive_steps=50),
-        "naive FSVRG (Algorithm 3)")
+    runs = (
+        ("FSVRG (Algorithm 4, all mods)", "fsvrg", {"stepsize": h}),
+        ("  − S_k gradient scaling", "fsvrg", {"stepsize": h, "use_S": False}),
+        ("  − A aggregation scaling", "fsvrg", {"stepsize": h, "use_A": False}),
+        ("  − local stepsize h/n_k", "fsvrg",
+         {"stepsize": h, "use_local_stepsize": False}),
+        ("  − n_k/n weighted aggregation", "fsvrg",
+         {"stepsize": h, "use_weighted_agg": False}),
+        ("naive FSVRG (Algorithm 3)", "svrg_naive",
+         {"stepsize": h / 100, "naive_steps": 50}),
+        ("GD", "gd", {"stepsize": 2.0}),
+        ("FedAvg (registry defaults)", "fedavg", {}),
+        ("DANE (registry defaults)", "dane", {}),
+        ("CoCoA+ (sigma=K)", "cocoa", {}),
+    )
 
-    w_gd, _ = run_gd(prob, jnp.zeros(prob.d), args.rounds, 2.0)
-    print(f"{'GD':34s} f={float(prob.flat.loss(w_gd)):.5f} "
-          f"err={float(te.error_rate(w_gd)):.4f}")
+    def evaluate(w):
+        return {"f": prob.flat.loss(w), "err": te.error_rate(w)}
 
-    facfg = get_fedavg_config()
-    w_fa, _ = FedAvg(prob, FedAvgConfig(stepsize=facfg.stepsize,
-                                        local_epochs=facfg.local_epochs)).run(
-        jnp.zeros(prob.d), args.rounds, seed=0)
-    print(f"{'FedAvg (E=%d local SGD)' % facfg.local_epochs:34s} "
-          f"f={float(prob.flat.loss(w_fa)):.5f} "
-          f"err={float(te.error_rate(w_fa)):.4f}")
-
-    dcfg = get_dane_config()
-    w_da, _ = DANE(prob, DANEConfig(eta=dcfg.eta, mu=dcfg.mu,
-                                    local_steps=dcfg.local_steps,
-                                    local_lr=dcfg.local_lr)).run(
-        jnp.zeros(prob.d), args.rounds, seed=0)
-    print(f"{'DANE (mu=%g, GD local solver)' % dcfg.mu:34s} "
-          f"f={float(prob.flat.loss(w_da)):.5f} "
-          f"err={float(te.error_rate(w_da)):.4f}")
-
-    cc = CoCoAPlus(prob, sigma=get_cocoa_config().sigma)
-    for r in range(args.rounds):
-        cc.round(jax.random.PRNGKey(r))
-    print(f"{'CoCoA+ (sigma=K)':34s} f={float(prob.flat.loss(cc.w)):.5f} "
-          f"err={float(te.error_rate(cc.w)):.4f}")
+    for label, name, overrides in runs:
+        res = make_solver(name, prob, **overrides).fit(
+            args.rounds, seed=args.seed, eval_fn=evaluate)
+        p = res.history[-1]
+        print(f"{label:34s} f={p['f']:.5f} err={p['err']:.4f}")
 
 
 if __name__ == "__main__":

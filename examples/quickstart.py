@@ -2,16 +2,14 @@
 
 Generates a non-IID, unbalanced, sparse federated dataset (the paper's §4
 setting, scaled down), runs FSVRG (Algorithm 4) for 10 rounds of
-communication, and compares against distributed gradient descent.
+communication through the shared Trainer driver, and compares against
+distributed gradient descent — both constructed by name from the solver
+registry.
 
     PYTHONPATH=src python examples/quickstart.py
 """
-import jax
-import jax.numpy as jnp
-
 from repro.configs import get_logreg_config
-from repro.core import FSVRG, FSVRGConfig, build_problem, build_test_problem
-from repro.core.baselines import run_gd
+from repro.core import build_problem, build_test_problem, make_solver
 from repro.data.synthetic import generate
 
 # 1. a federated dataset: K clients, power-law sizes, per-client skew
@@ -25,15 +23,20 @@ print(f"K={ds.num_clients} clients, n={ds.num_examples} examples, "
 prob = build_problem(ds)          # lambda = 1/n, the paper's choice
 test = build_test_problem(ds)
 
-# 3. Federated SVRG — one communication round per iteration
-solver = FSVRG(prob, FSVRGConfig(stepsize=1.0))
-w = jnp.zeros(prob.d)
-for r in range(10):
-    w = solver.round(w, jax.random.PRNGKey(r))
-    print(f"round {r+1:2d}: objective={float(prob.flat.loss(w)):.5f} "
-          f"test_error={float(test.error_rate(w)):.4f}")
+
+def evaluate(w):
+    return {"f": prob.flat.loss(w), "err": test.error_rate(w)}
+
+
+# 3. Federated SVRG — one communication round per iteration.  Any solver in
+#    the registry works the same way: make_solver(name, prob).fit(rounds).
+res = make_solver("fsvrg", prob, stepsize=1.0).fit(10, seed=0,
+                                                   eval_fn=evaluate)
+for r, p in enumerate(res.history):
+    print(f"round {r+1:2d}: objective={p['f']:.5f} test_error={p['err']:.4f}")
 
 # 4. baseline: distributed GD at the same communication budget
-w_gd, _ = run_gd(prob, jnp.zeros(prob.d), rounds=10, stepsize=2.0)
-print(f"\nFSVRG objective {float(prob.flat.loss(w)):.5f} vs "
-      f"GD {float(prob.flat.loss(w_gd)):.5f} at 10 rounds each")
+res_gd = make_solver("gd", prob, stepsize=2.0).fit(10, seed=0,
+                                                   eval_fn=evaluate)
+print(f"\nFSVRG objective {res.history[-1]['f']:.5f} vs "
+      f"GD {res_gd.history[-1]['f']:.5f} at 10 rounds each")

@@ -49,8 +49,19 @@ def get_cocoa_config():
     return mod.CONFIG
 
 
+def get_fsvrg_config():
+    mod = importlib.import_module("repro.configs.fsvrg_gplus")
+    return mod.CONFIG
+
+
+def get_gd_config():
+    mod = importlib.import_module("repro.configs.gd_gplus")
+    return mod.CONFIG
+
+
 __all__ = [
     "ArchConfig", "InputShape", "MoEConfig", "INPUT_SHAPES", "SHAPES",
     "ARCH_IDS", "get_config", "get_logreg_config", "get_fedavg_config",
-    "get_dane_config", "get_cocoa_config",
+    "get_dane_config", "get_cocoa_config", "get_fsvrg_config",
+    "get_gd_config",
 ]

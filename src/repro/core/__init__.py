@@ -5,6 +5,13 @@
   engine.py    — unified round engine: client sampling, vmap-over-bucket
                  passes, pluggable aggregation, per-client dual-state hook
                  (shared by all algorithms)
+  solver.py    — the FederatedSolver protocol: init/round over a SolverState
+                 pytree (iterate + per-client aux state + round counter)
+  registry.py  — string-keyed solver registry (make_solver("fedavg", prob)),
+                 defaults fed from repro.configs
+  trainer.py   — the shared Trainer.fit round-loop driver: key schedule,
+                 eval/history, retrospective sweep, checkpointing, and the
+                 jit+lax.scan fast path
   scaling.py   — S_k / A sparsity statistics (§3.6.1)
   fsvrg.py     — Algorithms 3 & 4 (the paper's method), on the engine
   fedavg.py    — Federated Averaging (1602.05629), on the engine
@@ -19,16 +26,23 @@ from repro.core.problem import (ClientBucket, FederatedLogReg, LogRegProblem,
                                 build_dense_problem, build_problem,
                                 build_test_problem)
 from repro.core.engine import EngineConfig, RoundEngine
+from repro.core.solver import FederatedSolver, SolverState
+from repro.core.registry import available, get_spec, make_solver, register
+from repro.core.trainer import FitResult, Trainer, sweep
 from repro.core.fsvrg import FSVRG, FSVRGConfig, naive_fsvrg_round
 from repro.core.fedavg import FedAvg, FedAvgConfig
 from repro.core.dane import DANE, DANEConfig, DANERidge, dane_svrg_round
 from repro.core.cocoa import (CoCoAConfig, CoCoAPlus, DualMethod,
                               PrimalMethod)
+from repro.core.baselines import DistributedGD
 
 __all__ = [
     "ClientBucket", "FederatedLogReg", "LogRegProblem", "build_dense_problem",
     "build_problem", "build_test_problem", "EngineConfig", "RoundEngine",
+    "FederatedSolver", "SolverState",
+    "available", "get_spec", "make_solver", "register",
+    "FitResult", "Trainer", "sweep",
     "FSVRG", "FSVRGConfig", "naive_fsvrg_round", "FedAvg", "FedAvgConfig",
     "DANE", "DANEConfig", "DANERidge", "dane_svrg_round",
-    "CoCoAConfig", "CoCoAPlus", "DualMethod", "PrimalMethod",
+    "CoCoAConfig", "CoCoAPlus", "DualMethod", "PrimalMethod", "DistributedGD",
 ]

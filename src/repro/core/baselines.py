@@ -25,6 +25,8 @@ import jax.numpy as jnp
 from repro.core.engine import EngineConfig, RoundEngine
 from repro.core.fedavg import FedAvg, FedAvgConfig
 from repro.core.problem import FederatedLogReg
+from repro.core.registry import register
+from repro.core.solver import FederatedSolver, SolverState
 
 
 def gd_round(problem: FederatedLogReg, w: jax.Array, stepsize: float) -> jax.Array:
@@ -46,11 +48,13 @@ def _gd_client_pass(w, bucket, lam, stepsize):
     return jax.vmap(one_client)(bucket.idx, bucket.val, bucket.y, bucket.n_k)
 
 
-class DistributedGD:
+class DistributedGD(FederatedSolver):
     """Distributed GD expressed on the RoundEngine (client pass = exact local
-    gradient, n_k/n aggregation)."""
+    gradient, n_k/n aggregation).  Deterministic — the round key is unused."""
 
-    def __init__(self, problem: FederatedLogReg, stepsize: float):
+    name = "gd"
+
+    def __init__(self, problem: FederatedLogReg, stepsize: float = 2.0):
         self.problem = problem
         self.stepsize = stepsize
         self.engine = RoundEngine(problem, EngineConfig())
@@ -60,18 +64,14 @@ class DistributedGD:
             for b in problem.buckets
         ]
 
-    def round(self, w: jax.Array, key: Optional[jax.Array] = None) -> jax.Array:
-        key = jax.random.PRNGKey(0) if key is None else key
-        return self.engine.round(w, key, lambda w, bi, b, kb: self._passes[bi](w))
+    @property
+    def hyperparams(self):
+        return {"stepsize": self.stepsize}
 
-    def run(self, w0: jax.Array, rounds: int, callback=None):
-        w = w0
-        hist = []
-        for r in range(rounds):
-            w = self.round(w)
-            if callback:
-                hist.append(callback(w, r))
-        return w, hist
+    def round(self, state: SolverState, key: jax.Array) -> SolverState:
+        w = self.engine.round(state.w, key,
+                              lambda w, bi, b, kb: self._passes[bi](w))
+        return state.replace(w=w, round=state.round + 1)
 
 
 def run_gd(problem, w0, rounds: int, stepsize: float, callback=None):
@@ -89,10 +89,22 @@ def run_gd(problem, w0, rounds: int, stepsize: float, callback=None):
     return w, hist
 
 
+def _gd_defaults():
+    from repro.configs import get_gd_config
+    return {"stepsize": get_gd_config().stepsize}
+
+
+@register("gd", defaults=_gd_defaults,
+          description="distributed gradient descent (the trivial benchmark)")
+def _make_gd(problem: FederatedLogReg, **kw) -> DistributedGD:
+    return DistributedGD(problem, **kw)
+
+
 def fedavg_round(problem: FederatedLogReg, w, key, stepsize: float, epochs: int = 1):
     """Local SGD + n_k/n-weighted averaging (FedAvg, [62])."""
     cfg = FedAvgConfig(stepsize=stepsize, local_epochs=epochs)
-    return FedAvg(problem, cfg).round(w, key)
+    solver = FedAvg(problem, cfg)
+    return solver.round(solver.init(w), key).w
 
 
 def one_shot_average(problem: FederatedLogReg, w0, key, stepsize: float,

@@ -32,14 +32,15 @@ tests/_oracles.py and pin these ports round-by-round.
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional
+from typing import Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.engine import EngineConfig, RoundEngine
-from repro.core.problem import (ClientBucket, FederatedLogReg,
-                                build_dense_problem)
+from repro.core.problem import ClientBucket, FederatedLogReg
+from repro.core.registry import register
+from repro.core.solver import FederatedSolver, SolverState
 
 
 def dual_to_primal(Xs, alphas, lam):
@@ -126,15 +127,21 @@ class CoCoAConfig:
     use_kernel: Optional[bool] = None
 
 
-class CoCoAPlus:
+class CoCoAPlus(FederatedSolver):
     """CoCoA+ with γ=1 and safe σ′ = γK by default, on the engine.
 
-    Dual blocks α_k live in ``self.alphas`` (one (Kb, m_pad) array per
-    bucket) and travel through :meth:`RoundEngine.round_with_state`; the
-    per-client primal contributions X_k u_k / (λn) are the deltas, summed
-    by the engine (``weighting="sum"``) into w^{t+1} = w^t + (γ/λn) Σ_k
-    X_k u_k.  Under partial participation the engine freezes the dual
-    blocks of the clients its Bernoulli draw left out."""
+    Purely functional: the dual blocks α_k (one (Kb, m_pad) array per
+    bucket) ride in ``state.aux`` and travel through
+    :meth:`RoundEngine.round_with_state`; the per-client primal
+    contributions X_k u_k / (λn) are the deltas, summed by the engine
+    (``weighting="sum"``) into w^{t+1} = w^t + (γ/λn) Σ_k X_k u_k.  Under
+    partial participation the engine freezes the dual blocks of the
+    clients its Bernoulli draw left out.
+
+    ``init()`` starts at α = 0 ⇒ w = 0; a nonzero ``w0`` would break the
+    dual-primal invariant w = (1/λn) X α and is rejected."""
+
+    name = "cocoa"
 
     def __init__(self, problem: FederatedLogReg, sigma: Optional[float] = None,
                  cfg: CoCoAConfig = CoCoAConfig()):
@@ -150,9 +157,6 @@ class CoCoAPlus:
         n = problem.flat.n
         lam = problem.flat.lam
         self._scale = 1.0 / (lam * n)
-        self.alphas: List[jax.Array] = [
-            jnp.zeros((b.num_clients, b.m_pad)) for b in problem.buckets]
-        self.w = jnp.zeros((problem.d,))
         self._pass = [
             jax.jit(lambda w, a, key, b=b: _sdca_local_pass(
                 w, a, b, lam, n, self.sigma, use_kernel, key))
@@ -164,23 +168,30 @@ class CoCoAPlus:
                          aggregator=cfg.aggregator),
         )
 
-    def round(self, key) -> jax.Array:
+    def init(self, w0: Optional[jax.Array] = None) -> SolverState:
+        if w0 is not None and bool(jnp.any(w0 != 0)):
+            raise ValueError("CoCoA+ starts at alpha=0 => w=0; a custom w0 "
+                             "would break w = (1/lambda n) X alpha")
+        return SolverState(
+            w=jnp.zeros((self.problem.d,)),
+            aux=tuple(jnp.zeros((b.num_clients, b.m_pad))
+                      for b in self.problem.buckets),
+            round=jnp.asarray(0, jnp.int32))
+
+    def round(self, state: SolverState, key: jax.Array) -> SolverState:
         def cocoa_pass(w, bi, bucket, alpha_b, kb):
             u, r = self._pass[bi](w, alpha_b, kb)
             return r * self._scale, alpha_b + u
 
-        self.w, self.alphas = self.engine.round_with_state(
-            self.w, self.alphas, key, cocoa_pass)
-        return self.w
+        w, alphas = self.engine.round_with_state(
+            state.w, list(state.aux), key, cocoa_pass)
+        return SolverState(w=w, aux=tuple(alphas), round=state.round + 1)
 
-    def run(self, rounds: int, seed: int = 0, callback=None):
-        key = jax.random.PRNGKey(seed)
-        history = []
-        for r in range(rounds):
-            w = self.round(jax.random.fold_in(key, r))
-            if callback is not None:
-                history.append(callback(w, r))
-        return self.w, history
+    @property
+    def hyperparams(self):
+        hp = dataclasses.asdict(self.cfg)
+        hp["sigma"] = self.sigma          # the resolved σ′, not the None default
+        return hp
 
 
 # --------------------------------------------------------------------- #
@@ -196,33 +207,59 @@ def _check_equal_sizes(problem: FederatedLogReg):
         raise ValueError("Appendix-A methods assume equal n_k (one bucket)")
 
 
-class PrimalMethod:
+def _stack_alphas0(problem: FederatedLogReg,
+                   alphas0: Optional[Sequence[jax.Array]]) -> jax.Array:
+    """(K, m) initial dual blocks from a per-client list (zeros default)."""
+    b = problem.buckets[0]
+    if alphas0 is None:
+        return jnp.zeros((b.num_clients, b.m_pad), b.val.dtype)
+    return jnp.stack([jnp.asarray(a) for a in alphas0])
+
+
+class PrimalMethod(FederatedSolver):
     """Algorithm 5 (Primal Method) with exact local solves, on the engine.
 
     Per-client state g_k (steps 4/9) rides through ``round_with_state``:
     the pass returns each exact subproblem solution w_k as the bucket state,
     the engine's uniform weighting forms w^{t+1} = (1/K) Σ w_k, and step 9
-    (g_k ← g_k + λη(w_k − w^{t+1})) closes the round with the aggregate."""
+    (g_k ← g_k + λη(w_k − w^{t+1})) closes the round with the aggregate.
 
-    def __init__(self, Xs, ys, alphas0, lam: float, sigma: float):
-        self.problem = build_dense_problem(Xs, ys, lam)
-        _check_equal_sizes(self.problem)
-        K = self.problem.num_clients
-        n = self.problem.flat.n
-        self.lam = float(lam)
-        self.eta = K / float(sigma)
+    ``problem`` must be a :func:`~repro.core.problem.build_dense_problem`
+    layout with equal n_k.  ``init()`` runs steps 3–5 (w⁰ and g⁰ follow
+    from ``alphas0``), so a custom ``w0`` is rejected."""
+
+    name = "primal"
+
+    def __init__(self, problem: FederatedLogReg, *,
+                 sigma: Optional[float] = None, alphas0=None):
+        _check_equal_sizes(problem)
+        self.problem = problem
+        K = problem.num_clients
+        self.lam = float(problem.flat.lam)
+        self.sigma = float(K if sigma is None else sigma)
+        self.eta = K / self.sigma
         self.mu = self.lam * (self.eta - 1.0)
-        b = self.problem.buckets[0]
-        alpha = jnp.stack([jnp.asarray(a) for a in alphas0])     # (K, m)
-        # steps 3-5: w^0 = (1/λn) Σ X_k α_k;  g_k^0 = η((K/n) X_k α_k − λw^0)
-        xa = jnp.einsum("kmd,km->kd", b.val, alpha)              # X_k α_k
-        self.w = xa.sum(axis=0) / (self.lam * n)
-        self.gs = [self.eta * ((K / n) * xa - self.lam * self.w)]
-        self.engine = RoundEngine(self.problem,
-                                  EngineConfig(weighting="uniform"))
+        self._alpha0 = _stack_alphas0(problem, alphas0)
+        self.engine = RoundEngine(problem, EngineConfig(weighting="uniform"))
 
-    def round(self, key: Optional[jax.Array] = None) -> jax.Array:
-        key = jax.random.PRNGKey(0) if key is None else key
+    @property
+    def hyperparams(self):
+        return {"sigma": self.sigma, "eta": self.eta, "mu": self.mu}
+
+    def init(self, w0: Optional[jax.Array] = None) -> SolverState:
+        if w0 is not None:
+            raise ValueError("PrimalMethod's w0 is determined by alphas0 "
+                             "(steps 3-5 of Algorithm 5)")
+        b = self.problem.buckets[0]
+        n = self.problem.flat.n
+        K = self.problem.num_clients
+        # steps 3-5: w^0 = (1/λn) Σ X_k α_k;  g_k^0 = η((K/n) X_k α_k − λw^0)
+        xa = jnp.einsum("kmd,km->kd", b.val, self._alpha0)       # X_k α_k
+        w = xa.sum(axis=0) / (self.lam * n)
+        gs = self.eta * ((K / n) * xa - self.lam * w)
+        return SolverState(w=w, aux=(gs,), round=jnp.asarray(0, jnp.int32))
+
+    def round(self, state: SolverState, key: jax.Array) -> SolverState:
         lam, eta, mu = self.lam, self.eta, self.mu
         K, n = self.problem.num_clients, self.problem.flat.n
 
@@ -241,34 +278,49 @@ class PrimalMethod:
 
             return jax.vmap(one_client)(bucket.val, bucket.y, gs_b)
 
-        w_next, wks = self.engine.round_with_state(self.w, self.gs, key,
-                                                   primal_pass)
-        self.gs = [g + lam * eta * (wk - w_next)
-                   for g, wk in zip(self.gs, wks)]
-        self.w = w_next
-        return w_next
+        w_next, wks = self.engine.round_with_state(state.w, list(state.aux),
+                                                   key, primal_pass)
+        gs = tuple(g + lam * eta * (wk - w_next)
+                   for g, wk in zip(state.aux, wks))
+        return SolverState(w=w_next, aux=gs, round=state.round + 1)
 
 
-class DualMethod:
+class DualMethod(FederatedSolver):
     """Algorithm 6 (Dual Method) with exact block solves, on the engine.
 
     Block subproblem (19): h_k = argmin (σ/2λn)||X_k h||² + ½||h||²
                                         − (y_k − X_kᵀw^t − α_k)ᵀ h
-    State is the dual block α_k; the pass returns X_k h_k/(λn) as the delta,
-    so the engine's plain sum tracks w^{t+1} = (1/λn) X α^{t+1} exactly."""
+    State is the dual block α_k in ``state.aux``; the pass returns
+    X_k h_k/(λn) as the delta, so the engine's plain sum tracks
+    w^{t+1} = (1/λn) X α^{t+1} exactly.  ``init()`` derives w⁰ from
+    ``alphas0``, so a custom ``w0`` is rejected."""
 
-    def __init__(self, Xs, ys, alphas0, lam: float, sigma: float):
-        self.problem = build_dense_problem(Xs, ys, lam)
-        _check_equal_sizes(self.problem)
-        self.lam, self.sigma = float(lam), float(sigma)
+    name = "dual"
+
+    def __init__(self, problem: FederatedLogReg, *,
+                 sigma: Optional[float] = None, alphas0=None):
+        _check_equal_sizes(problem)
+        self.problem = problem
+        self.lam = float(problem.flat.lam)
+        self.sigma = float(problem.num_clients if sigma is None else sigma)
+        self._alpha0 = _stack_alphas0(problem, alphas0)
+        self.engine = RoundEngine(problem, EngineConfig(weighting="sum"))
+
+    @property
+    def hyperparams(self):
+        return {"sigma": self.sigma}
+
+    def init(self, w0: Optional[jax.Array] = None) -> SolverState:
+        if w0 is not None:
+            raise ValueError("DualMethod's w0 is determined by alphas0 "
+                             "(w = (1/lambda n) X alpha)")
         b = self.problem.buckets[0]
-        self.alphas = [jnp.stack([jnp.asarray(a) for a in alphas0])]  # (K, m)
         n = self.problem.flat.n
-        self.w = jnp.einsum("kmd,km->d", b.val, self.alphas[0]) / (self.lam * n)
-        self.engine = RoundEngine(self.problem, EngineConfig(weighting="sum"))
+        w = jnp.einsum("kmd,km->d", b.val, self._alpha0) / (self.lam * n)
+        return SolverState(w=w, aux=(self._alpha0,),
+                           round=jnp.asarray(0, jnp.int32))
 
-    def round(self, key: Optional[jax.Array] = None) -> jax.Array:
-        key = jax.random.PRNGKey(0) if key is None else key
+    def round(self, state: SolverState, key: jax.Array) -> SolverState:
         lam, sigma = self.lam, self.sigma
         n = self.problem.flat.n
 
@@ -283,6 +335,29 @@ class DualMethod:
 
             return jax.vmap(one_client)(bucket.val, bucket.y, alpha_b)
 
-        self.w, self.alphas = self.engine.round_with_state(
-            self.w, self.alphas, key, dual_pass)
-        return self.w
+        w, alphas = self.engine.round_with_state(state.w, list(state.aux),
+                                                 key, dual_pass)
+        return SolverState(w=w, aux=tuple(alphas), round=state.round + 1)
+
+
+def _cocoa_defaults():
+    from repro.configs import get_cocoa_config
+    return {"sigma": get_cocoa_config().sigma}
+
+
+@register("cocoa", defaults=_cocoa_defaults,
+          description="CoCoA+ (arXiv:1502.03508, γ=1, local SDCA)")
+def _make_cocoa(problem: FederatedLogReg, sigma=None, **kw) -> CoCoAPlus:
+    return CoCoAPlus(problem, sigma=sigma, cfg=CoCoAConfig(**kw))
+
+
+@register("primal", layout="dense",
+          description="Appendix-A Algorithm 5 (Primal Method, exact solves)")
+def _make_primal(problem: FederatedLogReg, **kw) -> PrimalMethod:
+    return PrimalMethod(problem, **kw)
+
+
+@register("dual", layout="dense",
+          description="Appendix-A Algorithm 6 (Dual Method, exact solves)")
+def _make_dual(problem: FederatedLogReg, **kw) -> DualMethod:
+    return DualMethod(problem, **kw)

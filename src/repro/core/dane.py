@@ -39,8 +39,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.engine import EngineConfig, RoundEngine
-from repro.core.problem import (ClientBucket, FederatedLogReg,
-                                build_dense_problem)
+from repro.core.problem import ClientBucket, FederatedLogReg
+from repro.core.registry import register
+from repro.core.solver import FederatedSolver, SolverState
 
 _SOLVERS = ("gd", "svrg")
 
@@ -160,11 +161,13 @@ def _dane_svrg_pass(w0, full_grad, bucket: ClientBucket, lam, cfg: DANEConfig,
                                 keys)
 
 
-class DANE:
-    """Stateful driver mirroring :class:`repro.core.fsvrg.FSVRG`: per-round
+class DANE(FederatedSolver):
+    """:class:`~repro.core.solver.FederatedSolver` for Algorithm 2: per-round
     full gradient (1 extra communication, as in Alg. 2 step 1) closed over
     the client pass; sampling/aggregation on the shared engine with uniform
     1/K weighting (Alg. 2 step 3: "averages the solutions")."""
+
+    name = "dane"
 
     def __init__(self, problem: FederatedLogReg, cfg: DANEConfig = DANEConfig()):
         self.problem = problem
@@ -190,23 +193,14 @@ class DANE:
             EngineConfig(participation=cfg.participation, weighting="uniform"),
         )
 
-    def round(self, w: jax.Array, key: jax.Array) -> jax.Array:
-        full_grad = self.problem.flat.grad(w)
+    def round(self, state: SolverState, key: jax.Array) -> SolverState:
+        full_grad = self.problem.flat.grad(state.w)
 
         def dane_pass(w, bi, bucket, kb):
             return self._passes[bi](w, full_grad, key=kb)
 
-        return self.engine.round(w, key, dane_pass)
-
-    def run(self, w0: jax.Array, rounds: int, seed: int = 0, callback=None):
-        w = w0
-        key = jax.random.PRNGKey(seed)
-        history = []
-        for r in range(rounds):
-            w = self.round(w, jax.random.fold_in(key, r))
-            if callback is not None:
-                history.append(callback(w, r))
-        return w, history
+        w = self.engine.round(state.w, key, dane_pass)
+        return state.replace(w=w, round=state.round + 1)
 
 
 def dane_svrg_round(problem: FederatedLogReg, w, key, stepsize: float, m: int):
@@ -214,23 +208,33 @@ def dane_svrg_round(problem: FederatedLogReg, w, key, stepsize: float, m: int):
     the original entry point, now a thin wrapper over the engine port."""
     cfg = DANEConfig(eta=1.0, mu=0.0, local_solver="svrg",
                      svrg_stepsize=stepsize, svrg_steps=m)
-    return DANE(problem, cfg).round(w, key)
+    solver = DANE(problem, cfg)
+    return solver.round(solver.init(w), key).w
 
 
-class DANERidge:
+class DANERidge(FederatedSolver):
     """Exact DANE for ridge regression (d×d local solves) on the engine.
 
     F_k(w) = 1/(2 n_k)||X_kᵀw − y_k||² + (λ/2)||w||²; subproblem (10) is the
     linear system (H_k + µI) w = c_k + a_k + µw^t with H_k = X_kX_kᵀ/n_k + λI
     and c_k = X_k y_k / n_k, solved exactly per client (vmapped over each
-    bucket) and uniformly averaged by the engine."""
+    bucket) and uniformly averaged by the engine.  ``problem`` must be a
+    :func:`~repro.core.problem.build_dense_problem` layout; λ is read from
+    ``problem.flat.lam``."""
 
-    def __init__(self, Xs, ys, lam: float, *, eta: float = 1.0,
+    name = "dane_ridge"
+
+    def __init__(self, problem: FederatedLogReg, *, eta: float = 1.0,
                  mu: float = 0.0):
-        self.problem = build_dense_problem(Xs, ys, lam)
-        self.lam, self.eta, self.mu = float(lam), float(eta), float(mu)
+        self.problem = problem
+        self.lam = float(problem.flat.lam)
+        self.eta, self.mu = float(eta), float(mu)
         self.engine = RoundEngine(self.problem,
                                   EngineConfig(weighting="uniform"))
+
+    @property
+    def hyperparams(self):
+        return {"eta": self.eta, "mu": self.mu}
 
     def full_grad(self, w: jax.Array) -> jax.Array:
         """∇f(w) = (1/n) Σ_k X_k (X_kᵀ w − y_k) + λw, from the buckets."""
@@ -241,9 +245,8 @@ class DANERidge:
             g = g + jnp.einsum("kmd,km->d", b.val, resid) / n
         return g
 
-    def round(self, w: jax.Array, key: Optional[jax.Array] = None) -> jax.Array:
-        key = jax.random.PRNGKey(0) if key is None else key
-        fg = self.full_grad(w)
+    def round(self, state: SolverState, key: jax.Array) -> SolverState:
+        fg = self.full_grad(state.w)
         lam, eta, mu = self.lam, self.eta, self.mu
 
         def ridge_pass(w, bi, bucket, kb):
@@ -259,4 +262,24 @@ class DANERidge:
 
             return jax.vmap(one_client)(bucket.val, bucket.y, bucket.n_k)
 
-        return self.engine.round(w, key, ridge_pass)
+        w = self.engine.round(state.w, key, ridge_pass)
+        return state.replace(w=w, round=state.round + 1)
+
+
+def _dane_defaults():
+    from repro.configs import get_dane_config
+    c = get_dane_config()
+    return {"eta": c.eta, "mu": c.mu, "local_steps": c.local_steps,
+            "local_lr": c.local_lr}
+
+
+@register("dane", defaults=_dane_defaults,
+          description="DANE (Algorithm 2) with inexact GD/SVRG local solvers")
+def _make_dane(problem: FederatedLogReg, **kw) -> DANE:
+    return DANE(problem, DANEConfig(**kw))
+
+
+@register("dane_ridge", layout="dense",
+          description="exact DANE for ridge regression (d×d local solves)")
+def _make_dane_ridge(problem: FederatedLogReg, **kw) -> DANERidge:
+    return DANERidge(problem, **kw)

@@ -226,16 +226,3 @@ class RoundEngine:
             new_states.append(s_b)
             wi += b.num_clients
         return self.aggregate(w, deltas, key), new_states
-
-    def run(self, w0: jax.Array, rounds: int, client_pass: ClientPassFn,
-            seed: int = 0, callback=None):
-        """Round loop with the shared per-round key schedule
-        (``fold_in(PRNGKey(seed), r)``)."""
-        w = w0
-        key = jax.random.PRNGKey(seed)
-        history = []
-        for r in range(rounds):
-            w = self.round(w, jax.random.fold_in(key, r), client_pass)
-            if callback is not None:
-                history.append(callback(w, r))
-        return w, history

@@ -33,6 +33,8 @@ import jax.numpy as jnp
 
 from repro.core.engine import EngineConfig, RoundEngine
 from repro.core.problem import ClientBucket, FederatedLogReg
+from repro.core.registry import register
+from repro.core.solver import FederatedSolver, SolverState
 
 
 @dataclasses.dataclass(frozen=True)
@@ -81,8 +83,11 @@ def _local_sgd_pass(w0, bucket: ClientBucket, lam, cfg: FedAvgConfig,
     return jax.vmap(one_client)(bucket.idx, bucket.val, bucket.y, bucket.n_k, keys)
 
 
-class FedAvg:
-    """Stateful driver mirroring :class:`repro.core.fsvrg.FSVRG`."""
+class FedAvg(FederatedSolver):
+    """:class:`~repro.core.solver.FederatedSolver` mirroring
+    :class:`repro.core.fsvrg.FSVRG`."""
+
+    name = "fedavg"
 
     def __init__(self, problem: FederatedLogReg, cfg: FedAvgConfig = FedAvgConfig()):
         self.problem = problem
@@ -104,15 +109,22 @@ class FedAvg:
             ),
         )
 
-    def round(self, w: jax.Array, key: jax.Array) -> jax.Array:
+    def round(self, state: SolverState, key: jax.Array) -> SolverState:
         def fedavg_pass(w, bi, bucket, kb):
             return self._passes[bi](w, key=kb)
 
-        return self.engine.round(w, key, fedavg_pass)
+        w = self.engine.round(state.w, key, fedavg_pass)
+        return state.replace(w=w, round=state.round + 1)
 
-    def run(self, w0: jax.Array, rounds: int, seed: int = 0, callback=None):
-        def fedavg_pass(w, bi, bucket, kb):
-            return self._passes[bi](w, key=kb)
 
-        return self.engine.run(w0, rounds, fedavg_pass, seed=seed,
-                               callback=callback)
+def _fedavg_defaults():
+    from repro.configs import get_fedavg_config
+    c = get_fedavg_config()
+    return {"stepsize": c.stepsize, "local_epochs": c.local_epochs,
+            "participation": c.participation}
+
+
+@register("fedavg", defaults=_fedavg_defaults,
+          description="Federated Averaging (arXiv:1602.05629, B=∞)")
+def _make_fedavg(problem: FederatedLogReg, **kw) -> FedAvg:
+    return FedAvg(problem, FedAvgConfig(**kw))

@@ -29,6 +29,8 @@ import jax.numpy as jnp
 from repro.core import scaling
 from repro.core.engine import EngineConfig, RoundEngine
 from repro.core.problem import ClientBucket, FederatedLogReg
+from repro.core.registry import register
+from repro.core.solver import FederatedSolver, SolverState
 
 
 @dataclasses.dataclass(frozen=True)
@@ -96,15 +98,17 @@ def _client_pass(w0, full_grad, bucket: ClientBucket, lam, phi, cfg: FSVRGConfig
     return jax.vmap(one_client)(bucket.idx, bucket.val, bucket.y, bucket.n_k, keys)
 
 
-class FSVRG:
-    """Stateful driver: precomputes φ and A once, then runs rounds on the
-    shared :class:`~repro.core.engine.RoundEngine` (which owns client
-    sampling, weighting, and aggregation — mods. 2 & 4 map onto its
-    ``weighting`` / ``server_scaling`` knobs)."""
+class FSVRG(FederatedSolver):
+    """:class:`~repro.core.solver.FederatedSolver` for Algorithms 3 & 4:
+    precomputes φ and A once, then runs rounds on the shared
+    :class:`~repro.core.engine.RoundEngine` (which owns client sampling,
+    weighting, and aggregation — mods. 2 & 4 map onto its ``weighting`` /
+    ``server_scaling`` knobs)."""
 
     def __init__(self, problem: FederatedLogReg, cfg: FSVRGConfig = FSVRGConfig()):
         self.problem = problem
         self.cfg = cfg
+        self.name = "svrg_naive" if cfg.naive else "fsvrg"
         flat = problem.flat
         n = flat.n
         self.phi = scaling.global_feature_counts(flat) / n
@@ -124,26 +128,38 @@ class FSVRG:
             a_diag=self.a_diag,
         )
 
-    def round(self, w: jax.Array, key: jax.Array) -> jax.Array:
-        full_grad = self.problem.flat.grad(w)
+    def round(self, state: SolverState, key: jax.Array) -> SolverState:
+        full_grad = self.problem.flat.grad(state.w)
 
         def fsvrg_pass(w, bi, bucket, kb):
             return self._passes[bi](w, full_grad, phi=self.phi, key=kb)
 
-        return self.engine.round(w, key, fsvrg_pass)
-
-    def run(self, w0: jax.Array, rounds: int, seed: int = 0, callback=None):
-        w = w0
-        key = jax.random.PRNGKey(seed)
-        history = []
-        for r in range(rounds):
-            w = self.round(w, jax.random.fold_in(key, r))
-            if callback is not None:
-                history.append(callback(w, r))
-        return w, history
+        w = self.engine.round(state.w, key, fsvrg_pass)
+        return state.replace(w=w, round=state.round + 1)
 
 
 def naive_fsvrg_round(problem: FederatedLogReg, w, key, stepsize: float, m: Optional[int] = None):
     """Algorithm 3: S=I, A=I, h_k=h, m uniform samples, (1/K)-average agg."""
     cfg = FSVRGConfig(stepsize=stepsize, naive=True, naive_steps=m or 0)
-    return FSVRG(problem, cfg).round(w, key)
+    solver = FSVRG(problem, cfg)
+    return solver.round(solver.init(w), key).w
+
+
+def _fsvrg_defaults():
+    from repro.configs import get_fsvrg_config
+    c = get_fsvrg_config()
+    return {"stepsize": c.stepsize}
+
+
+@register("fsvrg", defaults=_fsvrg_defaults,
+          description="Federated SVRG (Algorithm 4, all four modifications)")
+def _make_fsvrg(problem: FederatedLogReg, **kw) -> FSVRG:
+    return FSVRG(problem, FSVRGConfig(**kw))
+
+
+@register("svrg_naive",
+          defaults=lambda: {"stepsize": 0.01, "naive_steps": 50},
+          description="naive distributed SVRG (Algorithm 3: S=I, A=I, "
+                      "fixed h, uniform averaging)")
+def _make_svrg_naive(problem: FederatedLogReg, **kw) -> FSVRG:
+    return FSVRG(problem, FSVRGConfig(naive=True, **kw))

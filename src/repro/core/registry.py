@@ -1,0 +1,104 @@
+"""String-keyed solver registry: ``make_solver("fedavg", problem)``.
+
+Every round-based algorithm registers a factory under a stable name, with
+its run defaults pulled lazily from :mod:`repro.configs` — adding an
+algorithm is one module with a ``register(...)`` call at the bottom, zero
+benchmark edits (``benchmarks/fig2_convergence.py`` and the examples just
+loop over names).
+
+``layout`` records which problem layout a factory expects:
+
+  * ``"sparse"`` — the bucketed sparse logreg problem from
+    :func:`repro.core.problem.build_problem` (the paper's §4 setting).
+  * ``"dense"``  — a :func:`repro.core.problem.build_dense_problem` ridge
+    layout (equal n_k for the Appendix-A methods).
+
+Registration happens on import of the algorithm modules; ``make_solver`` /
+``available`` force that import, so callers never need to pre-import
+``repro.core``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional
+
+from repro.core.problem import FederatedLogReg
+from repro.core.solver import FederatedSolver
+
+_LAYOUTS = ("sparse", "dense")
+
+#: factory(problem, **kwargs) -> FederatedSolver
+SolverFactory = Callable[..., FederatedSolver]
+
+#: defaults() -> dict of factory kwargs (lazy, so repro.configs loads on use)
+DefaultsFn = Callable[[], Dict[str, Any]]
+
+
+@dataclasses.dataclass(frozen=True)
+class SolverSpec:
+    name: str
+    factory: SolverFactory
+    layout: str = "sparse"
+    defaults: Optional[DefaultsFn] = None
+    description: str = ""
+
+
+_REGISTRY: Dict[str, SolverSpec] = {}
+
+
+def register(name: str, *, layout: str = "sparse",
+             defaults: Optional[DefaultsFn] = None, description: str = ""):
+    """Decorator/registrar for a solver factory.
+
+    ``defaults`` is a zero-arg callable returning the factory's default
+    kwargs (typically read from a ``repro.configs`` run config); overrides
+    passed to :func:`make_solver` win key-by-key.
+    """
+    if layout not in _LAYOUTS:
+        raise ValueError(f"layout must be one of {_LAYOUTS}")
+
+    def deco(factory: SolverFactory) -> SolverFactory:
+        if name in _REGISTRY:
+            raise ValueError(f"solver {name!r} already registered")
+        _REGISTRY[name] = SolverSpec(name=name, factory=factory,
+                                     layout=layout, defaults=defaults,
+                                     description=description)
+        return factory
+
+    return deco
+
+
+def _populate() -> None:
+    """Import the algorithm modules so their ``register`` calls run."""
+    import repro.core.baselines  # noqa: F401  (gd)
+    import repro.core.cocoa      # noqa: F401  (cocoa, primal, dual)
+    import repro.core.dane       # noqa: F401  (dane, dane_ridge)
+    import repro.core.fedavg     # noqa: F401  (fedavg)
+    import repro.core.fsvrg      # noqa: F401  (fsvrg, svrg_naive)
+
+
+def get_spec(name: str) -> SolverSpec:
+    _populate()
+    if name not in _REGISTRY:
+        raise KeyError(
+            f"unknown solver {name!r}; registered: {sorted(_REGISTRY)}")
+    return _REGISTRY[name]
+
+
+def make_solver(name: str, problem: FederatedLogReg,
+                **overrides) -> FederatedSolver:
+    """Construct a registered solver on ``problem``.
+
+    Defaults come from the spec's config hook; ``overrides`` replace them
+    key-by-key (unknown keys fail loudly in the factory/config signature).
+    """
+    spec = get_spec(name)
+    kwargs = dict(spec.defaults()) if spec.defaults is not None else {}
+    kwargs.update(overrides)
+    return spec.factory(problem, **kwargs)
+
+
+def available() -> tuple:
+    """All registered solver names, sorted."""
+    _populate()
+    return tuple(sorted(_REGISTRY))

@@ -1,0 +1,192 @@
+"""`Trainer` — the one round-loop driver every solver shares.
+
+Before this module each benchmark/example hand-rolled its own loop, seed
+schedule, and stepsize sweep per algorithm (~30 lines each in
+``benchmarks/fig2_convergence.py``).  The Trainer owns all of it:
+
+  * **Key schedule** — round r uses ``fold_in(PRNGKey(seed), r)`` with r the
+    *absolute* round index from ``state.round``, so a restored checkpoint
+    resumes the exact same key sequence it would have seen uninterrupted.
+  * **Eval / history** — ``eval_fn(w) -> dict`` of scalars, recorded every
+    round as Python floats; ``callback(state, r)`` for side effects.
+  * **Scan fast path** — with ``scan=True`` the whole loop runs as one
+    ``jit(lax.scan)`` over rounds.  Valid whenever the solver state is a
+    pure pytree and ``round`` is traceable (every solver in this repo) and
+    ``eval_fn`` is jax-traceable; ``callback`` and mid-run checkpointing
+    are Python-side and therefore excluded.  Numerics: XLA may fuse the
+    round body differently than the eager per-round path, so scan
+    trajectories agree to float tolerance, not bit-for-bit — the pinning
+    tests run the loop path.
+  * **Checkpointing** — ``checkpoint_dir`` + ``checkpoint_every`` save the
+    state pytree through :mod:`repro.checkpoint`; ``Trainer.restore``
+    rebuilds a :class:`~repro.core.solver.SolverState` and ``fit(state=...)``
+    resumes from it.
+
+:func:`sweep` is the paper's retrospective stepsize-sweep protocol (run
+every candidate for the full round budget, keep the best final objective),
+previously a private helper inside the fig2 benchmark.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.solver import FederatedSolver, SolverState
+
+EvalFn = Callable[[jax.Array], Dict[str, Any]]
+
+
+@dataclasses.dataclass
+class FitResult:
+    """What a training run produced: final state + per-round eval history
+    (plus the solver that produced it, for hyperparam introspection)."""
+
+    state: SolverState
+    history: List[Dict[str, float]]
+    solver: Optional[FederatedSolver] = None
+
+    @property
+    def w(self) -> jax.Array:
+        return self.state.w
+
+
+def _tuplify(node):
+    """Rebuild tuples from the lists `repro.checkpoint.restore` returns."""
+    if isinstance(node, (list, tuple)):
+        return tuple(_tuplify(x) for x in node)
+    if isinstance(node, dict):
+        return {k: _tuplify(v) for k, v in node.items()}
+    return node
+
+
+class Trainer:
+    """Drives ``solver.round`` for a fixed number of rounds.
+
+    The per-round key is ``fold_in(PRNGKey(seed), r)`` — the single schedule
+    every curve in the fig2 benchmark now derives from its ``--seed``.
+    """
+
+    def __init__(self, solver: FederatedSolver, *, rounds: int, seed: int = 0,
+                 eval_fn: Optional[EvalFn] = None,
+                 callback: Optional[Callable[[SolverState, int], None]] = None,
+                 scan: bool = False,
+                 checkpoint_dir: Optional[str] = None,
+                 checkpoint_every: int = 0):
+        if scan and callback is not None:
+            raise ValueError("scan=True runs the loop inside jit; Python "
+                             "callbacks need the eager path")
+        if scan and checkpoint_every:
+            raise ValueError("scan=True runs the loop inside jit; periodic "
+                             "checkpointing needs the eager path (the final "
+                             "state is still saved to checkpoint_dir)")
+        if checkpoint_every and not checkpoint_dir:
+            raise ValueError("checkpoint_every requires a checkpoint_dir")
+        self.solver = solver
+        self.rounds = int(rounds)
+        self.seed = int(seed)
+        self.eval_fn = eval_fn
+        self.callback = callback
+        self.scan = scan
+        self.checkpoint_dir = checkpoint_dir
+        self.checkpoint_every = int(checkpoint_every)
+
+    # -- checkpointing ----------------------------------------------------- #
+
+    def save(self, state: SolverState, path: Optional[str] = None) -> None:
+        from repro import checkpoint
+        path = path or self.checkpoint_dir
+        checkpoint.save(path, {"w": state.w, "aux": state.aux,
+                               "round": state.round},
+                        step=int(state.round),
+                        metadata={"solver": self.solver.name,
+                                  "seed": self.seed})
+
+    @staticmethod
+    def restore(path: str) -> SolverState:
+        from repro import checkpoint
+        tree, info = checkpoint.restore(path)
+        return SolverState(w=tree["w"], aux=_tuplify(tree.get("aux", ())),
+                           round=jnp.asarray(tree.get("round", info["step"]),
+                                             jnp.int32))
+
+    # -- the round loop ---------------------------------------------------- #
+
+    def fit(self, w0: Optional[jax.Array] = None,
+            state: Optional[SolverState] = None) -> FitResult:
+        """Run rounds ``state.round .. rounds-1``; fresh ``init(w0)`` state
+        unless an explicit (e.g. restored) ``state`` is given."""
+        if state is None:
+            state = self.solver.init(w0)
+        elif w0 is not None:
+            raise ValueError("pass w0 or state, not both")
+        start = int(state.round)
+        if start >= self.rounds:
+            return FitResult(state=state, history=[], solver=self.solver)
+        if self.scan:
+            return self._fit_scan(state, start)
+
+        base = jax.random.PRNGKey(self.seed)
+        history: List[Dict[str, float]] = []
+        saved_at = -1
+        for r in range(start, self.rounds):
+            state = self.solver.round(state, jax.random.fold_in(base, r))
+            if self.eval_fn is not None:
+                history.append({k: float(v)
+                                for k, v in self.eval_fn(state.w).items()})
+            if self.callback is not None:
+                self.callback(state, r)
+            if (self.checkpoint_every
+                    and (r + 1) % self.checkpoint_every == 0):
+                self.save(state)
+                saved_at = r + 1
+        # the saved checkpoint must never lag the returned result
+        if self.checkpoint_dir and saved_at != self.rounds:
+            self.save(state)
+        return FitResult(state=state, history=history, solver=self.solver)
+
+    def _fit_scan(self, state: SolverState, start: int) -> FitResult:
+        base = jax.random.PRNGKey(self.seed)
+        rs = jnp.arange(start, self.rounds)
+        keys = jax.vmap(lambda r: jax.random.fold_in(base, r))(rs)
+
+        def body(s, key):
+            s = self.solver.round(s, key)
+            metrics = self.eval_fn(s.w) if self.eval_fn is not None else {}
+            return s, metrics
+
+        final, stacked = jax.jit(
+            lambda s, ks: jax.lax.scan(body, s, ks))(state, keys)
+        history = [
+            {k: float(v[i]) for k, v in stacked.items()}
+            for i in range(self.rounds - start)
+        ] if self.eval_fn is not None else []
+        if self.checkpoint_dir:
+            self.save(final)
+        return FitResult(state=final, history=history, solver=self.solver)
+
+
+def sweep(build_solver: Callable[[Any], FederatedSolver],
+          candidates: Sequence[Any], *, rounds: int, seed: int = 0,
+          eval_fn: EvalFn, objective: str = "f",
+          **trainer_kw) -> Tuple[Optional[FitResult], Optional[Any]]:
+    """Retrospective hyperparameter sweep (the paper's protocol).
+
+    Runs ``build_solver(v)`` for the full round budget for every candidate
+    ``v`` and keeps the run whose *final* ``history[-1][objective]`` is
+    lowest (non-finite runs are discarded).  Returns
+    ``(best_result, best_value)`` — ``(None, None)`` if every run diverged.
+    """
+    best_res, best_v, best_f = None, None, np.inf
+    for v in candidates:
+        res = Trainer(build_solver(v), rounds=rounds, seed=seed,
+                      eval_fn=eval_fn, **trainer_kw).fit()
+        if not res.history:        # degenerate budget (rounds <= start)
+            continue
+        f = res.history[-1][objective]
+        if np.isfinite(f) and f < best_f:
+            best_res, best_v, best_f = res, v, f
+    return best_res, best_v

@@ -216,3 +216,104 @@ def dual_method_round(Xs, ys, alphas: List[jax.Array], lam, sigma):
         h = jnp.linalg.solve(M, c)
         new_alphas.append(a + h)
     return new_alphas
+
+
+# --------------------------------------------------------------------- #
+# pre-redesign fig2 round loops (Trainer pinning oracles)
+# --------------------------------------------------------------------- #
+#
+# Before the FederatedSolver/Trainer redesign, benchmarks/fig2_convergence.py
+# hand-rolled one round loop per algorithm: construct the solver, then
+# ``for r: w = round(w, fold_in(PRNGKey(seed), r)); hist.append(eval(w))``
+# (CoCoA+ additionally threaded its mutable dual blocks).  These functions
+# keep those loop bodies verbatim — inlining each pre-redesign ``round``
+# implementation at the engine level — parametrized on the seed, so
+# tests/test_trainer.py can pin ``Trainer.fit`` against them bit-for-bit.
+# The vmapped client passes are shared with the live solvers on purpose:
+# the passes themselves are pinned against the fully independent list-based
+# oracles above; what these loops pin is the *driver* — key schedule, round
+# ordering, state threading, and history capture.
+
+
+def _round_key(seed: int, r: int):
+    return jax.random.fold_in(jax.random.PRNGKey(seed), r)
+
+
+def fig2_fsvrg_loop(problem: FederatedLogReg, h: float, rounds: int,
+                    seed: int, eval_fn):
+    """The pre-redesign fig2 FSVRG curve: fresh solver, hand-rolled loop."""
+    from repro.core import FSVRG, FSVRGConfig
+
+    solver = FSVRG(problem, FSVRGConfig(stepsize=h))
+    w = jnp.zeros(problem.d)
+    hist = []
+    for r in range(rounds):
+        # verbatim pre-redesign FSVRG.round(w, key) body
+        full_grad = problem.flat.grad(w)
+
+        def fsvrg_pass(w_, bi, bucket, kb, fg=full_grad):
+            return solver._passes[bi](w_, fg, phi=solver.phi, key=kb)
+
+        w = solver.engine.round(w, _round_key(seed, r), fsvrg_pass)
+        hist.append(eval_fn(w))
+    return w, hist
+
+
+def fig2_fedavg_loop(problem: FederatedLogReg, h: float, local_epochs: int,
+                     rounds: int, seed: int, eval_fn):
+    """The pre-redesign fig2 FedAvg curve."""
+    from repro.core import FedAvg, FedAvgConfig
+
+    solver = FedAvg(problem, FedAvgConfig(stepsize=h,
+                                          local_epochs=local_epochs))
+    w = jnp.zeros(problem.d)
+    hist = []
+    for r in range(rounds):
+        # verbatim pre-redesign FedAvg.round(w, key) body
+        w = solver.engine.round(
+            w, _round_key(seed, r),
+            lambda w_, bi, bucket, kb: solver._passes[bi](w_, key=kb))
+        hist.append(eval_fn(w))
+    return w, hist
+
+
+def fig2_dane_loop(problem: FederatedLogReg, rounds: int, seed: int, eval_fn,
+                   **dane_kw):
+    """The pre-redesign fig2 DANE curve (GD local solver)."""
+    from repro.core import DANE, DANEConfig
+
+    solver = DANE(problem, DANEConfig(**dane_kw))
+    w = jnp.zeros(problem.d)
+    hist = []
+    for r in range(rounds):
+        # verbatim pre-redesign DANE.round(w, key) body
+        full_grad = problem.flat.grad(w)
+
+        def dane_pass(w_, bi, bucket, kb, fg=full_grad):
+            return solver._passes[bi](w_, fg, key=kb)
+
+        w = solver.engine.round(w, _round_key(seed, r), dane_pass)
+        hist.append(eval_fn(w))
+    return w, hist
+
+
+def fig2_cocoa_loop(problem: FederatedLogReg, rounds: int, seed: int,
+                    eval_fn, sigma=None):
+    """The pre-redesign fig2 CoCoA+ curve: the mutable-class round body
+    (dual blocks threaded by hand through round_with_state)."""
+    from repro.core.cocoa import CoCoAPlus
+
+    solver = CoCoAPlus(problem, sigma=sigma)
+    w = jnp.zeros(problem.d)
+    alphas = [jnp.zeros((b.num_clients, b.m_pad)) for b in problem.buckets]
+    hist = []
+    for r in range(rounds):
+        # verbatim pre-redesign CoCoAPlus.round(key) body, de-mutabilized
+        def cocoa_pass(w_, bi, bucket, alpha_b, kb):
+            u, dr = solver._pass[bi](w_, alpha_b, kb)
+            return dr * solver._scale, alpha_b + u
+
+        w, alphas = solver.engine.round_with_state(
+            w, alphas, _round_key(seed, r), cocoa_pass)
+        hist.append(eval_fn(w))
+    return w, alphas, hist

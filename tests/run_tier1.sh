@@ -12,7 +12,13 @@ python -m pytest --collect-only -q > /dev/null
 
 # Benchmark smoke: the fig2 --algo wiring must run end-to-end (tiny config,
 # 2 rounds, truncated OPT) so engine/benchmark plumbing can't rot silently.
+# dane covers the registry sweep path; fedavg covers the single-solver
+# Trainer driver path (the same make_solver/fit route the examples and the
+# README quickstart use; the lax.scan fast path is covered by
+# tests/test_trainer.py).
 python benchmarks/fig2_convergence.py --algo dane --rounds 2 --scale 0.001 \
     --opt-iters 50 > /dev/null
+python benchmarks/fig2_convergence.py --algo fedavg --rounds 2 --scale 0.001 \
+    --opt-iters 50 --seed 1 > /dev/null
 
 exec python -m pytest -x -q "$@"

@@ -14,7 +14,7 @@ import pytest
 
 import _oracles
 from repro.core import (CoCoAConfig, CoCoAPlus, DANE, DANEConfig, DANERidge,
-                        DualMethod, PrimalMethod)
+                        DualMethod, PrimalMethod, build_dense_problem)
 from repro.core.cocoa import dual_to_primal
 
 
@@ -45,12 +45,13 @@ def test_dane_ridge_engine_pins_list_oracle(x64, eta, mu):
     at the f64 noise floor."""
     Xs, ys = _ridge_data()
     lam = 0.1
-    solver = DANERidge(Xs, ys, lam, eta=eta, mu=mu)
-    w_eng = w_ref = jnp.asarray(np.random.default_rng(1).standard_normal(8))
+    solver = DANERidge(build_dense_problem(Xs, ys, lam), eta=eta, mu=mu)
+    w_ref = jnp.asarray(np.random.default_rng(1).standard_normal(8))
+    state = solver.init(w_ref)
     for _ in range(3):
-        w_eng = solver.round(w_eng)
+        state = solver.round(state, jax.random.PRNGKey(0))
         w_ref = _oracles.dane_round_ridge(Xs, ys, w_ref, lam, eta=eta, mu=mu)
-        np.testing.assert_allclose(np.asarray(w_eng), np.asarray(w_ref),
+        np.testing.assert_allclose(np.asarray(state.w), np.asarray(w_ref),
                                    rtol=1e-12, atol=1e-13)
 
 
@@ -61,15 +62,16 @@ def test_dane_gd_engine_pins_list_oracle(tiny_problem):
     prob = tiny_problem
     cfg = DANEConfig(eta=1.0, mu=0.3, local_steps=10, local_lr=0.3)
     solver = DANE(prob, cfg)
-    w_eng = w_ref = jnp.zeros(prob.d)
+    state = solver.init()
+    w_ref = jnp.zeros(prob.d)
     key = jax.random.PRNGKey(0)
     for r in range(2):
         kr = jax.random.fold_in(key, r)
-        w_eng = solver.round(w_eng, kr)
+        state = solver.round(state, kr)
         w_ref = _oracles.dane_round_logreg_gd(
             prob, w_ref, eta=cfg.eta, mu=cfg.mu, local_steps=cfg.local_steps,
             local_lr=cfg.local_lr)
-        np.testing.assert_allclose(np.asarray(w_eng), np.asarray(w_ref),
+        np.testing.assert_allclose(np.asarray(state.w), np.asarray(w_ref),
                                    rtol=2e-5, atol=2e-6)
 
 
@@ -82,8 +84,10 @@ def test_dane_gd_kernel_path_matches_jnp(tiny_problem):
     w0 = jnp.zeros(prob.d)
     key = jax.random.PRNGKey(5)
     cfg = dict(eta=1.0, mu=0.3, local_steps=5, local_lr=0.3)
-    w_j = DANE(prob, DANEConfig(use_kernel=False, **cfg)).round(w0, key)
-    w_k = DANE(prob, DANEConfig(use_kernel=True, **cfg)).round(w0, key)
+    s_j = DANE(prob, DANEConfig(use_kernel=False, **cfg))
+    s_k = DANE(prob, DANEConfig(use_kernel=True, **cfg))
+    w_j = s_j.round(s_j.init(w0), key).w
+    w_k = s_k.round(s_k.init(w0), key).w
     np.testing.assert_allclose(np.asarray(w_k), np.asarray(w_j),
                                rtol=1e-4, atol=1e-6)
 
@@ -104,16 +108,17 @@ def test_cocoa_engine_pins_list_oracle(tiny_problem):
     beyond the pass's own update)."""
     prob = tiny_problem
     solver = CoCoAPlus(prob)
+    state = solver.init()
     w_ref = jnp.zeros(prob.d)
     alphas_ref = [jnp.zeros((b.num_clients, b.m_pad)) for b in prob.buckets]
     for r in range(3):
         key = jax.random.PRNGKey(r)
-        w_eng = solver.round(key)
+        state = solver.round(state, key)
         w_ref, alphas_ref = _oracles.cocoa_round_list(prob, w_ref, alphas_ref,
                                                       key, solver.sigma)
-        np.testing.assert_allclose(np.asarray(w_eng), np.asarray(w_ref),
+        np.testing.assert_allclose(np.asarray(state.w), np.asarray(w_ref),
                                    rtol=1e-5, atol=1e-7)
-        for a_eng, a_ref in zip(solver.alphas, alphas_ref):
+        for a_eng, a_ref in zip(state.aux, alphas_ref):
             np.testing.assert_allclose(np.asarray(a_eng), np.asarray(a_ref),
                                        rtol=1e-5, atol=1e-7)
 
@@ -124,10 +129,11 @@ def test_cocoa_kernel_path_matches_jnp(tiny_problem):
     prob = tiny_problem
     c_j = CoCoAPlus(prob, cfg=CoCoAConfig(use_kernel=False))
     c_k = CoCoAPlus(prob, cfg=CoCoAConfig(use_kernel=True))
+    st_j, st_k = c_j.init(), c_k.init()
     for r in range(2):
-        c_j.round(jax.random.PRNGKey(r))
-        c_k.round(jax.random.PRNGKey(r))
-    np.testing.assert_allclose(np.asarray(c_k.w), np.asarray(c_j.w),
+        st_j = c_j.round(st_j, jax.random.PRNGKey(r))
+        st_k = c_k.round(st_k, jax.random.PRNGKey(r))
+    np.testing.assert_allclose(np.asarray(st_k.w), np.asarray(st_j.w),
                                rtol=1e-6, atol=1e-7)
 
 
@@ -139,28 +145,28 @@ def test_cocoa_partial_participation_freezes_left_out_duals(tiny_problem):
     prob = tiny_problem
     solver = CoCoAPlus(prob, cfg=CoCoAConfig(participation=0.5))
     key = jax.random.PRNGKey(3)
-    alphas_before = [jnp.array(a) for a in solver.alphas]
-    solver.round(key)
+    state0 = solver.init()
+    state = solver.round(state0, key)
     wi = 0
     num_frozen = 0
     for bi, b in enumerate(prob.buckets):
         kb = jax.random.fold_in(key, wi)
         sel = np.asarray(solver.engine.participation_mask(kb, b.num_clients))
-        changed = np.abs(np.asarray(solver.alphas[bi])
-                         - np.asarray(alphas_before[bi])).max(axis=1) > 0
+        changed = np.abs(np.asarray(state.aux[bi])
+                         - np.asarray(state0.aux[bi])).max(axis=1) > 0
         # left-out clients must be frozen; participants (with data) update
         assert not changed[sel == 0.0].any()
         num_frozen += int((sel == 0.0).sum())
         wi += b.num_clients
     assert num_frozen > 0  # the draw actually left someone out
 
-    solver.round(jax.random.PRNGKey(4))
-    solver.round(jax.random.PRNGKey(5))
+    state = solver.round(state, jax.random.PRNGKey(4))
+    state = solver.round(state, jax.random.PRNGKey(5))
     lam, n = prob.flat.lam, prob.flat.n
     xa = jnp.zeros(prob.d)
-    for b, a in zip(prob.buckets, solver.alphas):
+    for b, a in zip(prob.buckets, state.aux):
         xa = xa.at[b.idx].add(a[:, :, None] * b.val)
-    np.testing.assert_allclose(np.asarray(solver.w),
+    np.testing.assert_allclose(np.asarray(state.w),
                                np.asarray(xa / (lam * n)),
                                rtol=1e-5, atol=1e-6)
 
@@ -171,10 +177,11 @@ def test_cocoa_pallas_aggregator_matches_dense(tiny_problem):
     prob = tiny_problem
     c_d = CoCoAPlus(prob, cfg=CoCoAConfig(aggregator="dense"))
     c_p = CoCoAPlus(prob, cfg=CoCoAConfig(aggregator="pallas"))
+    st_d, st_p = c_d.init(), c_p.init()
     for r in range(2):
-        c_d.round(jax.random.PRNGKey(r))
-        c_p.round(jax.random.PRNGKey(r))
-    np.testing.assert_allclose(np.asarray(c_p.w), np.asarray(c_d.w),
+        st_d = c_d.round(st_d, jax.random.PRNGKey(r))
+        st_p = c_p.round(st_p, jax.random.PRNGKey(r))
+    np.testing.assert_allclose(np.asarray(st_p.w), np.asarray(st_d.w),
                                rtol=1e-5, atol=1e-6)
 
 
@@ -188,16 +195,18 @@ def test_primal_method_engine_pins_list_oracle(x64):
     lam, sigma = 0.1, 2.0
     rng = np.random.default_rng(5)
     alphas0 = [jnp.asarray(rng.standard_normal(12)) for _ in range(4)]
-    solver = PrimalMethod(Xs, ys, alphas0, lam, sigma)
+    solver = PrimalMethod(build_dense_problem(Xs, ys, lam), sigma=sigma,
+                          alphas0=alphas0)
+    state = solver.init()
     w, gs, eta, mu = _oracles.primal_method_init(Xs, alphas0, lam, sigma)
-    np.testing.assert_allclose(np.asarray(solver.w), np.asarray(w),
+    np.testing.assert_allclose(np.asarray(state.w), np.asarray(w),
                                rtol=1e-12, atol=1e-13)
     for _ in range(4):
-        w_eng = solver.round()
+        state = solver.round(state, jax.random.PRNGKey(0))
         w, gs = _oracles.primal_method_round(Xs, ys, w, gs, lam, eta, mu)
-        np.testing.assert_allclose(np.asarray(w_eng), np.asarray(w),
+        np.testing.assert_allclose(np.asarray(state.w), np.asarray(w),
                                    rtol=1e-11, atol=1e-12)
-        np.testing.assert_allclose(np.asarray(solver.gs[0]),
+        np.testing.assert_allclose(np.asarray(state.aux[0]),
                                    np.asarray(jnp.stack(gs)),
                                    rtol=1e-11, atol=1e-12)
 
@@ -207,17 +216,19 @@ def test_dual_method_engine_pins_list_oracle(x64):
     lam, sigma = 0.1, 4.0
     rng = np.random.default_rng(7)
     alphas0 = [jnp.asarray(rng.standard_normal(12)) for _ in range(4)]
-    solver = DualMethod(Xs, ys, alphas0, lam, sigma)
+    solver = DualMethod(build_dense_problem(Xs, ys, lam), sigma=sigma,
+                        alphas0=alphas0)
+    state = solver.init()
     alphas = list(alphas0)
     for _ in range(4):
-        w_eng = solver.round()
+        state = solver.round(state, jax.random.PRNGKey(0))
         alphas = _oracles.dual_method_round(Xs, ys, alphas, lam, sigma)
         np.testing.assert_allclose(
-            np.asarray(solver.alphas[0]), np.asarray(jnp.stack(alphas)),
+            np.asarray(state.aux[0]), np.asarray(jnp.stack(alphas)),
             rtol=1e-11, atol=1e-12)
         # the engine's incremental w tracks (1/λn) X α exactly
         np.testing.assert_allclose(
-            np.asarray(w_eng), np.asarray(dual_to_primal(Xs, alphas, lam)),
+            np.asarray(state.w), np.asarray(dual_to_primal(Xs, alphas, lam)),
             rtol=1e-11, atol=1e-12)
 
 
@@ -227,4 +238,5 @@ def test_appendix_a_rejects_unequal_sizes(x64):
     ys = [jnp.asarray(rng.standard_normal(m)) for m in (6, 9)]
     alphas0 = [jnp.asarray(rng.standard_normal(m)) for m in (6, 9)]
     with pytest.raises(ValueError):
-        PrimalMethod(Xs, ys, alphas0, 0.1, 2.0)
+        PrimalMethod(build_dense_problem(Xs, ys, 0.1), sigma=2.0,
+                     alphas0=alphas0)

@@ -59,15 +59,15 @@ def test_fsvrg_on_engine_matches_prerefactor_trajectory(tiny_problem, participat
     ]
     apply_fn = jax.jit(lambda w, agg, scale: w + scale * agg)
 
-    w_eng = jnp.zeros(prob.d)
+    state = solver.init()
     w_ref = jnp.zeros(prob.d)
     key = jax.random.PRNGKey(0)
     for r in range(3):
         kr = jax.random.fold_in(key, r)
-        w_eng = solver.round(w_eng, kr)
+        state = solver.round(state, kr)
         w_ref = _prerefactor_fsvrg_round(prob, w_ref, kr, cfg, solver.phi,
                                          solver.a_diag, passes, apply_fn)
-        np.testing.assert_array_equal(np.asarray(w_eng), np.asarray(w_ref))
+        np.testing.assert_array_equal(np.asarray(state.w), np.asarray(w_ref))
 
 
 def test_partial_participation_reweighting_unbiased(small_problem):
@@ -131,12 +131,13 @@ def test_distributed_gd_on_engine_matches_flat_gd(tiny_problem):
     from repro.core.baselines import DistributedGD, gd_round
 
     prob = tiny_problem
-    w_flat = w_eng = jnp.zeros(prob.d)
+    w_flat = jnp.zeros(prob.d)
     solver = DistributedGD(prob, stepsize=2.0)
+    state = solver.init()
     for _ in range(3):
         w_flat = gd_round(prob, w_flat, 2.0)
-        w_eng = solver.round(w_eng)
-        np.testing.assert_allclose(np.asarray(w_eng), np.asarray(w_flat),
+        state = solver.round(state, jax.random.PRNGKey(0))
+        np.testing.assert_allclose(np.asarray(state.w), np.asarray(w_flat),
                                    rtol=1e-5, atol=1e-6)
 
 

@@ -27,7 +27,7 @@ def _x64():
 
 
 from repro.core import (DANERidge, DualMethod, PrimalMethod,
-                        naive_fsvrg_round)
+                        build_dense_problem, naive_fsvrg_round)
 from repro.core.cocoa import dual_to_primal
 from repro.core.dane import dane_svrg_round, ridge_grad
 
@@ -51,17 +51,20 @@ def test_theorem_5_primal_dual_equivalence(sigma):
     ys = [jnp.asarray(rng.standard_normal(m)) for _ in range(K)]
     alphas0 = [jnp.asarray(rng.standard_normal(m)) for _ in range(K)]
 
-    primal = PrimalMethod(Xs, ys, alphas0, lam, sigma)
-    dual = DualMethod(Xs, ys, alphas0, lam, sigma)
+    dense = build_dense_problem(Xs, ys, lam)
+    primal = PrimalMethod(dense, sigma=sigma, alphas0=alphas0)
+    dual = DualMethod(dense, sigma=sigma, alphas0=alphas0)
+    sp, sd = primal.init(), dual.init()
+    key = jax.random.PRNGKey(0)
     for _ in range(6):
-        wd = dual.round()
-        wp = primal.round()
-        np.testing.assert_allclose(np.asarray(wp), np.asarray(wd),
+        sd = dual.round(sd, key)
+        sp = primal.round(sp, key)
+        np.testing.assert_allclose(np.asarray(sp.w), np.asarray(sd.w),
                                    rtol=1e-9, atol=1e-11)
         # the dual iterate really is (1/λn) X α for the current dual blocks
-        alphas = list(dual.alphas[0])
+        alphas = list(sd.aux[0])
         np.testing.assert_allclose(
-            np.asarray(wd), np.asarray(dual_to_primal(Xs, alphas, lam)),
+            np.asarray(sd.w), np.asarray(dual_to_primal(Xs, alphas, lam)),
             rtol=1e-9, atol=1e-11)
 
 
@@ -76,11 +79,13 @@ def test_dual_method_converges_to_ridge_optimum():
     # closed-form ridge optimum of (1/2n)||X^T w - y||^2 + lam/2 ||w||^2
     w_star = jnp.linalg.solve(X @ X.T / n + lam * jnp.eye(d), X @ y / n)
 
-    alphas0 = [jnp.zeros(m, jnp.float64) for _ in range(K)]
-    solver = DualMethod(Xs, ys, alphas0, lam, sigma=float(K))
+    solver = DualMethod(build_dense_problem(Xs, ys, lam), sigma=float(K))
+    state = solver.init()
+    key = jax.random.PRNGKey(0)
     for _ in range(200):
-        w = solver.round()
-    np.testing.assert_allclose(np.asarray(w), np.asarray(w_star), rtol=1e-5, atol=1e-7)
+        state = solver.round(state, key)
+    np.testing.assert_allclose(np.asarray(state.w), np.asarray(w_star),
+                               rtol=1e-5, atol=1e-7)
 
 
 def test_dane_exact_solves_identical_data_in_one_round():
@@ -92,7 +97,8 @@ def test_dane_exact_solves_identical_data_in_one_round():
     y = jnp.asarray(rng.standard_normal(m))
     Xs, ys = [X] * 4, [y] * 4
     w0 = jnp.asarray(rng.standard_normal(d))
-    w1 = DANERidge(Xs, ys, lam, eta=1.0, mu=0.0).round(w0)
+    solver = DANERidge(build_dense_problem(Xs, ys, lam), eta=1.0, mu=0.0)
+    w1 = solver.round(solver.init(w0), jax.random.PRNGKey(0)).w
     gnorm = float(jnp.linalg.norm(ridge_grad(X, y, w1, lam)))
     assert gnorm < 1e-8, gnorm
 
@@ -106,5 +112,6 @@ def test_dane_property_A_fixed_point():
     X = jnp.concatenate(Xs, axis=1)
     y = jnp.concatenate(ys)
     w_star = jnp.linalg.solve(X @ X.T / n + lam * jnp.eye(d), X @ y / n)
-    w1 = DANERidge(Xs, ys, lam, eta=1.0, mu=0.5).round(w_star)
+    solver = DANERidge(build_dense_problem(Xs, ys, lam), eta=1.0, mu=0.5)
+    w1 = solver.round(solver.init(w_star), jax.random.PRNGKey(0)).w
     np.testing.assert_allclose(np.asarray(w1), np.asarray(w_star), rtol=1e-8)

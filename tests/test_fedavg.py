@@ -35,7 +35,7 @@ def test_single_client_one_epoch_is_sequential_sgd():
     key = jax.random.PRNGKey(7)
 
     solver = FedAvg(prob, FedAvgConfig(stepsize=h, local_epochs=1))
-    w_fed = solver.round(jnp.zeros(prob.d), key)
+    w_fed = solver.round(solver.init(), key).w
 
     # reproduce the engine's key chain to recover the visit order
     kb = jax.random.fold_in(key, 0)                       # bucket key (wi=0)
@@ -63,12 +63,12 @@ def test_objective_decreases_on_unbalanced_clients(small_problem):
     assert sizes.max() > 2 * sizes.min()      # the data really is unbalanced
 
     solver = FedAvg(prob, FedAvgConfig(stepsize=0.05, local_epochs=1))
-    w = jnp.zeros(prob.d)
-    f_prev = float(prob.flat.loss(w))
+    state = solver.init()
+    f_prev = float(prob.flat.loss(state.w))
     key = jax.random.PRNGKey(0)
     for r in range(10):
-        w = solver.round(w, jax.random.fold_in(key, r))
-        f = float(prob.flat.loss(w))
+        state = solver.round(state, jax.random.fold_in(key, r))
+        f = float(prob.flat.loss(state.w))
         assert f < f_prev, (r, f_prev, f)
         f_prev = f
 
@@ -79,10 +79,12 @@ def test_kernel_path_matches_jnp_path(tiny_problem):
     prob = tiny_problem
     w0 = jnp.zeros(prob.d)
     key = jax.random.PRNGKey(5)
-    w_j = FedAvg(prob, FedAvgConfig(stepsize=0.1, local_epochs=2,
-                                    use_kernel=False)).round(w0, key)
-    w_k = FedAvg(prob, FedAvgConfig(stepsize=0.1, local_epochs=2,
-                                    use_kernel=True)).round(w0, key)
+    s_j = FedAvg(prob, FedAvgConfig(stepsize=0.1, local_epochs=2,
+                                    use_kernel=False))
+    s_k = FedAvg(prob, FedAvgConfig(stepsize=0.1, local_epochs=2,
+                                    use_kernel=True))
+    w_j = s_j.round(s_j.init(w0), key).w
+    w_k = s_k.round(s_k.init(w0), key).w
     np.testing.assert_allclose(np.asarray(w_k), np.asarray(w_j),
                                rtol=1e-6, atol=1e-6)
 
@@ -91,12 +93,12 @@ def test_partial_participation_round_runs(small_problem):
     prob = small_problem
     solver = FedAvg(prob, FedAvgConfig(stepsize=0.05, local_epochs=1,
                                        participation=0.5))
-    w = jnp.zeros(prob.d)
-    f0 = float(prob.flat.loss(w))
+    state = solver.init()
+    f0 = float(prob.flat.loss(state.w))
     key = jax.random.PRNGKey(1)
     for r in range(4):
-        w = solver.round(w, jax.random.fold_in(key, r))
-    assert float(prob.flat.loss(w)) < f0
+        state = solver.round(state, jax.random.fold_in(key, r))
+    assert float(prob.flat.loss(state.w)) < f0
 
 
 def test_legacy_wrapper_delegates(tiny_problem):
@@ -105,5 +107,6 @@ def test_legacy_wrapper_delegates(tiny_problem):
     w0 = jnp.zeros(prob.d)
     key = jax.random.PRNGKey(2)
     w1 = fedavg_round(prob, w0, key, stepsize=0.1, epochs=2)
-    w2 = FedAvg(prob, FedAvgConfig(stepsize=0.1, local_epochs=2)).round(w0, key)
+    solver = FedAvg(prob, FedAvgConfig(stepsize=0.1, local_epochs=2))
+    w2 = solver.round(solver.init(w0), key).w
     np.testing.assert_array_equal(np.asarray(w1), np.asarray(w2))

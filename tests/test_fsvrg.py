@@ -30,8 +30,7 @@ def test_fsvrg_converges_on_federated_problem(small_problem):
 
     f10 = np.inf
     for h in (3.0, 10.0):   # best stepsize retrospectively (paper protocol)
-        w, _ = FSVRG(prob, FSVRGConfig(stepsize=h)).run(
-            jnp.zeros(prob.d), rounds=10, seed=0)
+        w = FSVRG(prob, FSVRGConfig(stepsize=h)).fit(10, seed=0).w
         f10 = min(f10, float(prob.flat.loss(w)))
     # 10 rounds close >=60% of the optimality gap
     assert (f0 - f10) > 0.6 * (f0 - f_star), (f0, f10, f_star)
@@ -40,8 +39,7 @@ def test_fsvrg_converges_on_federated_problem(small_problem):
 def test_fsvrg_beats_gd_per_round(small_problem):
     prob = small_problem
     rounds = 8
-    w_f, _ = FSVRG(prob, FSVRGConfig(stepsize=1.0)).run(
-        jnp.zeros(prob.d), rounds=rounds, seed=0)
+    w_f = FSVRG(prob, FSVRGConfig(stepsize=1.0)).fit(rounds, seed=0).w
     best_gd = np.inf
     for lr in (0.5, 2.0, 8.0):
         w_g, _ = run_gd(prob, jnp.zeros(prob.d), rounds, lr)
@@ -54,10 +52,9 @@ def test_scaling_ablation_helps_on_noniid(small_problem):
     non-IID sparse data (the paper's central claim)."""
     prob = small_problem
     rounds = 6
-    w_full, _ = FSVRG(prob, FSVRGConfig(stepsize=1.0)).run(
-        jnp.zeros(prob.d), rounds=rounds, seed=1)
-    w_plain, _ = FSVRG(prob, FSVRGConfig(stepsize=1.0, use_S=False, use_A=False)).run(
-        jnp.zeros(prob.d), rounds=rounds, seed=1)
+    w_full = FSVRG(prob, FSVRGConfig(stepsize=1.0)).fit(rounds, seed=1).w
+    w_plain = FSVRG(prob, FSVRGConfig(stepsize=1.0, use_S=False,
+                                      use_A=False)).fit(rounds, seed=1).w
     f_full = float(prob.flat.loss(w_full))
     f_plain = float(prob.flat.loss(w_plain))
     assert f_full <= f_plain * 1.02, (f_full, f_plain)
@@ -78,8 +75,8 @@ def test_fsvrg_robust_to_reshuffling():
     prob_r = build_problem(ds_r)
 
     rounds = 6
-    w1, _ = FSVRG(prob, FSVRGConfig(stepsize=1.0)).run(jnp.zeros(prob.d), rounds, seed=0)
-    w2, _ = FSVRG(prob_r, FSVRGConfig(stepsize=1.0)).run(jnp.zeros(prob.d), rounds, seed=0)
+    w1 = FSVRG(prob, FSVRGConfig(stepsize=1.0)).fit(rounds, seed=0).w
+    w2 = FSVRG(prob_r, FSVRGConfig(stepsize=1.0)).fit(rounds, seed=0).w
     f1 = float(prob.flat.loss(w1))
     f2 = float(prob_r.flat.loss(w2))
     f0 = float(prob.flat.loss(jnp.zeros(prob.d)))
@@ -91,10 +88,11 @@ def test_fsvrg_robust_to_reshuffling():
 def test_cocoa_plus_runs_and_improves(small_problem):
     prob = small_problem
     solver = CoCoAPlus(prob)
-    f0 = float(prob.flat.loss(solver.w))
+    state = solver.init()
+    f0 = float(prob.flat.loss(state.w))
     for r in range(3):
-        solver.round(jax.random.PRNGKey(r))
-    f3 = float(prob.flat.loss(solver.w))
+        state = solver.round(state, jax.random.PRNGKey(r))
+    f3 = float(prob.flat.loss(state.w))
     assert f3 < f0, (f0, f3)
 
 
@@ -111,8 +109,8 @@ def test_unbalanced_weighted_aggregation_matters(small_problem):
     prob = small_problem
     sizes = np.concatenate([np.asarray(b.n_k) for b in prob.buckets])
     assert sizes.max() > 2 * sizes.min()      # the data really is unbalanced
-    w_w, _ = FSVRG(prob, FSVRGConfig(stepsize=1.0)).run(jnp.zeros(prob.d), 5, seed=2)
-    w_u, _ = FSVRG(prob, FSVRGConfig(stepsize=1.0, use_weighted_agg=False)).run(
-        jnp.zeros(prob.d), 5, seed=2)
+    w_w = FSVRG(prob, FSVRGConfig(stepsize=1.0)).fit(5, seed=2).w
+    w_u = FSVRG(prob, FSVRGConfig(stepsize=1.0,
+                                  use_weighted_agg=False)).fit(5, seed=2).w
     # weighted aggregation should not be materially worse
     assert float(prob.flat.loss(w_w)) <= float(prob.flat.loss(w_u)) * 1.05

@@ -51,8 +51,7 @@ def test_partial_participation_still_converges(small_problem, participation):
     prob = small_problem
     f0 = float(prob.flat.loss(jnp.zeros(prob.d)))
     solver = FSVRG(prob, FSVRGConfig(stepsize=1.0, participation=participation))
-    w, _ = solver.run(jnp.zeros(prob.d), rounds=8, seed=0)
-    f8 = float(prob.flat.loss(w))
+    f8 = float(prob.flat.loss(solver.fit(8, seed=0).w))
     assert f8 < 0.93 * f0, (f8, f0)
 
 
@@ -60,7 +59,8 @@ def test_full_participation_unchanged(small_problem):
     """participation=1.0 must be bit-identical to the default path."""
     prob = small_problem
     w0 = jnp.zeros(prob.d)
-    w1 = FSVRG(prob, FSVRGConfig(stepsize=1.0)).round(w0, jax.random.PRNGKey(3))
-    w2 = FSVRG(prob, FSVRGConfig(stepsize=1.0, participation=1.0)).round(
-        w0, jax.random.PRNGKey(3))
+    s1 = FSVRG(prob, FSVRGConfig(stepsize=1.0))
+    s2 = FSVRG(prob, FSVRGConfig(stepsize=1.0, participation=1.0))
+    w1 = s1.round(s1.init(w0), jax.random.PRNGKey(3)).w
+    w2 = s2.round(s2.init(w0), jax.random.PRNGKey(3)).w
     np.testing.assert_array_equal(np.asarray(w1), np.asarray(w2))

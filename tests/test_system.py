@@ -25,8 +25,7 @@ def test_end_to_end_fig2_ordering():
     te = build_test_problem(ds)
     rounds = 10
 
-    w_f, _ = FSVRG(prob, FSVRGConfig(stepsize=1.0)).run(
-        jnp.zeros(prob.d), rounds=rounds, seed=0)
+    w_f = FSVRG(prob, FSVRGConfig(stepsize=1.0)).fit(rounds, seed=0).w
 
     best_gd_f = np.inf
     for lr in (0.5, 2.0, 8.0):
@@ -51,8 +50,7 @@ def test_one_shot_averaging_is_not_enough():
 
     w_os = one_shot_average(prob, jnp.zeros(prob.d), jax.random.PRNGKey(0),
                             stepsize=0.5, epochs=12)
-    w_f, _ = FSVRG(prob, FSVRGConfig(stepsize=1.0)).run(
-        jnp.zeros(prob.d), rounds=10, seed=0)
+    w_f = FSVRG(prob, FSVRGConfig(stepsize=1.0)).fit(10, seed=0).w
     assert float(prob.flat.loss(w_f)) < float(prob.flat.loss(w_os))
 
 

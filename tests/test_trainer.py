@@ -1,0 +1,240 @@
+"""FederatedSolver protocol, registry, and Trainer driver.
+
+Pins ``Trainer.fit`` bit-for-bit against the pre-redesign hand-rolled fig2
+round loops (kept verbatim in tests/_oracles.py) for FSVRG, FedAvg, DANE,
+and CoCoA+ — the loop structure, key schedule, state threading, and
+history capture must all survive the API redesign exactly.  Also covers
+the registry round-trip (every registered name constructs, runs 2 rounds,
+and yields a valid SolverState pytree), the jit+lax.scan fast path, the
+checkpoint save/resume cycle, and the retrospective sweep protocol.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import _oracles
+from repro.core import (SolverState, Trainer, available, build_dense_problem,
+                        get_spec, make_solver, sweep)
+
+
+def _eval(prob):
+    """jax-traceable eval (works in both the loop and the scan path); the
+    Trainer converts the recorded values to Python floats."""
+    def eval_fn(w):
+        return {"f": prob.flat.loss(w)}
+    return eval_fn
+
+
+def _eval_floats(prob):
+    """What the pre-redesign fig2 loops recorded: eager Python floats."""
+    ev = _eval(prob)
+    return lambda w: {k: float(v) for k, v in ev(w).items()}
+
+
+# --------------------------------------------------------------------- #
+# Trainer vs the pre-redesign fig2 loops, bit-for-bit
+# --------------------------------------------------------------------- #
+
+
+def test_trainer_pins_fig2_fsvrg_loop(tiny_problem):
+    prob = tiny_problem
+    ev = _eval(prob)
+    w_ref, hist_ref = _oracles.fig2_fsvrg_loop(prob, 1.0, 3, seed=1,
+                                               eval_fn=_eval_floats(prob))
+    res = Trainer(make_solver("fsvrg", prob, stepsize=1.0), rounds=3, seed=1,
+                  eval_fn=ev).fit()
+    np.testing.assert_array_equal(np.asarray(res.w), np.asarray(w_ref))
+    assert res.history == hist_ref
+
+
+def test_trainer_pins_fig2_fedavg_loop(tiny_problem):
+    prob = tiny_problem
+    ev = _eval(prob)
+    w_ref, hist_ref = _oracles.fig2_fedavg_loop(prob, 0.5, 2, 3, seed=2,
+                                                eval_fn=_eval_floats(prob))
+    res = Trainer(make_solver("fedavg", prob, stepsize=0.5, local_epochs=2),
+                  rounds=3, seed=2, eval_fn=ev).fit()
+    np.testing.assert_array_equal(np.asarray(res.w), np.asarray(w_ref))
+    assert res.history == hist_ref
+
+
+def test_trainer_pins_fig2_dane_loop(tiny_problem):
+    prob = tiny_problem
+    ev = _eval(prob)
+    kw = dict(eta=1.0, mu=3.0, local_steps=5, local_lr=0.3)
+    w_ref, hist_ref = _oracles.fig2_dane_loop(prob, 3, seed=4,
+                                              eval_fn=_eval_floats(prob), **kw)
+    res = Trainer(make_solver("dane", prob, **kw), rounds=3, seed=4,
+                  eval_fn=ev).fit()
+    np.testing.assert_array_equal(np.asarray(res.w), np.asarray(w_ref))
+    assert res.history == hist_ref
+
+
+def test_trainer_pins_fig2_cocoa_loop(tiny_problem):
+    """Iterates AND final dual blocks: the functional SolverState threading
+    must reproduce the pre-redesign mutable-class trajectory exactly."""
+    prob = tiny_problem
+    ev = _eval(prob)
+    w_ref, alphas_ref, hist_ref = _oracles.fig2_cocoa_loop(
+        prob, 3, seed=0, eval_fn=_eval_floats(prob))
+    res = Trainer(make_solver("cocoa", prob), rounds=3, seed=0,
+                  eval_fn=ev).fit()
+    np.testing.assert_array_equal(np.asarray(res.w), np.asarray(w_ref))
+    assert res.history == hist_ref
+    assert len(res.state.aux) == len(alphas_ref)
+    for a_eng, a_ref in zip(res.state.aux, alphas_ref):
+        np.testing.assert_array_equal(np.asarray(a_eng), np.asarray(a_ref))
+
+
+# --------------------------------------------------------------------- #
+# registry round-trip
+# --------------------------------------------------------------------- #
+
+
+def _dense_ridge_problem(K=3, m=8, d=5, lam=0.1, seed=0):
+    rng = np.random.default_rng(seed)
+    Xs = [jnp.asarray(rng.standard_normal((d, m)), jnp.float32)
+          for _ in range(K)]
+    ys = [jnp.asarray(rng.standard_normal(m), jnp.float32) for _ in range(K)]
+    return build_dense_problem(Xs, ys, lam)
+
+
+def test_registry_round_trip(tiny_problem):
+    """Every registered name constructs with its config defaults, runs 2
+    rounds through the Trainer, and produces a valid, finite SolverState
+    pytree with the round counter advanced."""
+    names = available()
+    assert len(names) >= 8, names
+    dense = _dense_ridge_problem()
+    for name in names:
+        spec = get_spec(name)
+        problem = tiny_problem if spec.layout == "sparse" else dense
+        solver = make_solver(name, problem)
+        assert solver.name == name
+        assert isinstance(solver.hyperparams, dict)
+        res = solver.fit(2, seed=0)
+        state = res.state
+        assert isinstance(state, SolverState)
+        assert int(state.round) == 2, name
+        assert state.w.shape == (problem.d,)
+        # a valid pytree: flatten/unflatten round-trips, all leaves finite
+        leaves, treedef = jax.tree_util.tree_flatten(state)
+        assert all(np.isfinite(np.asarray(l)).all() for l in leaves), name
+        state2 = jax.tree_util.tree_unflatten(treedef, leaves)
+        np.testing.assert_array_equal(np.asarray(state2.w),
+                                      np.asarray(state.w))
+
+
+def test_registry_unknown_name_and_overrides(tiny_problem):
+    with pytest.raises(KeyError):
+        make_solver("bogus", tiny_problem)
+    solver = make_solver("fedavg", tiny_problem, stepsize=0.7)
+    assert solver.hyperparams["stepsize"] == 0.7
+    # defaults still come from the config for keys not overridden
+    from repro.configs import get_fedavg_config
+    assert solver.hyperparams["local_epochs"] == get_fedavg_config().local_epochs
+
+
+def test_cocoa_rejects_nonzero_w0(tiny_problem):
+    solver = make_solver("cocoa", tiny_problem)
+    with pytest.raises(ValueError):
+        solver.init(jnp.ones(tiny_problem.d))
+
+
+# --------------------------------------------------------------------- #
+# scan fast path
+# --------------------------------------------------------------------- #
+
+
+@pytest.mark.parametrize("name", ["fedavg", "cocoa"])
+def test_scan_fast_path_matches_loop(tiny_problem, name):
+    """jit + lax.scan over rounds == the eager per-round loop, for a
+    stateless and a dual-state solver (float tolerance: XLA may fuse the
+    scanned round body differently)."""
+    prob = tiny_problem
+    ev = _eval(prob)
+    loop = Trainer(make_solver(name, prob), rounds=3, seed=0,
+                   eval_fn=ev).fit()
+    scan = Trainer(make_solver(name, prob), rounds=3, seed=0, eval_fn=ev,
+                   scan=True).fit()
+    np.testing.assert_allclose(np.asarray(scan.w), np.asarray(loop.w),
+                               rtol=1e-6, atol=1e-7)
+    assert int(scan.state.round) == int(loop.state.round) == 3
+    assert len(scan.history) == len(loop.history)
+    for a, b in zip(scan.history, loop.history):
+        np.testing.assert_allclose(a["f"], b["f"], rtol=1e-6)
+
+
+def test_scan_rejects_python_callback(tiny_problem):
+    with pytest.raises(ValueError):
+        Trainer(make_solver("fedavg", tiny_problem), rounds=2, scan=True,
+                callback=lambda s, r: None)
+
+
+# --------------------------------------------------------------------- #
+# checkpoint save / restore / resume
+# --------------------------------------------------------------------- #
+
+
+def test_checkpoint_resume_is_bit_identical(tiny_problem, tmp_path):
+    """fit 2 rounds + save, restore, fit to 4 == one uninterrupted 4-round
+    run — the absolute-round key schedule makes resumption exact (dual
+    state included)."""
+    prob = tiny_problem
+    ckpt = str(tmp_path / "cocoa")
+    solver = make_solver("cocoa", prob)
+    Trainer(solver, rounds=2, seed=0, checkpoint_dir=ckpt).fit()
+
+    restored = Trainer.restore(ckpt)
+    assert int(restored.round) == 2
+    resumed = Trainer(solver, rounds=4, seed=0).fit(state=restored)
+    straight = Trainer(make_solver("cocoa", prob), rounds=4, seed=0).fit()
+    for a, b in zip(jax.tree_util.tree_leaves(resumed.state),
+                    jax.tree_util.tree_leaves(straight.state)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_final_checkpoint_never_lags_result(tiny_problem, tmp_path):
+    """checkpoint_every that does not divide rounds must still leave the
+    *final* state on disk, not the last periodic save."""
+    ckpt = str(tmp_path / "gd")
+    res = Trainer(make_solver("gd", tiny_problem), rounds=3, seed=0,
+                  checkpoint_dir=ckpt, checkpoint_every=2).fit()
+    restored = Trainer.restore(ckpt)
+    assert int(restored.round) == 3
+    np.testing.assert_array_equal(np.asarray(restored.w), np.asarray(res.w))
+
+
+def test_scan_rejects_periodic_checkpointing(tiny_problem, tmp_path):
+    with pytest.raises(ValueError):
+        Trainer(make_solver("gd", tiny_problem), rounds=4, scan=True,
+                checkpoint_dir=str(tmp_path / "x"), checkpoint_every=2)
+
+
+def test_fit_past_round_budget_is_noop(tiny_problem):
+    solver = make_solver("gd", tiny_problem)
+    res = Trainer(solver, rounds=2, seed=0).fit()
+    again = Trainer(solver, rounds=2, seed=0).fit(state=res.state)
+    assert again.history == []
+    np.testing.assert_array_equal(np.asarray(again.w), np.asarray(res.w))
+
+
+# --------------------------------------------------------------------- #
+# retrospective sweep
+# --------------------------------------------------------------------- #
+
+
+def test_sweep_picks_best_final_objective(tiny_problem):
+    prob = tiny_problem
+    ev = _eval(prob)
+    candidates = (0.3, 1.0)
+    res, best = sweep(lambda h: make_solver("fsvrg", prob, stepsize=h),
+                      candidates, rounds=2, seed=0, eval_fn=ev)
+    finals = {
+        h: Trainer(make_solver("fsvrg", prob, stepsize=h), rounds=2, seed=0,
+                   eval_fn=ev).fit().history[-1]["f"]
+        for h in candidates
+    }
+    assert best == min(finals, key=finals.get)
+    assert res.history[-1]["f"] == finals[best]
