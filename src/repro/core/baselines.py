@@ -54,24 +54,27 @@ class DistributedGD(FederatedSolver):
 
     name = "gd"
 
-    def __init__(self, problem: FederatedLogReg, stepsize: float = 2.0):
+    def __init__(self, problem: FederatedLogReg, stepsize: float = 2.0,
+                 aggregator: str = "dense"):
         self.problem = problem
         self.stepsize = stepsize
-        self.engine = RoundEngine(problem, EngineConfig())
+        self.engine = RoundEngine(problem, EngineConfig(aggregator=aggregator))
         self._passes = [
             jax.jit(functools.partial(_gd_client_pass, bucket=b,
                                       lam=problem.flat.lam, stepsize=stepsize))
             for b in problem.buckets
         ]
+        gd_pass = lambda w, bi, b, kb: self._passes[bi](w)
+        self._round_fast = self.engine.compile(gd_pass)
+        self._round_ref = self.engine.reference(gd_pass)
 
     @property
     def hyperparams(self):
         return {"stepsize": self.stepsize}
 
     def round(self, state: SolverState, key: jax.Array) -> SolverState:
-        w = self.engine.round(state.w, key,
-                              lambda w, bi, b, kb: self._passes[bi](w))
-        return state.replace(w=w, round=state.round + 1)
+        return state.replace(w=self._round_fast(state.w, key),
+                             round=state.round + 1)
 
 
 def run_gd(problem, w0, rounds: int, stepsize: float, callback=None):

@@ -168,6 +168,13 @@ class CoCoAPlus(FederatedSolver):
                          aggregator=cfg.aggregator),
         )
 
+        def cocoa_pass(w, bi, bucket, alpha_b, kb):
+            u, r = self._pass[bi](w, alpha_b, kb)
+            return r * self._scale, alpha_b + u
+
+        self._round_fast = self.engine.compile_with_state(cocoa_pass)
+        self._round_ref = self.engine.reference_with_state(cocoa_pass)
+
     def init(self, w0: Optional[jax.Array] = None) -> SolverState:
         if w0 is not None and bool(jnp.any(w0 != 0)):
             raise ValueError("CoCoA+ starts at alpha=0 => w=0; a custom w0 "
@@ -179,13 +186,8 @@ class CoCoAPlus(FederatedSolver):
             round=jnp.asarray(0, jnp.int32))
 
     def round(self, state: SolverState, key: jax.Array) -> SolverState:
-        def cocoa_pass(w, bi, bucket, alpha_b, kb):
-            u, r = self._pass[bi](w, alpha_b, kb)
-            return r * self._scale, alpha_b + u
-
-        w, alphas = self.engine.round_with_state(
-            state.w, list(state.aux), key, cocoa_pass)
-        return SolverState(w=w, aux=tuple(alphas), round=state.round + 1)
+        w, alphas = self._round_fast(state.w, state.aux, key)
+        return SolverState(w=w, aux=alphas, round=state.round + 1)
 
     @property
     def hyperparams(self):
@@ -241,6 +243,10 @@ class PrimalMethod(FederatedSolver):
         self.mu = self.lam * (self.eta - 1.0)
         self._alpha0 = _stack_alphas0(problem, alphas0)
         self.engine = RoundEngine(problem, EngineConfig(weighting="uniform"))
+        # donate=False: step 9's epilogue re-reads state.aux *after* the
+        # compiled dispatch, so the state buffers must survive the call.
+        self._round_fast = self.engine.compile_with_state(self._primal_pass,
+                                                          donate=False)
 
     @property
     def hyperparams(self):
@@ -259,28 +265,29 @@ class PrimalMethod(FederatedSolver):
         gs = self.eta * ((K / n) * xa - self.lam * w)
         return SolverState(w=w, aux=(gs,), round=jnp.asarray(0, jnp.int32))
 
-    def round(self, state: SolverState, key: jax.Array) -> SolverState:
+    def _primal_pass(self, w, bi, bucket, gs_b, kb):
         lam, eta, mu = self.lam, self.eta, self.mu
         K, n = self.problem.num_clients, self.problem.flat.n
 
-        def primal_pass(w, bi, bucket, gs_b, kb):
-            def one_client(val, y, g_k):
-                d = w.shape[0]
-                X = val.T
-                # argmin F_k(w') − (∇F_k(w^t) − (η∇F_k(w^t) + g_k))ᵀw'
-                #        + µ/2||w'−w^t||²,  F_k as in eq. 12 ((K/n)-normalized)
-                Fk = (K / n) * (X @ (X.T @ w - y)) + lam * w
-                b_k = (1.0 - eta) * Fk - g_k
-                H = (K / n) * (X @ X.T) + (lam + mu) * jnp.eye(d, dtype=val.dtype)
-                rhs = (K / n) * (X @ y) + b_k + mu * w
-                wk = jnp.linalg.solve(H, rhs)
-                return wk - w, wk
+        def one_client(val, y, g_k):
+            d = w.shape[0]
+            X = val.T
+            # argmin F_k(w') − (∇F_k(w^t) − (η∇F_k(w^t) + g_k))ᵀw'
+            #        + µ/2||w'−w^t||²,  F_k as in eq. 12 ((K/n)-normalized)
+            Fk = (K / n) * (X @ (X.T @ w - y)) + lam * w
+            b_k = (1.0 - eta) * Fk - g_k
+            H = (K / n) * (X @ X.T) + (lam + mu) * jnp.eye(d, dtype=val.dtype)
+            rhs = (K / n) * (X @ y) + b_k + mu * w
+            wk = jnp.linalg.solve(H, rhs)
+            return wk - w, wk
 
-            return jax.vmap(one_client)(bucket.val, bucket.y, gs_b)
+        return jax.vmap(one_client)(bucket.val, bucket.y, gs_b)
 
-        w_next, wks = self.engine.round_with_state(state.w, list(state.aux),
-                                                   key, primal_pass)
-        gs = tuple(g + lam * eta * (wk - w_next)
+    def round(self, state: SolverState, key: jax.Array) -> SolverState:
+        # step 9's g update needs the aggregated w^{t+1}, so it closes the
+        # round eagerly after the compiled engine dispatch.
+        w_next, wks = self._round_fast(state.w, state.aux, key)
+        gs = tuple(g + self.lam * self.eta * (wk - w_next)
                    for g, wk in zip(state.aux, wks))
         return SolverState(w=w_next, aux=gs, round=state.round + 1)
 
@@ -305,6 +312,7 @@ class DualMethod(FederatedSolver):
         self.sigma = float(problem.num_clients if sigma is None else sigma)
         self._alpha0 = _stack_alphas0(problem, alphas0)
         self.engine = RoundEngine(problem, EngineConfig(weighting="sum"))
+        self._round_fast = self.engine.compile_with_state(self._dual_pass)
 
     @property
     def hyperparams(self):
@@ -317,27 +325,28 @@ class DualMethod(FederatedSolver):
         b = self.problem.buckets[0]
         n = self.problem.flat.n
         w = jnp.einsum("kmd,km->d", b.val, self._alpha0) / (self.lam * n)
-        return SolverState(w=w, aux=(self._alpha0,),
+        # hand out a copy: round 1's compiled dispatch donates the state
+        # buffers off-CPU, and the cached template must survive re-inits
+        return SolverState(w=w, aux=(jnp.array(self._alpha0),),
                            round=jnp.asarray(0, jnp.int32))
 
-    def round(self, state: SolverState, key: jax.Array) -> SolverState:
+    def _dual_pass(self, w, bi, bucket, alpha_b, kb):
         lam, sigma = self.lam, self.sigma
         n = self.problem.flat.n
 
-        def dual_pass(w, bi, bucket, alpha_b, kb):
-            def one_client(val, y, a):
-                X = val.T
-                m = a.shape[0]
-                c = y - X.T @ w - a
-                M = (sigma / (lam * n)) * (X.T @ X) + jnp.eye(m, dtype=val.dtype)
-                h = jnp.linalg.solve(M, c)
-                return (X @ h) / (lam * n), a + h
+        def one_client(val, y, a):
+            X = val.T
+            m = a.shape[0]
+            c = y - X.T @ w - a
+            M = (sigma / (lam * n)) * (X.T @ X) + jnp.eye(m, dtype=val.dtype)
+            h = jnp.linalg.solve(M, c)
+            return (X @ h) / (lam * n), a + h
 
-            return jax.vmap(one_client)(bucket.val, bucket.y, alpha_b)
+        return jax.vmap(one_client)(bucket.val, bucket.y, alpha_b)
 
-        w, alphas = self.engine.round_with_state(state.w, list(state.aux),
-                                                 key, dual_pass)
-        return SolverState(w=w, aux=tuple(alphas), round=state.round + 1)
+    def round(self, state: SolverState, key: jax.Array) -> SolverState:
+        w, alphas = self._round_fast(state.w, state.aux, key)
+        return SolverState(w=w, aux=alphas, round=state.round + 1)
 
 
 def _cocoa_defaults():

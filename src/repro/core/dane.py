@@ -66,6 +66,7 @@ class DANEConfig:
     participation: float = 1.0     # i.i.d. per-round client participation
     # None -> auto: fused Pallas dane_update kernel on TPU, jnp elsewhere.
     use_kernel: Optional[bool] = None
+    aggregator: str = "dense"      # engine aggregator: "dense" | "pallas"
 
     def __post_init__(self):
         if self.local_solver not in _SOLVERS:
@@ -190,17 +191,22 @@ class DANE(FederatedSolver):
             ]
         self.engine = RoundEngine(
             problem,
-            EngineConfig(participation=cfg.participation, weighting="uniform"),
+            EngineConfig(participation=cfg.participation, weighting="uniform",
+                         aggregator=cfg.aggregator),
         )
 
-    def round(self, state: SolverState, key: jax.Array) -> SolverState:
-        full_grad = self.problem.flat.grad(state.w)
-
-        def dane_pass(w, bi, bucket, kb):
+        # Alg. 2 step 1's full gradient is the eager prelude (its own round
+        # of communication); the rest of the round is one compiled dispatch.
+        def dane_pass(w, bi, bucket, kb, full_grad):
             return self._passes[bi](w, full_grad, key=kb)
 
-        w = self.engine.round(state.w, key, dane_pass)
-        return state.replace(w=w, round=state.round + 1)
+        prelude = lambda w: (self.problem.flat.grad(w),)
+        self._round_fast = self.engine.compile(dane_pass, prelude=prelude)
+        self._round_ref = self.engine.reference(dane_pass, prelude=prelude)
+
+    def round(self, state: SolverState, key: jax.Array) -> SolverState:
+        return state.replace(w=self._round_fast(state.w, key),
+                             round=state.round + 1)
 
 
 def dane_svrg_round(problem: FederatedLogReg, w, key, stepsize: float, m: int):
@@ -225,12 +231,17 @@ class DANERidge(FederatedSolver):
     name = "dane_ridge"
 
     def __init__(self, problem: FederatedLogReg, *, eta: float = 1.0,
-                 mu: float = 0.0):
+                 mu: float = 0.0, aggregator: str = "dense"):
         self.problem = problem
         self.lam = float(problem.flat.lam)
         self.eta, self.mu = float(eta), float(mu)
         self.engine = RoundEngine(self.problem,
-                                  EngineConfig(weighting="uniform"))
+                                  EngineConfig(weighting="uniform",
+                                               aggregator=aggregator))
+        self._round_fast = self.engine.compile(self._ridge_pass,
+                                               prelude=self._prelude)
+        self._round_ref = self.engine.reference(self._ridge_pass,
+                                                prelude=self._prelude)
 
     @property
     def hyperparams(self):
@@ -245,25 +256,27 @@ class DANERidge(FederatedSolver):
             g = g + jnp.einsum("kmd,km->d", b.val, resid) / n
         return g
 
-    def round(self, state: SolverState, key: jax.Array) -> SolverState:
-        fg = self.full_grad(state.w)
+    def _prelude(self, w):
+        return (self.full_grad(w),)
+
+    def _ridge_pass(self, w, bi, bucket, kb, fg):
         lam, eta, mu = self.lam, self.eta, self.mu
 
-        def ridge_pass(w, bi, bucket, kb):
-            def one_client(val, y, n_k):
-                d = w.shape[0]
-                X = val.T                                  # (d, m)
-                m = jnp.maximum(n_k, 1).astype(val.dtype)
-                grad_k = X @ (X.T @ w - y) / m + lam * w
-                a_k = grad_k - eta * fg
-                H = X @ X.T / m + (lam + mu) * jnp.eye(d, dtype=val.dtype)
-                rhs = X @ y / m + a_k + mu * w
-                return jnp.linalg.solve(H, rhs) - w
+        def one_client(val, y, n_k):
+            d = w.shape[0]
+            X = val.T                                  # (d, m)
+            m = jnp.maximum(n_k, 1).astype(val.dtype)
+            grad_k = X @ (X.T @ w - y) / m + lam * w
+            a_k = grad_k - eta * fg
+            H = X @ X.T / m + (lam + mu) * jnp.eye(d, dtype=val.dtype)
+            rhs = X @ y / m + a_k + mu * w
+            return jnp.linalg.solve(H, rhs) - w
 
-            return jax.vmap(one_client)(bucket.val, bucket.y, bucket.n_k)
+        return jax.vmap(one_client)(bucket.val, bucket.y, bucket.n_k)
 
-        w = self.engine.round(state.w, key, ridge_pass)
-        return state.replace(w=w, round=state.round + 1)
+    def round(self, state: SolverState, key: jax.Array) -> SolverState:
+        return state.replace(w=self._round_fast(state.w, key),
+                             round=state.round + 1)
 
 
 def _dane_defaults():

@@ -38,7 +38,24 @@ Partial participation samples clients i.i.d. with probability
 the deployment reality the paper motivates in §1.2 (devices participate
 only when charging / on wi-fi).  ``weighting="sum"`` is exempt from the
 reweighting: dual methods need the plain sum of the participants' deltas,
-matching their frozen dual blocks exactly.
+matching their frozen dual blocks exactly.  Each round's Bernoulli masks
+are drawn **once** (:meth:`RoundEngine.participation_masks`) and shared by
+state freezing and aggregation — one draw, two consumers, bit-identical to
+the historical re-derivation by construction (same ``fold_in`` chain).
+
+Because rounds are the scarce resource (§1: "minimizing the number of
+rounds of communication is the principal goal"), the per-round server work
+should be a *constant number of compiled dispatches*, not a Python loop of
+per-bucket calls.  :meth:`RoundEngine.compile` /
+:meth:`RoundEngine.compile_with_state` return jitted round closures — the
+per-bucket ``fold_in`` offsets are precomputed, the client passes and the
+aggregation run inside a single ``jax.jit`` (with donated iterate/state
+buffers off-CPU), and an optional eager ``prelude`` carries per-round
+server state (e.g. FSVRG's full gradient — its own round of communication
+in the paper, so it stays outside the jitted body and the compiled round
+remains bit-identical to the eager reference).  Every solver's ``round``
+calls its compiled closure; :meth:`round` / :meth:`round_with_state` stay
+as the eager reference implementations the pin tests compare against.
 """
 from __future__ import annotations
 
@@ -101,6 +118,14 @@ class RoundEngine:
         if cfg.server_scaling == "diag" and a_diag is None:
             raise ValueError("server_scaling='diag' requires an a_diag")
         self.a_diag = jnp.ones((problem.d,)) if a_diag is None else a_diag
+        # per-bucket first-client index — the fold_in offset of every bucket's
+        # round key, precomputed once so compiled rounds close over constants
+        wi = 0
+        offsets = []
+        for b in problem.buckets:
+            offsets.append(wi)
+            wi += b.num_clients
+        self._offsets = tuple(offsets)
 
     # -- step 3: sampling & weighting ------------------------------------- #
 
@@ -118,29 +143,49 @@ class RoundEngine:
                                    (num_clients,))
                 < self.cfg.participation).astype(jnp.float32)
 
+    def participation_masks(self, key: jax.Array) -> Optional[List[jax.Array]]:
+        """The round's per-bucket Bernoulli masks, drawn **once** from the
+        round key's ``fold_in`` chain — ``None`` under full participation.
+
+        This is the single draw both consumers share: state freezing in
+        :meth:`round_with_state` and weight zeroing in :meth:`aggregate`
+        receive the same mask list instead of each re-deriving the same
+        Bernoulli draw per bucket.
+        """
+        if self.cfg.participation >= 1.0:
+            return None
+        return [self.participation_mask(jax.random.fold_in(key, wi),
+                                        b.num_clients)
+                for wi, b in zip(self._offsets, self.problem.buckets)]
+
     # -- step 4: aggregation ----------------------------------------------- #
 
     def aggregate(self, w: jax.Array, deltas_by_bucket: Sequence[jax.Array],
-                  key: jax.Array) -> jax.Array:
+                  key: jax.Array, *,
+                  masks: Optional[Sequence[jax.Array]] = None) -> jax.Array:
         """Weight, subsample, reweight, scale, and apply the client deltas.
 
         ``deltas_by_bucket[i]`` is the (Kb, d) output of the client pass for
         bucket i; ``key`` must be the same round key handed to the passes so
-        the participation draw is tied to the round.
+        the participation draw is tied to the round.  ``masks`` are the
+        round's precomputed :meth:`participation_masks`; if omitted they are
+        drawn here from the same chain (bit-identical either way).
         """
         cfg = self.cfg
         pallas = cfg.aggregator == "pallas"
+        if masks is None:
+            masks = self.participation_masks(key)
         agg = jnp.zeros_like(w)
         stacked: List[jax.Array] = []
         stacked_wts: List[jax.Array] = []
-        wi = 0
         total_mass = jnp.zeros(())
         expected_mass = jnp.zeros(())
-        for b, deltas in zip(self.problem.buckets, deltas_by_bucket):
-            kb = jax.random.fold_in(key, wi)
+        for i, (wi, b, deltas) in enumerate(zip(self._offsets,
+                                                self.problem.buckets,
+                                                deltas_by_bucket)):
             wts = self.bucket_weights(wi, b.num_clients)
-            if cfg.participation < 1.0:
-                sel = self.participation_mask(kb, b.num_clients)
+            if masks is not None:
+                sel = masks[i]
                 total_mass = total_mass + (wts * sel).sum()
                 expected_mass = expected_mass + wts.sum()
                 wts = wts * sel
@@ -149,25 +194,34 @@ class RoundEngine:
                 stacked_wts.append(wts)
             else:
                 agg = agg + (wts[:, None] * deltas).sum(axis=0)
-            wi += b.num_clients
 
         # Reweighting by expected/realized mass keeps the *average* direction
         # unbiased; a "sum" aggregation must stay the plain partial sum — for
         # dual methods each participant's delta enters exactly once so the
         # primal iterate keeps tracking the (frozen-for-non-participants)
         # dual blocks, w = (1/λn)Xα.
-        reweight = cfg.participation < 1.0 and cfg.weighting != "sum"
+        reweight = masks is not None and cfg.weighting != "sum"
         scale = expected_mass / jnp.maximum(total_mass, 1e-9) \
             if reweight else None
 
         if pallas:
-            from repro.kernels import ops
+            # Delta-native single HBM pass: stacked deltas go to the kernel
+            # as-is, with the reweight scalar and the A epilogue folded in —
+            # no (K, d) w^t + δ materialization.  Same auto policy as the
+            # solvers' use_kernel: the Pallas kernel on TPU, the identical
+            # fused jnp expression elsewhere (interpret-mode emulation is
+            # for the parity tests, not the hot path).
             wts_all = jnp.concatenate(stacked_wts)
-            if scale is not None:
-                wts_all = wts_all * scale
-            w_ks = w[None, :] + jnp.concatenate(stacked, axis=0)
+            deltas_all = jnp.concatenate(stacked, axis=0)
             a = self.a_diag if cfg.server_scaling == "diag" else jnp.ones_like(w)
-            return ops.scaled_aggregate(w, w_ks, wts_all, a).astype(w.dtype)
+            s = scale if scale is not None else 1.0
+            if jax.default_backend() == "tpu":
+                from repro.kernels import ops
+                return ops.fused_aggregate(
+                    w, deltas_all, wts_all, a, s).astype(w.dtype)
+            from repro.kernels import ref
+            return ref.fused_aggregate_ref(
+                w, deltas_all, wts_all, a, s).astype(w.dtype)
 
         if scale is not None:
             agg = agg * scale
@@ -181,16 +235,15 @@ class RoundEngine:
         """Run the client passes over every bucket, then aggregate.
 
         Each bucket's pass receives ``fold_in(key, wi)`` where ``wi`` is the
-        bucket's first client index — the same key the aggregation step uses
-        for that bucket's participation draw.
+        bucket's first client index — the same key the round's single
+        participation draw uses for that bucket.
         """
         deltas: List[jax.Array] = []
-        wi = 0
-        for bi, b in enumerate(self.problem.buckets):
+        for bi, (wi, b) in enumerate(zip(self._offsets, self.problem.buckets)):
             kb = jax.random.fold_in(key, wi)
             deltas.append(client_pass(w, bi, b, kb))
-            wi += b.num_clients
-        return self.aggregate(w, deltas, key)
+        return self.aggregate(w, deltas, key,
+                              masks=self.participation_masks(key))
 
     def round_with_state(self, w: jax.Array, states: Sequence[Any],
                          key: jax.Array, client_pass: DualClientPassFn
@@ -206,17 +259,18 @@ class RoundEngine:
 
         Under partial participation, a client whose aggregation weight is
         zeroed by the round's Bernoulli draw also keeps its previous state —
-        the draw is re-derived from the same ``fold_in`` chain that
-        :meth:`aggregate` uses, so primal and dual views never diverge.
+        the round's masks are drawn once (:meth:`participation_masks`) and
+        handed to both state freezing and aggregation, so primal and dual
+        views never diverge.
         """
+        masks = self.participation_masks(key)
         deltas: List[jax.Array] = []
         new_states: List[Any] = []
-        wi = 0
-        for bi, b in enumerate(self.problem.buckets):
+        for bi, (wi, b) in enumerate(zip(self._offsets, self.problem.buckets)):
             kb = jax.random.fold_in(key, wi)
             d_b, s_b = client_pass(w, bi, b, states[bi], kb)
-            if self.cfg.participation < 1.0:
-                sel = self.participation_mask(kb, b.num_clients)
+            if masks is not None:
+                sel = masks[bi]
                 s_b = jax.tree_util.tree_map(
                     lambda new, old: jnp.where(
                         sel.reshape((b.num_clients,) + (1,) * (new.ndim - 1))
@@ -224,5 +278,89 @@ class RoundEngine:
                     s_b, states[bi])
             deltas.append(d_b)
             new_states.append(s_b)
-            wi += b.num_clients
-        return self.aggregate(w, deltas, key), new_states
+        return self.aggregate(w, deltas, key, masks=masks), new_states
+
+    # -- the compiled round: O(1) dispatches per round ---------------------- #
+
+    def _should_donate(self, donate: Optional[bool]) -> bool:
+        # Donation is a no-op (with a warning) on CPU; default it off there.
+        return jax.default_backend() != "cpu" if donate is None else donate
+
+    def compile(self, client_pass: Callable, *,
+                prelude: Optional[Callable] = None,
+                donate: Optional[bool] = None) -> Callable:
+        """One federated round as a single compiled dispatch.
+
+        Returns ``compiled_round(w, key) -> w_next``: the per-bucket client
+        passes, the single participation draw, and the (optionally fused
+        Pallas) aggregation all trace into one ``jax.jit`` over the
+        precomputed ``fold_in`` offsets, with the iterate buffer donated on
+        accelerator backends.
+
+        ``prelude(w) -> tuple`` carries per-round *server* state — e.g.
+        FSVRG's/DANE's full gradient, which the paper counts as its own round
+        of communication.  It runs eagerly outside the jitted body (so the
+        compiled round stays bit-identical to :meth:`round`, the reference
+        implementation) and its results are appended to the pass's
+        arguments: ``client_pass(w, bi, bucket, kb, *prelude(w))``.
+        """
+        donate_args = (0,) if self._should_donate(donate) else ()
+
+        @functools.partial(jax.jit, donate_argnums=donate_args)
+        def _body(w, ctx, key):
+            return self.round(
+                w, key, lambda w_, bi, b, kb: client_pass(w_, bi, b, kb, *ctx))
+
+        def compiled_round(w, key):
+            ctx = tuple(prelude(w)) if prelude is not None else ()
+            return _body(w, ctx, key)
+
+        return compiled_round
+
+    def reference(self, client_pass: Callable, *,
+                  prelude: Optional[Callable] = None) -> Callable:
+        """The eager twin of :meth:`compile` — same calling convention,
+        Python-loop dispatch through :meth:`round`.  The pin tests (and the
+        round-latency benchmark's "eager dense" baseline) call this."""
+        def reference_round(w, key):
+            ctx = tuple(prelude(w)) if prelude is not None else ()
+            return self.round(
+                w, key, lambda w_, bi, b, kb: client_pass(w_, bi, b, kb, *ctx))
+
+        return reference_round
+
+    def compile_with_state(self, dual_pass: Callable, *,
+                           prelude: Optional[Callable] = None,
+                           donate: Optional[bool] = None) -> Callable:
+        """:meth:`compile` for dual-state rounds.
+
+        Returns ``compiled_round(w, states, key) -> (w_next, new_states)``
+        over a tuple-of-pytrees ``states``; both the iterate and the state
+        buffers are donated on accelerator backends.
+        """
+        donate_args = (0, 1) if self._should_donate(donate) else ()
+
+        @functools.partial(jax.jit, donate_argnums=donate_args)
+        def _body(w, states, ctx, key):
+            w2, new_states = self.round_with_state(
+                w, list(states), key,
+                lambda w_, bi, b, s_b, kb: dual_pass(w_, bi, b, s_b, kb, *ctx))
+            return w2, tuple(new_states)
+
+        def compiled_round(w, states, key):
+            ctx = tuple(prelude(w)) if prelude is not None else ()
+            return _body(w, tuple(states), ctx, key)
+
+        return compiled_round
+
+    def reference_with_state(self, dual_pass: Callable, *,
+                             prelude: Optional[Callable] = None) -> Callable:
+        """The eager twin of :meth:`compile_with_state`."""
+        def reference_round(w, states, key):
+            ctx = tuple(prelude(w)) if prelude is not None else ()
+            w2, new_states = self.round_with_state(
+                w, list(states), key,
+                lambda w_, bi, b, s_b, kb: dual_pass(w_, bi, b, s_b, kb, *ctx))
+            return w2, tuple(new_states)
+
+        return reference_round

@@ -45,6 +45,7 @@ class FedAvgConfig:
     use_weighted_agg: bool = True  # n_k/n (True) vs uniform 1/K averaging
     # None -> auto: fused Pallas kernel on TPU, plain jnp elsewhere.
     use_kernel: Optional[bool] = None
+    aggregator: str = "dense"      # engine aggregator: "dense" | "pallas"
 
 
 def _local_sgd_pass(w0, bucket: ClientBucket, lam, cfg: FedAvgConfig,
@@ -106,15 +107,19 @@ class FedAvg(FederatedSolver):
             EngineConfig(
                 participation=cfg.participation,
                 weighting="nk" if cfg.use_weighted_agg else "uniform",
+                aggregator=cfg.aggregator,
             ),
         )
 
-    def round(self, state: SolverState, key: jax.Array) -> SolverState:
         def fedavg_pass(w, bi, bucket, kb):
             return self._passes[bi](w, key=kb)
 
-        w = self.engine.round(state.w, key, fedavg_pass)
-        return state.replace(w=w, round=state.round + 1)
+        self._round_fast = self.engine.compile(fedavg_pass)
+        self._round_ref = self.engine.reference(fedavg_pass)
+
+    def round(self, state: SolverState, key: jax.Array) -> SolverState:
+        return state.replace(w=self._round_fast(state.w, key),
+                             round=state.round + 1)
 
 
 def _fedavg_defaults():

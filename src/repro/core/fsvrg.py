@@ -48,6 +48,9 @@ class FSVRGConfig:
     # reweights by the realized participating mass so the update direction
     # stays unbiased.
     participation: float = 1.0
+    # engine aggregator: "dense" (eager jnp reference) | "pallas" (the
+    # delta-native fused_aggregate kernel — one HBM pass over the deltas)
+    aggregator: str = "dense"
 
 
 def _client_pass(w0, full_grad, bucket: ClientBucket, lam, phi, cfg: FSVRGConfig, key):
@@ -124,18 +127,24 @@ class FSVRG(FederatedSolver):
                 participation=cfg.participation,
                 weighting="uniform" if (plain or not cfg.use_weighted_agg) else "nk",
                 server_scaling="diag" if (cfg.use_A and not plain) else "none",
+                aggregator=cfg.aggregator,
             ),
             a_diag=self.a_diag,
         )
-
-    def round(self, state: SolverState, key: jax.Array) -> SolverState:
-        full_grad = self.problem.flat.grad(state.w)
-
-        def fsvrg_pass(w, bi, bucket, kb):
+        # The full gradient is the round's own communication (Alg. 4 line 3),
+        # so it is the eager prelude; everything after it is one compiled
+        # dispatch.  The eager reference twin backs the pin tests and the
+        # round-latency benchmark's baseline.
+        def fsvrg_pass(w, bi, bucket, kb, full_grad):
             return self._passes[bi](w, full_grad, phi=self.phi, key=kb)
 
-        w = self.engine.round(state.w, key, fsvrg_pass)
-        return state.replace(w=w, round=state.round + 1)
+        prelude = lambda w: (self.problem.flat.grad(w),)
+        self._round_fast = self.engine.compile(fsvrg_pass, prelude=prelude)
+        self._round_ref = self.engine.reference(fsvrg_pass, prelude=prelude)
+
+    def round(self, state: SolverState, key: jax.Array) -> SolverState:
+        return state.replace(w=self._round_fast(state.w, key),
+                             round=state.round + 1)
 
 
 def naive_fsvrg_round(problem: FederatedLogReg, w, key, stepsize: float, m: Optional[int] = None):

@@ -84,6 +84,17 @@ class FederatedLogReg:
         return self.flat.num_features
 
 
+def _equal_runs(order, sorted_keys) -> List[List[int]]:
+    """Contiguous runs of equal key in a stably key-sorted index order —
+    one O(K) pass (the grouping is exact because equal keys are adjacent
+    after the sort)."""
+    if len(order) == 0:
+        return []
+    starts = np.flatnonzero(np.r_[True, sorted_keys[1:] != sorted_keys[:-1]])
+    ends = np.r_[starts[1:], len(order)]
+    return [[int(k) for k in order[s:e]] for s, e in zip(starts, ends)]
+
+
 def build_problem(ds, lam: float | None = None) -> FederatedLogReg:
     """ds: repro.data.synthetic.FederatedDataset."""
     n = ds.num_examples
@@ -95,15 +106,15 @@ def build_problem(ds, lam: float | None = None) -> FederatedLogReg:
 
     slices = ds.client_slices()
     sizes = ds.client_sizes.astype(np.int64)
-    order = np.argsort(np.ceil(np.log2(np.maximum(sizes, 1))).astype(np.int64), kind="stable")
+    levels = np.ceil(np.log2(np.maximum(sizes, 1))).astype(np.int64)
+    order = np.argsort(levels, kind="stable")
 
     buckets: List[ClientBucket] = []
     weights: List[float] = []
-    i = 0
-    while i < len(order):
-        b = int(np.ceil(np.log2(max(sizes[order[i]], 1))))
-        members = [k for k in order[i:] if int(np.ceil(np.log2(max(sizes[k], 1)))) == b]
-        i += len(members)
+    # One pass over the sorted order: each bucket is a contiguous run of
+    # equal ceil(log2 n_k), so the run boundaries are where the sorted level
+    # sequence changes — no per-bucket rescan of the tail.
+    for members in _equal_runs(order, levels[order]):
         m_pad = int(max(sizes[k] for k in members))
         Kb = len(members)
         nnz = ds.idx.shape[1]
@@ -148,13 +159,10 @@ def build_dense_problem(Xs, ys, lam: float) -> FederatedLogReg:
     n = sum(sizes)
     dtype = jnp.result_type(*[X.dtype for X in Xs])
 
-    order = sorted(range(len(Xs)), key=lambda k: sizes[k])
+    order = np.argsort(np.asarray(sizes, np.int64), kind="stable")
     buckets: List[ClientBucket] = []
     weights: List[float] = []
-    i = 0
-    while i < len(order):
-        members = [k for k in order[i:] if sizes[k] == sizes[order[i]]]
-        i += len(members)
+    for members in _equal_runs(order, np.asarray(sizes, np.int64)[order]):
         m = sizes[members[0]]
         bi = jnp.tile(jnp.arange(d, dtype=jnp.int32), (len(members), m, 1))
         bv = jnp.stack([jnp.asarray(Xs[k], dtype).T for k in members])

@@ -12,6 +12,7 @@ from repro.kernels.cocoa_sdca import cocoa_sdca_update as _cocoa_sdca_update
 from repro.kernels.dane_update import dane_update as _dane_update
 from repro.kernels.fedavg_update import fedavg_update as _fedavg_update
 from repro.kernels.fsvrg_update import fsvrg_update as _fsvrg_update
+from repro.kernels.scaled_aggregate import fused_aggregate as _fused_aggregate
 from repro.kernels.scaled_aggregate import scaled_aggregate as _scaled_aggregate
 from repro.kernels.wkv6 import wkv6 as _wkv6
 
@@ -43,6 +44,11 @@ def cocoa_sdca_update(beta0, mcoef, ccoef, **kw):
 def scaled_aggregate(w_t, w_ks, weights, a_diag, **kw):
     kw.setdefault("interpret", not _on_tpu())
     return _scaled_aggregate(w_t, w_ks, weights, a_diag, **kw)
+
+
+def fused_aggregate(w_t, deltas, weights, a_diag, scale=1.0, **kw):
+    kw.setdefault("interpret", not _on_tpu())
+    return _fused_aggregate(w_t, deltas, weights, a_diag, scale, **kw)
 
 
 def wkv6(r, k, v, w, u, **kw):

@@ -56,8 +56,19 @@ def cocoa_sdca_update_ref(beta0, mcoef, ccoef, newton_iters: int = 12):
 
 
 def scaled_aggregate_ref(w_t, w_ks, weights, a_diag):
-    """w^t + A ⊙ Σ_k weights_k (w_k − w^t), in f32."""
+    """w^t + A ⊙ Σ_k weights_k (w_k − w^t), in f32 — the iterate-consuming
+    oracle (the pre-delta-native kernel's entry-point semantics)."""
     wt = w_t.astype(jnp.float32)
     delta = ((w_ks.astype(jnp.float32) - wt[None, :])
              * weights.astype(jnp.float32)[:, None]).sum(axis=0)
     return wt + a_diag.astype(jnp.float32) * delta
+
+
+def fused_aggregate_ref(w_t, deltas, weights, a_diag, scale=1.0):
+    """w^t + A ⊙ (scale · Σ_k weights_k δ_k), in f32 — the delta-native
+    oracle, with the participation-reweight scalar in the epilogue."""
+    agg = (deltas.astype(jnp.float32)
+           * weights.astype(jnp.float32)[:, None]).sum(axis=0)
+    return (w_t.astype(jnp.float32)
+            + a_diag.astype(jnp.float32) * (jnp.asarray(scale, jnp.float32)
+                                            * agg))

@@ -1,15 +1,24 @@
-"""Pallas TPU kernel: FSVRG server-side scaled aggregation (Alg. 4 line 11).
+"""Pallas TPU kernel: delta-native fused server aggregation (Alg. 4 line 11).
 
-    w ← w^t + A ⊙ Σ_k (n_k/n) (w_k − w^t)
+    w ← w^t + A ⊙ (s · Σ_k weights_k · δ_k),      δ_k = w_k − w^t
 
-Input is the K-stacked client-iterate matrix W: (K, d).  The kernel tiles
-(K_BLOCK, D_BLOCK) through VMEM and accumulates the weighted reduction over
-clients in f32 before applying the per-coordinate A diagonal — one HBM pass
-over W instead of the K separate axpy passes of the naive implementation.
+The kernel consumes the stacked client-delta matrix Δ: (K, d) *directly* —
+exactly what every engine client pass produces — so the server update is one
+true HBM pass over Δ.  The pre-delta-native kernel consumed the iterate
+matrix W = w^t + Δ instead, which forced the caller to materialize a full
+(K, d) add (an extra HBM round-trip) only so the kernel could subtract
+(Σ weights)·w^t back out.  The unbiased-participation reweight scalar ``s``
+and the per-coordinate A-diagonal epilogue are folded into the same pass:
+weighting, reweighting, scaling, and the server update all happen while each
+output tile is VMEM-resident.
 
 Grid: (d_blocks, k_blocks) — k is the *inner* (minor) dimension so each
 output tile stays resident in VMEM across the whole client reduction
-(revisiting-output accumulation pattern).
+(revisiting-output accumulation pattern), accumulating in f32.
+
+:func:`scaled_aggregate` (the iterate-consuming entry point) survives as a
+thin compatibility wrapper; its pure-jnp oracle stays in ``kernels/ref.py``
+alongside the new :func:`~repro.kernels.ref.fused_aggregate_ref`.
 """
 from __future__ import annotations
 
@@ -24,13 +33,13 @@ K_BLOCK = 8
 D_BLOCK = 512
 
 
-def _aggregate_kernel(k_block, wt_ref, wks_ref, wts_ref, a_ref, out_ref):
+def _fused_kernel(k_block, wt_ref, dk_ref, wts_ref, s_ref, a_ref, out_ref):
     kb = pl.program_id(1)
     block_wts = jax.lax.dynamic_slice_in_dim(
         wts_ref[...].reshape(-1), kb * k_block, k_block).astype(jnp.float32)
     partial = jnp.einsum(
         "kd,k->d",
-        wks_ref[...].astype(jnp.float32),
+        dk_ref[...].astype(jnp.float32),
         block_wts,
         preferred_element_type=jnp.float32,
     )
@@ -45,40 +54,54 @@ def _aggregate_kernel(k_block, wt_ref, wks_ref, wts_ref, a_ref, out_ref):
 
     @pl.when(kb == pl.num_programs(1) - 1)
     def _final():
-        base = wt_ref[...].astype(jnp.float32)
-        # out_ref holds Σ_k wts_k·w_k; convert to Σ wts_k (w_k − w^t) by
-        # subtracting (Σ wts)·w^t, then apply A and add back w^t.
-        total_w = wts_ref[...].astype(jnp.float32).sum()
-        delta = out_ref[...] - total_w * base
-        out_ref[...] = base + a_ref[...].astype(jnp.float32) * delta
+        # out_ref holds Σ_k weights_k·δ_k; the whole epilogue — reweight
+        # scalar s, A diagonal, and the +w^t server update — lands here while
+        # the tile is still VMEM-resident.
+        s = s_ref[0, 0].astype(jnp.float32)
+        out_ref[...] = (wt_ref[...].astype(jnp.float32)
+                        + a_ref[...].astype(jnp.float32) * (s * out_ref[...]))
 
 
 @functools.partial(jax.jit, static_argnames=("k_block", "d_block", "interpret"))
-def scaled_aggregate(w_t, w_ks, weights, a_diag, *, k_block: int = K_BLOCK,
-                     d_block: int = D_BLOCK, interpret: bool = False):
-    """w_t, a_diag: (d,); w_ks: (K, d); weights: (K,) = n_k/n."""
-    K, d = w_ks.shape
+def fused_aggregate(w_t, deltas, weights, a_diag, scale=1.0, *,
+                    k_block: int = K_BLOCK, d_block: int = D_BLOCK,
+                    interpret: bool = False):
+    """w_t, a_diag: (d,); deltas: (K, d) client deltas w_k − w^t;
+    weights: (K,); scale: scalar reweight (1.0 under full participation)."""
+    K, d = deltas.shape
     k_block = min(k_block, K)
     d_pad = -(-d // d_block) * d_block
     K_pad = -(-K // k_block) * k_block
 
     wt2 = jnp.pad(w_t, (0, d_pad - d))
     a2 = jnp.pad(a_diag, (0, d_pad - d))
-    wks2 = jnp.pad(w_ks, ((0, K_pad - K), (0, d_pad - d)))
+    dk2 = jnp.pad(deltas, ((0, K_pad - K), (0, d_pad - d)))
     wts2 = jnp.pad(weights, (0, K_pad - K)).reshape(K_pad, 1)
+    s2 = jnp.asarray(scale, jnp.float32).reshape(1, 1)
 
     grid = (d_pad // d_block, K_pad // k_block)
     out = pl.pallas_call(
-        functools.partial(_aggregate_kernel, k_block),
+        functools.partial(_fused_kernel, k_block),
         grid=grid,
         in_specs=[
             pl.BlockSpec((d_block,), lambda i, k: (i,)),            # w_t
-            pl.BlockSpec((k_block, d_block), lambda i, k: (k, i)),  # w_ks
+            pl.BlockSpec((k_block, d_block), lambda i, k: (k, i)),  # deltas
             pl.BlockSpec((K_pad, 1), lambda i, k: (0, 0)),          # all weights
+            pl.BlockSpec((1, 1), lambda i, k: (0, 0)),              # reweight s
             pl.BlockSpec((d_block,), lambda i, k: (i,)),            # a_diag
         ],
         out_specs=pl.BlockSpec((d_block,), lambda i, k: (i,)),
         out_shape=jax.ShapeDtypeStruct((d_pad,), jnp.float32),
         interpret=interpret,
-    )(wt2, wks2, wts2, a2)
+    )(wt2, dk2, wts2, s2, a2)
     return out[:d]
+
+
+def scaled_aggregate(w_t, w_ks, weights, a_diag, **kw):
+    """Iterate-consuming compatibility entry: w^t + A ⊙ Σ_k weights_k (w_k − w^t).
+
+    Materializes the (K, d) delta matrix from the stacked iterates and defers
+    to :func:`fused_aggregate` — callers with deltas in hand (the engine)
+    should call the delta-native kernel directly and skip the subtraction.
+    """
+    return fused_aggregate(w_t, w_ks - w_t[None, :], weights, a_diag, 1.0, **kw)

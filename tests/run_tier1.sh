@@ -21,4 +21,11 @@ python benchmarks/fig2_convergence.py --algo dane --rounds 2 --scale 0.001 \
 python benchmarks/fig2_convergence.py --algo fedavg --rounds 2 --scale 0.001 \
     --opt-iters 50 --seed 1 > /dev/null
 
+# Round-latency harness smoke: every timing path (eager dense / compiled /
+# compiled fused) must run end-to-end and emit valid JSON, so the perf
+# trajectory tooling can't rot.  Writes to a scratch file — the committed
+# BENCH_round.json is the measured trajectory, not a smoke artifact.
+python benchmarks/bench_round.py --smoke \
+    --json "${BENCH_ROUND_JSON:-BENCH_round.smoke.json}" > /dev/null
+
 exec python -m pytest -x -q "$@"

@@ -1,0 +1,231 @@
+"""Delta-native fused aggregation + the compiled round path.
+
+Four contracts from the round-hot-path fusion:
+
+1. ``fused_aggregate`` (the delta-native Pallas kernel, reweight scalar and
+   A epilogue folded in) matches its jnp oracle at ragged (K, d) sizes.
+2. The engine's dense and fused aggregation paths agree across every
+   ``weighting`` mode, ``participation < 1``, and ``server_scaling="diag"``.
+3. The round's participation masks are drawn once
+   (``RoundEngine.participation_masks``) and are bit-identical to the
+   historical per-consumer re-derivation.
+4. The compiled round (``RoundEngine.compile`` / ``compile_with_state``) is
+   **bit-for-bit** the reference ``round`` / ``round_with_state`` — pinned
+   through the FSVRG and CoCoA+ solvers, whose ``round`` now dispatches the
+   compiled closure.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import CoCoAConfig, CoCoAPlus, FSVRG, FSVRGConfig
+from repro.core.engine import EngineConfig, RoundEngine
+from repro.kernels import ops, ref
+
+DTYPES = (jnp.float32, jnp.bfloat16)
+
+
+# --------------------------------------------------------------------- #
+# 1. kernel parity at ragged sizes
+# --------------------------------------------------------------------- #
+
+
+@pytest.mark.parametrize("dtype", DTYPES, ids=("f32", "bf16"))
+@pytest.mark.parametrize("scale", [1.0, 1.73])
+@pytest.mark.parametrize("K,d", [(5, 1000), (1, 999), (5, 1), (13, 257)])
+def test_fused_aggregate_parity(K, d, scale, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(6), 4)
+    wt = jax.random.normal(ks[0], (d,), dtype)
+    deltas = jax.random.normal(ks[1], (K, d), dtype)
+    wts = jax.nn.softmax(jax.random.normal(ks[2], (K,)))
+    a = jnp.abs(jax.random.normal(ks[3], (d,))) + 0.5
+    out = ops.fused_aggregate(wt, deltas, wts, a, scale)
+    expect = ref.fused_aggregate_ref(wt, deltas, wts, a, scale)
+    tol = 1e-5 if dtype == jnp.float32 else 0.05
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               rtol=tol, atol=tol)
+
+
+def test_fused_aggregate_zero_weights_is_noop():
+    """All-zero weights (every client sampled out) must return w^t exactly —
+    the masking contract of the participation path."""
+    wt = jax.random.normal(jax.random.PRNGKey(0), (777,))
+    deltas = jax.random.normal(jax.random.PRNGKey(1), (6, 777))
+    a = jnp.abs(jax.random.normal(jax.random.PRNGKey(2), (777,))) + 0.5
+    out = ops.fused_aggregate(wt, deltas, jnp.zeros((6,)), a, 3.0)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(wt))
+
+
+def test_scaled_aggregate_wrapper_matches_iterate_oracle():
+    """The compat entry point (iterate-consuming) still honours the old
+    semantics w^t + A ⊙ Σ wts (w_k − w^t)."""
+    ks = jax.random.split(jax.random.PRNGKey(9), 4)
+    wt = jax.random.normal(ks[0], (513,))
+    wks = jax.random.normal(ks[1], (7, 513))
+    wts = jax.nn.softmax(jax.random.normal(ks[2], (7,)))
+    a = jnp.abs(jax.random.normal(ks[3], (513,))) + 0.5
+    out = ops.scaled_aggregate(wt, wks, wts, a)
+    expect = ref.scaled_aggregate_ref(wt, wks, wts, a)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               rtol=1e-5, atol=1e-5)
+
+
+# --------------------------------------------------------------------- #
+# 2. engine dense-vs-fused parity across the full knob cross
+# --------------------------------------------------------------------- #
+
+
+@pytest.mark.parametrize("weighting", ["nk", "uniform", "sum"])
+@pytest.mark.parametrize("participation", [1.0, 0.5])
+@pytest.mark.parametrize("server_scaling", ["none", "diag"])
+def test_dense_vs_fused_engine_aggregation(small_problem, weighting,
+                                           participation, server_scaling):
+    """aggregator='pallas' (the delta-native fused path: the Pallas kernel
+    on TPU, the identical fused jnp expression elsewhere) == the dense jnp
+    reference for every weighting mode × participation × diag scaling, on
+    the ragged real bucket layout."""
+    prob = small_problem
+    w = jax.random.normal(jax.random.PRNGKey(1), (prob.d,)) * 0.1
+    rng = np.random.default_rng(1)
+    deltas = [
+        jnp.asarray(rng.standard_normal((b.num_clients, prob.d)), jnp.float32)
+        for b in prob.buckets
+    ]
+    a_diag = jnp.abs(jax.random.normal(jax.random.PRNGKey(2), (prob.d,))) + 0.5
+    key = jax.random.PRNGKey(3)
+    kw = dict(weighting=weighting, participation=participation,
+              server_scaling=server_scaling)
+    dense = RoundEngine(prob, EngineConfig(**kw), a_diag=a_diag)
+    fused = RoundEngine(prob, EngineConfig(aggregator="pallas", **kw),
+                        a_diag=a_diag)
+    out_d = dense.aggregate(w, deltas, key)
+    out_f = fused.aggregate(w, deltas, key)
+    np.testing.assert_allclose(np.asarray(out_f), np.asarray(out_d),
+                               rtol=1e-5, atol=1e-5)
+
+
+# --------------------------------------------------------------------- #
+# 3. the single participation draw
+# --------------------------------------------------------------------- #
+
+
+def test_participation_masks_single_draw_matches_per_bucket_chain(small_problem):
+    """participation_masks(key) is bit-identical to the per-bucket
+    fold_in(key, wi) -> fold_in(kb, 997) chain both consumers used to
+    re-derive — one draw, same bits."""
+    prob = small_problem
+    eng = RoundEngine(prob, EngineConfig(participation=0.4))
+    key = jax.random.PRNGKey(7)
+    masks = eng.participation_masks(key)
+    assert len(masks) == len(prob.buckets)
+    wi = 0
+    for m, b in zip(masks, prob.buckets):
+        expect = eng.participation_mask(jax.random.fold_in(key, wi),
+                                        b.num_clients)
+        np.testing.assert_array_equal(np.asarray(m), np.asarray(expect))
+        wi += b.num_clients
+
+
+def test_participation_masks_none_under_full_participation(small_problem):
+    assert RoundEngine(small_problem, EngineConfig()).participation_masks(
+        jax.random.PRNGKey(0)) is None
+
+
+def test_aggregate_with_explicit_masks_is_bit_identical(small_problem):
+    """Passing the precomputed masks vs letting aggregate re-derive them
+    must be the same bits (the dedup is a pure refactor)."""
+    prob = small_problem
+    eng = RoundEngine(prob, EngineConfig(participation=0.5))
+    rng = np.random.default_rng(3)
+    deltas = [
+        jnp.asarray(rng.standard_normal((b.num_clients, prob.d)), jnp.float32)
+        for b in prob.buckets
+    ]
+    w = jnp.zeros(prob.d)
+    key = jax.random.PRNGKey(11)
+    out_implicit = eng.aggregate(w, deltas, key)
+    out_explicit = eng.aggregate(w, deltas, key,
+                                 masks=eng.participation_masks(key))
+    np.testing.assert_array_equal(np.asarray(out_implicit),
+                                  np.asarray(out_explicit))
+
+
+# --------------------------------------------------------------------- #
+# 4. compiled round == reference round, bit for bit
+# --------------------------------------------------------------------- #
+
+
+@pytest.mark.parametrize("participation", [1.0, 0.5])
+def test_compiled_round_pins_reference_fsvrg(tiny_problem, participation):
+    """FSVRG.round (the compiled closure) == the eager reference
+    RoundEngine.round over 3 rounds, bit for bit — the whole-round jit must
+    not change a single ulp (the full-gradient prelude stays eager)."""
+    prob = tiny_problem
+    solver = FSVRG(prob, FSVRGConfig(stepsize=1.0,
+                                     participation=participation))
+    state = solver.init()
+    w_ref = jnp.zeros(prob.d)
+    base = jax.random.PRNGKey(0)
+    for r in range(3):
+        kr = jax.random.fold_in(base, r)
+        state = solver.round(state, kr)
+        w_ref = solver._round_ref(w_ref, kr)
+        np.testing.assert_array_equal(np.asarray(state.w), np.asarray(w_ref))
+
+
+@pytest.mark.parametrize("participation", [1.0, 0.5])
+def test_compiled_round_pins_reference_cocoa(tiny_problem, participation):
+    """CoCoA+.round (compiled, dual-state) == the eager
+    RoundEngine.round_with_state reference, bit for bit — iterate AND dual
+    blocks, with the frozen-state masking under partial participation."""
+    prob = tiny_problem
+    solver = CoCoAPlus(prob, cfg=CoCoAConfig(participation=participation))
+    state = solver.init()
+    w_ref, alphas_ref = state.w, state.aux
+    base = jax.random.PRNGKey(1)
+    for r in range(2):
+        kr = jax.random.fold_in(base, r)
+        state = solver.round(state, kr)
+        w_ref, alphas_ref = solver._round_ref(w_ref, alphas_ref, kr)
+        np.testing.assert_array_equal(np.asarray(state.w), np.asarray(w_ref))
+        for a_c, a_r in zip(state.aux, alphas_ref):
+            np.testing.assert_array_equal(np.asarray(a_c), np.asarray(a_r))
+
+
+def test_bucket_grouping_matches_quadratic_reference(small_dataset):
+    """The single-pass bucket grouping in build_problem must produce exactly
+    the groups the old O(K²) tail-rescan comprehension produced."""
+    from repro.core import build_problem
+
+    ds = small_dataset
+    sizes = ds.client_sizes.astype(np.int64)
+    order = np.argsort(np.ceil(np.log2(np.maximum(sizes, 1))).astype(np.int64),
+                       kind="stable")
+    expected = []
+    i = 0
+    while i < len(order):
+        b = int(np.ceil(np.log2(max(sizes[order[i]], 1))))
+        members = [k for k in order[i:]
+                   if int(np.ceil(np.log2(max(sizes[k], 1)))) == b]
+        i += len(members)
+        expected.append([int(k) for k in members])
+
+    prob = build_problem(ds)
+    assert len(prob.buckets) == len(expected)
+    for bucket, members in zip(prob.buckets, expected):
+        np.testing.assert_array_equal(np.asarray(bucket.n_k),
+                                      sizes[members].astype(np.int32))
+
+
+def test_compiled_round_respects_fused_aggregator(tiny_problem):
+    """A solver built with aggregator='pallas' routes its compiled round
+    through the delta-native kernel and stays allclose to the dense build."""
+    prob = tiny_problem
+    dense = FSVRG(prob, FSVRGConfig(stepsize=1.0))
+    fused = FSVRG(prob, FSVRGConfig(stepsize=1.0, aggregator="pallas"))
+    key = jax.random.PRNGKey(2)
+    sd = dense.round(dense.init(), key)
+    sf = fused.round(fused.init(), key)
+    np.testing.assert_allclose(np.asarray(sf.w), np.asarray(sd.w),
+                               rtol=1e-5, atol=1e-5)
