@@ -16,12 +16,28 @@ federated round, per algorithm × aggregation path × problem scale:
                         ``fused_aggregate`` Pallas kernel on TPU, the
                         identical fused jnp expression elsewhere).
 
+``--paper-k`` appends the paper-scale *client axis* entry: the §4
+experiment's K = 10,000 clients (d and n_k shrunk so it fits CPU CI,
+``configs.gplus_logreg.PAPER_K_CONFIG``), timed over
+
+  * ``eager_dense``            — the unchunked reference round, which
+                                 materializes every bucket's (Kb, d) delta
+                                 stack: O(K·d) peak delta memory.
+  * ``compiled_chunked_dense`` — the streamed round
+                                 (``EngineConfig.client_chunk``): the client
+                                 axis runs in chunks under one ``jax.jit``,
+                                 O(client_chunk·d) peak delta memory.
+  * ``compiled_chunked_fused`` — the streamed round accumulating through the
+                                 delta-native ``fused_aggregate`` chunk
+                                 entry.
+
 Writes ``BENCH_round.json`` at the repo root — ≥ 2 problem scales × ≥ 3
 algorithms, median/mean/min round latency per path and the
 dense-vs-fused speedups, so every future PR has a trajectory to be judged
 against.  ``--smoke`` is the CI guard: a tiny config that exercises every
 path end-to-end (run by ``tests/run_tier1.sh`` with a scratch ``--json`` so
-the committed trajectory file is not clobbered).
+the committed trajectory file is not clobbered; ``--smoke --paper-k`` is the
+budget-guarded large-K variant, skipping the scale sweep).
 """
 from __future__ import annotations
 
@@ -34,7 +50,7 @@ import time
 
 import jax
 
-from repro.configs import get_logreg_config
+from repro.configs import get_logreg_config, get_paper_k_config
 from repro.core import build_problem, make_solver
 from repro.data.synthetic import generate
 
@@ -48,6 +64,12 @@ DEFAULT_JSON = os.path.join(REPO_ROOT, "BENCH_round.json")
 ALGOS = ("gd", "fedavg", "fsvrg", "dane")
 PATHS = ("eager_dense", "compiled_dense", "compiled_fused")
 
+#: the paper-scale entry's paths: unchunked reference vs the streamed round
+PAPER_K_ALGOS = ("gd", "fedavg", "fsvrg")
+PAPER_K_PATHS = ("eager_dense", "compiled_chunked_dense",
+                 "compiled_chunked_fused")
+PAPER_K_BUCKET_ROWS = 20_000
+
 
 def _round_closures(algo: str, prob):
     """(eager_dense, compiled_dense, compiled_fused) round closures."""
@@ -57,6 +79,19 @@ def _round_closures(algo: str, prob):
         "eager_dense": dense._round_ref,
         "compiled_dense": dense._round_fast,
         "compiled_fused": fused._round_fast,
+    }
+
+
+def _paper_k_closures(algo: str, prob, chunk: int):
+    """Round closures for the large-K entry: the unchunked eager reference
+    against the streamed (client_chunk) compiled round, dense and fused."""
+    dense = make_solver(algo, prob)
+    chunked = make_solver(algo, prob, client_chunk=chunk)
+    fused = make_solver(algo, prob, client_chunk=chunk, aggregator="pallas")
+    return {
+        "eager_dense": dense._round_ref,
+        "compiled_chunked_dense": chunked._round_fast,
+        "compiled_chunked_fused": fused._round_fast,
     }
 
 
@@ -111,19 +146,27 @@ def main(argv=None):
     ap.add_argument("--json", default=DEFAULT_JSON)
     ap.add_argument("--smoke", action="store_true",
                     help="CI guard: tiny config, 2 algorithms, 1 repeat")
+    ap.add_argument("--paper-k", action="store_true",
+                    help="append the K=10,000 paper-scale client-axis entry "
+                         "(streamed rounds); with --smoke, run ONLY it at "
+                         "reduced budget")
+    ap.add_argument("--paper-chunk", type=int, default=512,
+                    help="client_chunk for the --paper-k streamed rounds")
     args = ap.parse_args(argv)
 
     if args.smoke:
-        scales = [0.001]
+        scales = [] if args.paper_k else [0.001]
         algos = ["gd", "fedavg"]
         rounds, repeats = 2, 1
+        pk_algos = ["gd", "fedavg"]
     else:
-        scales = [float(s) for s in args.scales.split(",")]
+        scales = [float(s) for s in args.scales.split(",") if s]
         algos = [a.strip() for a in args.algos.split(",")]
         rounds, repeats = args.rounds, args.repeats
+        pk_algos = list(PAPER_K_ALGOS)
 
     results = {
-        "schema": 1,
+        "schema": 2,
         "smoke": bool(args.smoke),
         "backend": jax.default_backend(),
         "jax_version": jax.__version__,
@@ -176,29 +219,77 @@ def main(argv=None):
             for path in PATHS}
         results["configs"].append(entry)
 
-    largest = results["configs"][-1]
-    paired = {a: rec["paired_speedup_fused_vs_eager"]
-              for a, rec in largest["algos"].items()}
-    # Headline speedup: geometric mean across algorithms of the *paired*
-    # per-round estimates.  Summed raw medians let one compute-heavy
-    # algorithm's ambient-load noise (±3% on a shared machine) swamp the
-    # real per-algorithm wins; the paired ratios cancel that load, and the
-    # geomean is the standard cross-benchmark summary.
-    geomean = math.exp(statistics.fmean(math.log(s) for s in paired.values()))
-    results["largest"] = {
-        "scale": largest["scale"],
-        "clients": largest["clients"],
-        "median_round_latency_s": largest["total_median_s"],
-        "per_algo_paired_speedup_fused_vs_eager": paired,
-        "speedup_fused_vs_eager": geomean,
-        "fused_beats_eager": geomean > 1.0,
-    }
-    print("# largest config (scale={scale}, K={clients}): total median round "
-          "latency {median_round_latency_s}; paired per-algo "
-          "{per_algo_paired_speedup_fused_vs_eager} -> fused-vs-eager "
-          "speedup (geomean) {speedup_fused_vs_eager:.3f} "
-          "(beats eager: {fused_beats_eager})"
-          .format(**results["largest"]))
+    if scales:
+        largest = results["configs"][-1]
+        paired = {a: rec["paired_speedup_fused_vs_eager"]
+                  for a, rec in largest["algos"].items()}
+        # Headline speedup: geometric mean across algorithms of the *paired*
+        # per-round estimates.  Summed raw medians let one compute-heavy
+        # algorithm's ambient-load noise (±3% on a shared machine) swamp the
+        # real per-algorithm wins; the paired ratios cancel that load, and
+        # the geomean is the standard cross-benchmark summary.
+        geomean = math.exp(
+            statistics.fmean(math.log(s) for s in paired.values()))
+        results["largest"] = {
+            "scale": largest["scale"],
+            "clients": largest["clients"],
+            "median_round_latency_s": largest["total_median_s"],
+            "per_algo_paired_speedup_fused_vs_eager": paired,
+            "speedup_fused_vs_eager": geomean,
+            "fused_beats_eager": geomean > 1.0,
+        }
+        print("# largest config (scale={scale}, K={clients}): total median "
+              "round latency {median_round_latency_s}; paired per-algo "
+              "{per_algo_paired_speedup_fused_vs_eager} -> fused-vs-eager "
+              "speedup (geomean) {speedup_fused_vs_eager:.3f} "
+              "(beats eager: {fused_beats_eager})"
+              .format(**results["largest"]))
+
+    if args.paper_k:
+        pk_cfg = get_paper_k_config()
+        ds = generate(pk_cfg, seed=args.seed)
+        prob = build_problem(ds, max_bucket_rows=PAPER_K_BUCKET_ROWS)
+        entry = {
+            "scale": "paper-k",
+            "clients": int(ds.num_clients),
+            "examples": int(ds.num_examples),
+            "features": int(ds.num_features),
+            "buckets": len(prob.buckets),
+            "client_chunk": args.paper_chunk,
+            "max_bucket_rows": PAPER_K_BUCKET_ROWS,
+            "paths": list(PAPER_K_PATHS),
+            "algos": {},
+        }
+        for algo in pk_algos:
+            closures = _paper_k_closures(algo, prob, args.paper_chunk)
+            w0 = jax.numpy.zeros(prob.d)
+            all_samples = _time_rounds(closures, w0, rounds, repeats)
+            rec = {}
+            for path in PAPER_K_PATHS:
+                rec[path] = _stats(all_samples[path])
+                print(f"paper-k,{algo},{path},{rec[path]['median_s']:.5f},"
+                      f"{rec[path]['mean_s']:.5f},{rec[path]['min_s']:.5f}")
+            rec["paired_speedup_chunked_vs_eager"] = statistics.median(
+                e / c for e, c in zip(all_samples["eager_dense"],
+                                      all_samples["compiled_chunked_dense"]))
+            entry["algos"][algo] = rec
+        entry["total_median_s"] = {
+            path: sum(rec[path]["median_s"] for rec in entry["algos"].values())
+            for path in PAPER_K_PATHS}
+        results["configs"].append(entry)
+        results["paper_k"] = {
+            "clients": entry["clients"],
+            "client_chunk": entry["client_chunk"],
+            "median_round_latency_s": entry["total_median_s"],
+            "per_algo_paired_speedup_chunked_vs_eager": {
+                a: rec["paired_speedup_chunked_vs_eager"]
+                for a, rec in entry["algos"].items()},
+        }
+        print("# paper-k (K={clients}, client_chunk={client_chunk}): total "
+              "median round latency {median_round_latency_s}; paired "
+              "chunked-vs-eager "
+              "{per_algo_paired_speedup_chunked_vs_eager}"
+              .format(**results["paper_k"]))
 
     with open(args.json, "w") as f:
         json.dump(results, f, indent=1)

@@ -34,6 +34,12 @@ def get_logreg_config():
     return mod.CONFIG
 
 
+def get_paper_k_config():
+    """§4's K = 10,000 client count with CI-sized d/n_k (see gplus_logreg)."""
+    mod = importlib.import_module("repro.configs.gplus_logreg")
+    return mod.PAPER_K_CONFIG
+
+
 def get_fedavg_config():
     mod = importlib.import_module("repro.configs.fedavg_gplus")
     return mod.CONFIG
@@ -61,7 +67,7 @@ def get_gd_config():
 
 __all__ = [
     "ArchConfig", "InputShape", "MoEConfig", "INPUT_SHAPES", "SHAPES",
-    "ARCH_IDS", "get_config", "get_logreg_config", "get_fedavg_config",
-    "get_dane_config", "get_cocoa_config", "get_fsvrg_config",
-    "get_gd_config",
+    "ARCH_IDS", "get_config", "get_logreg_config", "get_paper_k_config",
+    "get_fedavg_config", "get_dane_config", "get_cocoa_config",
+    "get_fsvrg_config", "get_gd_config",
 ]

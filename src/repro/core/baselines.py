@@ -55,17 +55,25 @@ class DistributedGD(FederatedSolver):
     name = "gd"
 
     def __init__(self, problem: FederatedLogReg, stepsize: float = 2.0,
-                 aggregator: str = "dense"):
+                 aggregator: str = "dense",
+                 client_chunk: Optional[int] = None):
         self.problem = problem
         self.stepsize = stepsize
-        self.engine = RoundEngine(problem, EngineConfig(aggregator=aggregator))
+        self.engine = RoundEngine(problem,
+                                  EngineConfig(aggregator=aggregator,
+                                               client_chunk=client_chunk))
         self._passes = [
             jax.jit(functools.partial(_gd_client_pass, bucket=b,
                                       lam=problem.flat.lam, stepsize=stepsize))
             for b in problem.buckets
         ]
         gd_pass = lambda w, bi, b, kb: self._passes[bi](w)
-        self._round_fast = self.engine.compile(gd_pass)
+        # deterministic pass: the per-client keys of the streamed contract
+        # are simply unused
+        gd_chunk_pass = lambda w, bi, cb, keys: _gd_client_pass(
+            w, cb, problem.flat.lam, stepsize)
+        self._round_fast = self.engine.compile(gd_pass,
+                                               chunk_pass=gd_chunk_pass)
         self._round_ref = self.engine.reference(gd_pass)
 
     @property

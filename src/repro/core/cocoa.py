@@ -73,10 +73,19 @@ def _sdca_local_pass(w, alpha_b, bucket: ClientBucket, lam, n, sigma,
     (Kb,)-vector call per step — the fused Pallas kernel when
     ``use_kernel``, the identical jnp recursion elsewhere.
     """
+    keys = jax.random.split(key, bucket.num_clients)
+    return _sdca_local_pass_keyed(w, alpha_b, bucket, lam, n, sigma,
+                                  use_kernel, keys)
+
+
+def _sdca_local_pass_keyed(w, alpha_b, bucket: ClientBucket, lam, n, sigma,
+                           use_kernel, keys):
+    """:func:`_sdca_local_pass` over explicit per-client keys — the engine's
+    streamed (``client_chunk``) path hands in chunk-sized bucket/state
+    slices with the matching slice of the bucket's key split."""
     Kb = bucket.num_clients
     m_pad = bucket.m_pad
     d = w.shape[0]
-    keys = jax.random.split(key, Kb)
     perms = jax.vmap(lambda ck: jax.random.permutation(ck, m_pad))(keys)
 
     def coeffs_one(idx, val, y, alpha_k, r, i):
@@ -125,6 +134,9 @@ class CoCoAConfig:
     aggregator: str = "dense"      # engine aggregator: "dense" | "pallas"
     # None -> auto: fused Pallas cocoa_sdca kernel on TPU, jnp elsewhere.
     use_kernel: Optional[bool] = None
+    # None -> materialize each bucket's (Kb, d) delta stack; an int streams
+    # the client axis in chunks of this size (see EngineConfig.client_chunk)
+    client_chunk: Optional[int] = None
 
 
 class CoCoAPlus(FederatedSolver):
@@ -165,14 +177,21 @@ class CoCoAPlus(FederatedSolver):
         self.engine = RoundEngine(
             problem,
             EngineConfig(weighting="sum", participation=cfg.participation,
-                         aggregator=cfg.aggregator),
+                         aggregator=cfg.aggregator,
+                         client_chunk=cfg.client_chunk),
         )
 
         def cocoa_pass(w, bi, bucket, alpha_b, kb):
             u, r = self._pass[bi](w, alpha_b, kb)
             return r * self._scale, alpha_b + u
 
-        self._round_fast = self.engine.compile_with_state(cocoa_pass)
+        def cocoa_chunk_pass(w, bi, chunk_bucket, alpha_c, keys):
+            u, r = _sdca_local_pass_keyed(w, alpha_c, chunk_bucket, lam, n,
+                                          self.sigma, use_kernel, keys)
+            return r * self._scale, alpha_c + u
+
+        self._round_fast = self.engine.compile_with_state(
+            cocoa_pass, chunk_pass=cocoa_chunk_pass)
         self._round_ref = self.engine.reference_with_state(cocoa_pass)
 
     def init(self, w0: Optional[jax.Array] = None) -> SolverState:

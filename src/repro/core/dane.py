@@ -67,6 +67,9 @@ class DANEConfig:
     # None -> auto: fused Pallas dane_update kernel on TPU, jnp elsewhere.
     use_kernel: Optional[bool] = None
     aggregator: str = "dense"      # engine aggregator: "dense" | "pallas"
+    # None -> materialize each bucket's (Kb, d) delta stack; an int streams
+    # the client axis in chunks of this size (see EngineConfig.client_chunk)
+    client_chunk: Optional[int] = None
 
     def __post_init__(self):
         if self.local_solver not in _SOLVERS:
@@ -113,8 +116,16 @@ def _dane_gd_pass(w0, full_grad, bucket: ClientBucket, lam, cfg: DANEConfig,
 
 def _dane_svrg_pass(w0, full_grad, bucket: ClientBucket, lam, cfg: DANEConfig,
                     key):
+    keys = jax.random.split(key, bucket.num_clients)
+    return _dane_svrg_pass_keyed(w0, full_grad, bucket, lam, cfg, keys)
+
+
+def _dane_svrg_pass_keyed(w0, full_grad, bucket: ClientBucket, lam,
+                          cfg: DANEConfig, keys):
     """Proposition 1: solve subproblem (10) *as a subproblem* (η=1, µ=0)
     with one epoch of generic SVRG.  Returns (Kb, d) deltas w_k − w0.
+    Takes explicit per-client keys so the engine's streamed path can hand
+    chunk-sized slices of the bucket's key split.
 
     The SVRG epoch on G_k(w') = F_k(w') − a_kᵀw' starting at w^t:
       full gradient of G_k at anchor w^t is ∇F_k(w^t) − a_k = ∇f(w^t)
@@ -157,7 +168,6 @@ def _dane_svrg_pass(w0, full_grad, bucket: ClientBucket, lam, cfg: DANEConfig,
         wk, _ = jax.lax.scan(step, w0, samples)
         return wk - w0
 
-    keys = jax.random.split(key, bucket.num_clients)
     return jax.vmap(one_client)(bucket.idx, bucket.val, bucket.y, bucket.n_k,
                                 keys)
 
@@ -192,7 +202,8 @@ class DANE(FederatedSolver):
         self.engine = RoundEngine(
             problem,
             EngineConfig(participation=cfg.participation, weighting="uniform",
-                         aggregator=cfg.aggregator),
+                         aggregator=cfg.aggregator,
+                         client_chunk=cfg.client_chunk),
         )
 
         # Alg. 2 step 1's full gradient is the eager prelude (its own round
@@ -200,8 +211,18 @@ class DANE(FederatedSolver):
         def dane_pass(w, bi, bucket, kb, full_grad):
             return self._passes[bi](w, full_grad, key=kb)
 
+        if cfg.local_solver == "gd":
+            def dane_chunk_pass(w, bi, chunk_bucket, keys, full_grad):
+                return _dane_gd_pass(w, full_grad, chunk_bucket, lam, cfg,
+                                     use_kernel, key=None)
+        else:
+            def dane_chunk_pass(w, bi, chunk_bucket, keys, full_grad):
+                return _dane_svrg_pass_keyed(w, full_grad, chunk_bucket, lam,
+                                             cfg, keys)
+
         prelude = lambda w: (self.problem.flat.grad(w),)
-        self._round_fast = self.engine.compile(dane_pass, prelude=prelude)
+        self._round_fast = self.engine.compile(dane_pass, prelude=prelude,
+                                               chunk_pass=dane_chunk_pass)
         self._round_ref = self.engine.reference(dane_pass, prelude=prelude)
 
     def round(self, state: SolverState, key: jax.Array) -> SolverState:

@@ -52,10 +52,25 @@ per-bucket ``fold_in`` offsets are precomputed, the client passes and the
 aggregation run inside a single ``jax.jit`` (with donated iterate/state
 buffers off-CPU), and an optional eager ``prelude`` carries per-round
 server state (e.g. FSVRG's full gradient — its own round of communication
-in the paper, so it stays outside the jitted body and the compiled round
-remains bit-identical to the eager reference).  Every solver's ``round``
+in the paper, so it stays outside the jitted body; the compiled round then
+tracks the eager reference to tight float tolerance — bit-identically on
+single-bucket problems, where the jit has no cross-bucket aggregation sum
+to re-associate).  Every solver's ``round``
 calls its compiled closure; :meth:`round` / :meth:`round_with_state` stay
 as the eager reference implementations the pin tests compare against.
+
+The paper's defining regime is *massively distributed* — §4 runs K=10,000
+clients.  Materializing every bucket's (Kb, d) delta stack is O(K·d) peak
+memory, which is exactly what breaks first at that K.  With
+``EngineConfig.client_chunk`` set, rounds **stream** the client axis
+instead (:meth:`round_streamed` / :meth:`round_streamed_with_state`): each
+bucket's pass runs over chunk-sized client slices under ``lax.scan``,
+accumulating the weighted delta sum (a (d,) vector) chunk by chunk —
+O(client_chunk·d) peak delta memory — and ``compile`` traces the streamed
+path inside the same single ``jax.jit``.  The per-client key split is
+hoisted into the engine (:meth:`client_keys`) so chunked rounds consume
+the *same* per-client randomness as the reference and differ only in
+summation order (float tolerance, not bit-for-bit).
 """
 from __future__ import annotations
 
@@ -76,6 +91,19 @@ ClientPassFn = Callable[[jax.Array, int, ClientBucket, jax.Array], jax.Array]
 DualClientPassFn = Callable[
     [jax.Array, int, ClientBucket, Any, jax.Array], Tuple[jax.Array, Any]]
 
+#: chunk_pass(w, bucket_index, chunk_bucket, keys) -> (chunk, d) deltas.
+#: The streamed round hands the pass a chunk-sized slice of the bucket and
+#: the matching slice of ``split(bucket_key, Kb)`` — the exact per-client
+#: keys the unchunked pass derives internally, so chunked and reference
+#: rounds differ only in summation order.
+ChunkClientPassFn = Callable[
+    [jax.Array, int, ClientBucket, jax.Array], jax.Array]
+
+#: dual chunk_pass(w, bucket_index, chunk_bucket, state_chunk, keys)
+#: -> (deltas, new_state_chunk)
+DualChunkClientPassFn = Callable[
+    [jax.Array, int, ClientBucket, Any, jax.Array], Tuple[jax.Array, Any]]
+
 _WEIGHTINGS = ("nk", "uniform", "sum")
 _SCALINGS = ("none", "diag")
 _AGGREGATORS = ("dense", "pallas")
@@ -89,6 +117,14 @@ class EngineConfig:
     weighting: str = "nk"          # "nk" (n_k/n) | "uniform" (1/K) | "sum" (1)
     server_scaling: str = "none"   # "none" | "diag" (apply a_diag coordinatewise)
     aggregator: str = "dense"      # "dense" | "pallas" (scaled_aggregate kernel)
+    # None -> materialize each bucket's full (Kb, d) delta stack (the
+    # bit-exact reference path).  An int streams the client axis instead:
+    # each bucket's pass runs over client chunks of this size via lax.scan,
+    # accumulating the weighted delta *sum* (a (d,) vector) chunk by chunk,
+    # so peak delta memory is O(client_chunk·d) — the paper-scale K=10,000
+    # regime on a CPU box.  Chunked rounds match the reference to float
+    # tolerance (summation order), not bit-for-bit.
+    client_chunk: Optional[int] = None
 
     def __post_init__(self):
         if self.weighting not in _WEIGHTINGS:
@@ -99,11 +135,27 @@ class EngineConfig:
             raise ValueError(f"aggregator must be one of {_AGGREGATORS}")
         if not 0.0 < self.participation <= 1.0:
             raise ValueError("participation must be in (0, 1]")
+        if self.client_chunk is not None and (
+                not isinstance(self.client_chunk, int)
+                or self.client_chunk < 1):
+            raise ValueError("client_chunk must be a positive int or None")
 
 
 @functools.partial(jax.jit, static_argnames=("scaled",))
 def _apply_server_update(w, agg, a_diag, scaled: bool):
     return w + (a_diag if scaled else 1.0) * agg
+
+
+def _kernel(name: str) -> Callable:
+    """Resolve a delta-native aggregation kernel for this backend — the
+    Pallas entry on TPU, the identical fused jnp oracle elsewhere (the same
+    auto policy as the solvers' ``use_kernel``; interpret-mode emulation is
+    for the parity tests, never the hot path)."""
+    if jax.default_backend() == "tpu":
+        from repro.kernels import ops
+        return getattr(ops, name)
+    from repro.kernels import ref
+    return getattr(ref, name + "_ref")
 
 
 class RoundEngine:
@@ -160,6 +212,28 @@ class RoundEngine:
 
     # -- step 4: aggregation ----------------------------------------------- #
 
+    def _reweightable(self, masks) -> bool:
+        """Reweighting by expected/realized mass keeps the *average*
+        direction unbiased; a "sum" aggregation must stay the plain partial
+        sum — for dual methods each participant's delta enters exactly once
+        so the primal iterate keeps tracking the
+        (frozen-for-non-participants) dual blocks, w = (1/λn)Xα.  When this
+        is False the mass reductions are skipped outright instead of being
+        traced as dead computation into every compiled dual-method round."""
+        return masks is not None and self.cfg.weighting != "sum"
+
+    @staticmethod
+    def _reweight_scale(total_mass, expected_mass):
+        """The unbiased-participation reweight scalar (one definition for
+        the materialized and streamed paths)."""
+        return expected_mass / jnp.maximum(total_mass, 1e-9)
+
+    def _finish_dense(self, w, agg, scale):
+        if scale is not None:
+            agg = agg * scale
+        return _apply_server_update(w, agg, self.a_diag,
+                                    self.cfg.server_scaling == "diag")
+
     def aggregate(self, w: jax.Array, deltas_by_bucket: Sequence[jax.Array],
                   key: jax.Array, *,
                   masks: Optional[Sequence[jax.Array]] = None) -> jax.Array:
@@ -175,6 +249,7 @@ class RoundEngine:
         pallas = cfg.aggregator == "pallas"
         if masks is None:
             masks = self.participation_masks(key)
+        reweight = self._reweightable(masks)
         agg = jnp.zeros_like(w)
         stacked: List[jax.Array] = []
         stacked_wts: List[jax.Array] = []
@@ -186,8 +261,9 @@ class RoundEngine:
             wts = self.bucket_weights(wi, b.num_clients)
             if masks is not None:
                 sel = masks[i]
-                total_mass = total_mass + (wts * sel).sum()
-                expected_mass = expected_mass + wts.sum()
+                if reweight:
+                    total_mass = total_mass + (wts * sel).sum()
+                    expected_mass = expected_mass + wts.sum()
                 wts = wts * sel
             if pallas:
                 stacked.append(deltas)
@@ -195,13 +271,7 @@ class RoundEngine:
             else:
                 agg = agg + (wts[:, None] * deltas).sum(axis=0)
 
-        # Reweighting by expected/realized mass keeps the *average* direction
-        # unbiased; a "sum" aggregation must stay the plain partial sum — for
-        # dual methods each participant's delta enters exactly once so the
-        # primal iterate keeps tracking the (frozen-for-non-participants)
-        # dual blocks, w = (1/λn)Xα.
-        reweight = masks is not None and cfg.weighting != "sum"
-        scale = expected_mass / jnp.maximum(total_mass, 1e-9) \
+        scale = self._reweight_scale(total_mass, expected_mass) \
             if reweight else None
 
         if pallas:
@@ -215,18 +285,10 @@ class RoundEngine:
             deltas_all = jnp.concatenate(stacked, axis=0)
             a = self.a_diag if cfg.server_scaling == "diag" else jnp.ones_like(w)
             s = scale if scale is not None else 1.0
-            if jax.default_backend() == "tpu":
-                from repro.kernels import ops
-                return ops.fused_aggregate(
-                    w, deltas_all, wts_all, a, s).astype(w.dtype)
-            from repro.kernels import ref
-            return ref.fused_aggregate_ref(
+            return _kernel("fused_aggregate")(
                 w, deltas_all, wts_all, a, s).astype(w.dtype)
 
-        if scale is not None:
-            agg = agg * scale
-        return _apply_server_update(w, agg, self.a_diag,
-                                    cfg.server_scaling == "diag")
+        return self._finish_dense(w, agg, scale)
 
     # -- steps 2-4: one full round ----------------------------------------- #
 
@@ -280,15 +342,167 @@ class RoundEngine:
             new_states.append(s_b)
         return self.aggregate(w, deltas, key, masks=masks), new_states
 
+    # -- the streamed round: O(client_chunk · d) peak delta memory ---------- #
+
+    def client_keys(self, bucket_key: jax.Array, num_clients: int) -> jax.Array:
+        """The bucket's per-client keys — ``split(bucket_key, Kb)``, the
+        exact split every client pass historically performed internally.
+        The streamed round hoists it here so a chunk-sized pass can receive
+        the *same* per-client keys the unchunked pass would have used."""
+        return jax.random.split(bucket_key, num_clients)
+
+    @staticmethod
+    def _pad_clients(x: jax.Array, pad: int) -> jax.Array:
+        if pad == 0:
+            return x
+        return jnp.concatenate(
+            [x, jnp.zeros((pad,) + x.shape[1:], x.dtype)], axis=0)
+
+    def _stream_bucket(self, w, bi: int, bucket: ClientBucket, kb, wts,
+                       chunk_pass, state_b=None, sel=None):
+        """Run one bucket's client pass chunk-by-chunk, returning the
+        bucket's weighted delta **sum** (a (d,) vector) and — for dual-state
+        passes — the updated bucket state.
+
+        The client axis is padded to a multiple of ``client_chunk`` with
+        zero-weight, n_k = 0 clients (an exact no-op in the aggregate) and
+        reshaped to (num_chunks, chunk, ...); ``lax.scan`` folds the chunks
+        so only one (chunk, d) delta block is ever live.
+        """
+        Kb = bucket.num_clients
+        chunk = min(self.cfg.client_chunk, Kb)
+        pad = (-Kb) % chunk
+        nch = (Kb + pad) // chunk
+        keys = self.client_keys(kb, Kb)
+        if pad:
+            # padded clients carry weight 0; their key is never consumed in
+            # a way that matters, but must be a valid key array
+            keys = jnp.concatenate(
+                [keys, jnp.broadcast_to(keys[:1], (pad,) + keys.shape[1:])])
+
+        def chunked(x):
+            x = self._pad_clients(x, pad)
+            return x.reshape((nch, chunk) + x.shape[1:])
+
+        xs = {
+            "idx": chunked(bucket.idx), "val": chunked(bucket.val),
+            "y": chunked(bucket.y), "n_k": chunked(bucket.n_k),
+            "keys": keys.reshape((nch, chunk) + keys.shape[1:]),
+            "wts": chunked(wts),
+        }
+        if state_b is not None:
+            xs["state"] = jax.tree_util.tree_map(chunked, state_b)
+        if sel is not None:
+            xs["sel"] = chunked(sel)
+        fused = self.cfg.aggregator == "pallas"
+
+        def body(acc, x):
+            cb = ClientBucket(x["idx"], x["val"], x["y"], x["n_k"])
+            if state_b is None:
+                deltas = chunk_pass(w, bi, cb, x["keys"])
+                s_new = None
+            else:
+                deltas, s_new = chunk_pass(w, bi, cb, x["state"], x["keys"])
+                if sel is not None:
+                    s_new = jax.tree_util.tree_map(
+                        lambda new, old: jnp.where(
+                            x["sel"].reshape((chunk,) + (1,) * (new.ndim - 1))
+                            > 0, new, old),
+                        s_new, x["state"])
+            if fused:
+                # the kernel's init/acc split with an identity epilogue
+                acc = _kernel("fused_accumulate")(acc, deltas, x["wts"])
+            else:
+                acc = acc + (x["wts"][:, None] * deltas).sum(axis=0)
+            return acc, s_new
+
+        acc, s_stack = jax.lax.scan(body, jnp.zeros_like(w), xs)
+        if state_b is None:
+            return acc, None
+        new_state = jax.tree_util.tree_map(
+            lambda a: a.reshape((nch * chunk,) + a.shape[2:])[:Kb], s_stack)
+        return acc, new_state
+
+    def _streamed_round(self, w, key, chunk_pass, states, masks):
+        cfg = self.cfg
+        reweight = self._reweightable(masks)
+        acc = jnp.zeros_like(w)
+        total_mass = jnp.zeros(())
+        expected_mass = jnp.zeros(())
+        new_states: Optional[List[Any]] = [] if states is not None else None
+        for bi, (wi, b) in enumerate(zip(self._offsets, self.problem.buckets)):
+            kb = jax.random.fold_in(key, wi)
+            wts = self.bucket_weights(wi, b.num_clients)
+            sel = masks[bi] if masks is not None else None
+            if sel is not None:
+                if reweight:
+                    total_mass = total_mass + (wts * sel).sum()
+                    expected_mass = expected_mass + wts.sum()
+                wts = wts * sel
+            acc_b, s_b = self._stream_bucket(
+                w, bi, b, kb, wts, chunk_pass,
+                state_b=states[bi] if states is not None else None, sel=sel)
+            acc = acc + acc_b
+            if new_states is not None:
+                new_states.append(s_b)
+        scale = self._reweight_scale(total_mass, expected_mass) \
+            if reweight else None
+
+        if cfg.aggregator == "pallas":
+            a = self.a_diag if cfg.server_scaling == "diag" else jnp.ones_like(w)
+            s = scale if scale is not None else 1.0
+            w_next = _kernel("fused_epilogue")(w, acc, a, s).astype(w.dtype)
+        else:
+            w_next = self._finish_dense(w, acc, scale)
+        return w_next, new_states
+
+    def round_streamed(self, w: jax.Array, key: jax.Array,
+                       chunk_pass: ChunkClientPassFn) -> jax.Array:
+        """:meth:`round` with the client axis streamed in ``client_chunk``
+        chunks — the weighted delta sum accumulates chunk-by-chunk and the
+        (Kb, d) stacks are never materialized.  Same weighting /
+        participation / scaling semantics and the same per-client key chain
+        as :meth:`round`; results agree to float tolerance (summation
+        order), not bit-for-bit.
+        """
+        if self.cfg.client_chunk is None:
+            raise ValueError("round_streamed requires cfg.client_chunk")
+        w_next, _ = self._streamed_round(w, key, chunk_pass, None,
+                                         self.participation_masks(key))
+        return w_next
+
+    def round_streamed_with_state(self, w: jax.Array, states: Sequence[Any],
+                                  key: jax.Array,
+                                  chunk_pass: DualChunkClientPassFn
+                                  ) -> Tuple[jax.Array, List[Any]]:
+        """:meth:`round_with_state`, streamed.  The pass receives chunk-sized
+        state slices and the frozen-state masking applies per chunk with the
+        round's single Bernoulli draw; bucket states are reassembled in
+        client order, so only the (chunk, d) delta block is extra memory."""
+        if self.cfg.client_chunk is None:
+            raise ValueError("round_streamed_with_state requires "
+                             "cfg.client_chunk")
+        return self._streamed_round(w, key, chunk_pass, list(states),
+                                    self.participation_masks(key))
+
     # -- the compiled round: O(1) dispatches per round ---------------------- #
 
     def _should_donate(self, donate: Optional[bool]) -> bool:
         # Donation is a no-op (with a warning) on CPU; default it off there.
         return jax.default_backend() != "cpu" if donate is None else donate
 
+    def _require_chunk_pass(self, chunk_pass):
+        if chunk_pass is None:
+            raise ValueError(
+                "cfg.client_chunk is set but no chunk_pass was supplied — "
+                "streamed rounds need the per-client-keyed chunk pass "
+                "(chunk_pass(w, bi, chunk_bucket, keys, *ctx))")
+        return chunk_pass
+
     def compile(self, client_pass: Callable, *,
                 prelude: Optional[Callable] = None,
-                donate: Optional[bool] = None) -> Callable:
+                donate: Optional[bool] = None,
+                chunk_pass: Optional[Callable] = None) -> Callable:
         """One federated round as a single compiled dispatch.
 
         Returns ``compiled_round(w, key) -> w_next``: the per-bucket client
@@ -299,17 +513,35 @@ class RoundEngine:
 
         ``prelude(w) -> tuple`` carries per-round *server* state — e.g.
         FSVRG's/DANE's full gradient, which the paper counts as its own round
-        of communication.  It runs eagerly outside the jitted body (so the
-        compiled round stays bit-identical to :meth:`round`, the reference
-        implementation) and its results are appended to the pass's
-        arguments: ``client_pass(w, bi, bucket, kb, *prelude(w))``.
+        of communication.  It runs eagerly outside the jitted body (XLA
+        fuses ``flat.grad`` differently under jit; keeping it out pins the
+        compiled round to :meth:`round`, the reference implementation, up
+        to the jit's re-association of the cross-bucket aggregation sum)
+        and its results are appended to the pass's arguments:
+        ``client_pass(w, bi, bucket, kb, *prelude(w))``.
+
+        When ``cfg.client_chunk`` is set the same single ``jax.jit`` traces
+        the **streamed** path (:meth:`round_streamed`) over ``chunk_pass``
+        instead — peak delta memory O(client_chunk·d); :meth:`round` (and
+        :meth:`reference`) stay the unchunked bit-exact reference.
         """
         donate_args = (0,) if self._should_donate(donate) else ()
 
-        @functools.partial(jax.jit, donate_argnums=donate_args)
-        def _body(w, ctx, key):
-            return self.round(
-                w, key, lambda w_, bi, b, kb: client_pass(w_, bi, b, kb, *ctx))
+        if self.cfg.client_chunk is not None:
+            c_pass = self._require_chunk_pass(chunk_pass)
+
+            @functools.partial(jax.jit, donate_argnums=donate_args)
+            def _body(w, ctx, key):
+                return self.round_streamed(
+                    w, key,
+                    lambda w_, bi, cb, ks: c_pass(w_, bi, cb, ks, *ctx))
+        else:
+
+            @functools.partial(jax.jit, donate_argnums=donate_args)
+            def _body(w, ctx, key):
+                return self.round(
+                    w, key,
+                    lambda w_, bi, b, kb: client_pass(w_, bi, b, kb, *ctx))
 
         def compiled_round(w, key):
             ctx = tuple(prelude(w)) if prelude is not None else ()
@@ -331,21 +563,37 @@ class RoundEngine:
 
     def compile_with_state(self, dual_pass: Callable, *,
                            prelude: Optional[Callable] = None,
-                           donate: Optional[bool] = None) -> Callable:
+                           donate: Optional[bool] = None,
+                           chunk_pass: Optional[Callable] = None) -> Callable:
         """:meth:`compile` for dual-state rounds.
 
         Returns ``compiled_round(w, states, key) -> (w_next, new_states)``
         over a tuple-of-pytrees ``states``; both the iterate and the state
-        buffers are donated on accelerator backends.
+        buffers are donated on accelerator backends.  With
+        ``cfg.client_chunk`` set, the jitted body is the streamed
+        :meth:`round_streamed_with_state` over ``chunk_pass``.
         """
         donate_args = (0, 1) if self._should_donate(donate) else ()
 
-        @functools.partial(jax.jit, donate_argnums=donate_args)
-        def _body(w, states, ctx, key):
-            w2, new_states = self.round_with_state(
-                w, list(states), key,
-                lambda w_, bi, b, s_b, kb: dual_pass(w_, bi, b, s_b, kb, *ctx))
-            return w2, tuple(new_states)
+        if self.cfg.client_chunk is not None:
+            c_pass = self._require_chunk_pass(chunk_pass)
+
+            @functools.partial(jax.jit, donate_argnums=donate_args)
+            def _body(w, states, ctx, key):
+                w2, new_states = self.round_streamed_with_state(
+                    w, list(states), key,
+                    lambda w_, bi, cb, s_c, ks: c_pass(w_, bi, cb, s_c, ks,
+                                                       *ctx))
+                return w2, tuple(new_states)
+        else:
+
+            @functools.partial(jax.jit, donate_argnums=donate_args)
+            def _body(w, states, ctx, key):
+                w2, new_states = self.round_with_state(
+                    w, list(states), key,
+                    lambda w_, bi, b, s_b, kb: dual_pass(w_, bi, b, s_b, kb,
+                                                         *ctx))
+                return w2, tuple(new_states)
 
         def compiled_round(w, states, key):
             ctx = tuple(prelude(w)) if prelude is not None else ()

@@ -46,12 +46,25 @@ class FedAvgConfig:
     # None -> auto: fused Pallas kernel on TPU, plain jnp elsewhere.
     use_kernel: Optional[bool] = None
     aggregator: str = "dense"      # engine aggregator: "dense" | "pallas"
+    # None -> materialize each bucket's (Kb, d) delta stack; an int streams
+    # the client axis in chunks of this size (paper-scale K on bounded
+    # memory; see EngineConfig.client_chunk)
+    client_chunk: Optional[int] = None
 
 
 def _local_sgd_pass(w0, bucket: ClientBucket, lam, cfg: FedAvgConfig,
                     use_kernel: bool, key):
     """vmapped over clients in a bucket: E epochs of permutation-order SGD.
     Returns (Kb, d) client deltas w_k - w0."""
+    keys = jax.random.split(key, bucket.num_clients)
+    return _local_sgd_pass_keyed(w0, bucket, lam, cfg, use_kernel, keys)
+
+
+def _local_sgd_pass_keyed(w0, bucket: ClientBucket, lam, cfg: FedAvgConfig,
+                          use_kernel: bool, keys):
+    """:func:`_local_sgd_pass` over explicit per-client keys — the engine's
+    streamed (``client_chunk``) path hands in chunk-sized bucket slices with
+    the matching slice of the bucket's key split."""
 
     h = cfg.stepsize
 
@@ -80,7 +93,6 @@ def _local_sgd_pass(w0, bucket: ClientBucket, lam, cfg: FedAvgConfig,
         wk, _ = jax.lax.scan(epoch, w0, jax.random.split(ck, cfg.local_epochs))
         return wk - w0
 
-    keys = jax.random.split(key, bucket.num_clients)
     return jax.vmap(one_client)(bucket.idx, bucket.val, bucket.y, bucket.n_k, keys)
 
 
@@ -108,13 +120,19 @@ class FedAvg(FederatedSolver):
                 participation=cfg.participation,
                 weighting="nk" if cfg.use_weighted_agg else "uniform",
                 aggregator=cfg.aggregator,
+                client_chunk=cfg.client_chunk,
             ),
         )
 
         def fedavg_pass(w, bi, bucket, kb):
             return self._passes[bi](w, key=kb)
 
-        self._round_fast = self.engine.compile(fedavg_pass)
+        def fedavg_chunk_pass(w, bi, chunk_bucket, keys):
+            return _local_sgd_pass_keyed(w, chunk_bucket, problem.flat.lam,
+                                         cfg, use_kernel, keys)
+
+        self._round_fast = self.engine.compile(fedavg_pass,
+                                               chunk_pass=fedavg_chunk_pass)
         self._round_ref = self.engine.reference(fedavg_pass)
 
     def round(self, state: SolverState, key: jax.Array) -> SolverState:

@@ -51,10 +51,24 @@ class FSVRGConfig:
     # engine aggregator: "dense" (eager jnp reference) | "pallas" (the
     # delta-native fused_aggregate kernel — one HBM pass over the deltas)
     aggregator: str = "dense"
+    # None -> materialize each bucket's (Kb, d) delta stack; an int streams
+    # the client axis in chunks of this size (paper-scale K on bounded
+    # memory; see EngineConfig.client_chunk)
+    client_chunk: Optional[int] = None
 
 
 def _client_pass(w0, full_grad, bucket: ClientBucket, lam, phi, cfg: FSVRGConfig, key):
     """vmapped over clients in a bucket. Returns (Kb, d) client deltas w_k - w0."""
+    keys = jax.random.split(key, bucket.num_clients)
+    return _client_pass_keyed(w0, full_grad, bucket, lam, phi, cfg, keys)
+
+
+def _client_pass_keyed(w0, full_grad, bucket: ClientBucket, lam, phi,
+                       cfg: FSVRGConfig, keys):
+    """:func:`_client_pass` over explicit per-client keys — the engine's
+    streamed (``client_chunk``) path hands in chunk-sized bucket slices with
+    the matching slice of the bucket's key split, so chunked and unchunked
+    clients consume identical randomness."""
 
     def one_client(idx, val, y, n_k, ck):
         d = w0.shape[0]
@@ -97,7 +111,6 @@ def _client_pass(w0, full_grad, bucket: ClientBucket, lam, phi, cfg: FSVRGConfig
         wk, _ = jax.lax.scan(step, w0, samples)
         return wk - w0
 
-    keys = jax.random.split(key, bucket.num_clients)
     return jax.vmap(one_client)(bucket.idx, bucket.val, bucket.y, bucket.n_k, keys)
 
 
@@ -128,6 +141,7 @@ class FSVRG(FederatedSolver):
                 weighting="uniform" if (plain or not cfg.use_weighted_agg) else "nk",
                 server_scaling="diag" if (cfg.use_A and not plain) else "none",
                 aggregator=cfg.aggregator,
+                client_chunk=cfg.client_chunk,
             ),
             a_diag=self.a_diag,
         )
@@ -138,8 +152,13 @@ class FSVRG(FederatedSolver):
         def fsvrg_pass(w, bi, bucket, kb, full_grad):
             return self._passes[bi](w, full_grad, phi=self.phi, key=kb)
 
+        def fsvrg_chunk_pass(w, bi, chunk_bucket, keys, full_grad):
+            return _client_pass_keyed(w, full_grad, chunk_bucket, flat.lam,
+                                      self.phi, cfg, keys)
+
         prelude = lambda w: (self.problem.flat.grad(w),)
-        self._round_fast = self.engine.compile(fsvrg_pass, prelude=prelude)
+        self._round_fast = self.engine.compile(fsvrg_pass, prelude=prelude,
+                                               chunk_pass=fsvrg_chunk_pass)
         self._round_ref = self.engine.reference(fsvrg_pass, prelude=prelude)
 
     def round(self, state: SolverState, key: jax.Array) -> SolverState:

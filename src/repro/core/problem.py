@@ -45,7 +45,11 @@ class LogRegProblem:
         return g + self.lam * w
 
     def error_rate(self, w: jax.Array) -> jax.Array:
-        return jnp.mean((jnp.sign(self.margins(w)) != self.y).astype(jnp.float32))
+        # Deterministic tie-break: a zero margin predicts +1.  (jnp.sign(0)
+        # is 0, which equals neither label — an all-zero iterate would be
+        # "wrong" on every example of both classes.)
+        preds = jnp.where(self.margins(w) >= 0, 1.0, -1.0)
+        return jnp.mean((preds != self.y).astype(jnp.float32))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -95,8 +99,42 @@ def _equal_runs(order, sorted_keys) -> List[List[int]]:
     return [[int(k) for k in order[s:e]] for s, e in zip(starts, ends)]
 
 
-def build_problem(ds, lam: float | None = None) -> FederatedLogReg:
-    """ds: repro.data.synthetic.FederatedDataset."""
+def _split_by_rows(groups: List[List[int]], sizes,
+                   max_bucket_rows: int | None) -> List[List[int]]:
+    """Split any group whose padded row count Kb·m_pad would exceed
+    ``max_bucket_rows`` into consecutive sub-groups under the cap (a single
+    client is never split, so one oversized client keeps its own bucket).
+    Member order — and therefore the bucket-concatenated client order the
+    weights and fold_in offsets depend on — is preserved."""
+    if max_bucket_rows is None:
+        return groups
+    out: List[List[int]] = []
+    for members in groups:
+        cur: List[int] = []
+        cur_pad = 0
+        for k in members:
+            m_pad = max(cur_pad, int(sizes[k]))
+            if cur and (len(cur) + 1) * m_pad > max_bucket_rows:
+                out.append(cur)
+                cur, cur_pad = [k], int(sizes[k])
+            else:
+                cur.append(k)
+                cur_pad = m_pad
+        if cur:
+            out.append(cur)
+    return out
+
+
+def build_problem(ds, lam: float | None = None, *,
+                  max_bucket_rows: int | None = None) -> FederatedLogReg:
+    """ds: repro.data.synthetic.FederatedDataset.
+
+    ``max_bucket_rows`` caps each bucket's padded example-row count
+    Kb·m_pad: oversized ceil(log2 n_k) groups are split into consecutive
+    sub-buckets so peak host memory per bucket stays bounded at paper scale
+    (K = 10,000 puts thousands of clients in one level).  ``None`` keeps the
+    historical one-bucket-per-level grouping bit-for-bit.
+    """
     n = ds.num_examples
     lam = (1.0 / n) if lam is None else lam
     flat = LogRegProblem(
@@ -114,7 +152,9 @@ def build_problem(ds, lam: float | None = None) -> FederatedLogReg:
     # One pass over the sorted order: each bucket is a contiguous run of
     # equal ceil(log2 n_k), so the run boundaries are where the sorted level
     # sequence changes — no per-bucket rescan of the tail.
-    for members in _equal_runs(order, levels[order]):
+    groups = _split_by_rows(_equal_runs(order, levels[order]), sizes,
+                            max_bucket_rows)
+    for members in groups:
         m_pad = int(max(sizes[k] for k in members))
         Kb = len(members)
         nnz = ds.idx.shape[1]

@@ -58,15 +58,66 @@ class FederatedDataset:
 
 
 def _power_law_sizes(rng, K, n_total, n_min, n_max, alpha=1.6):
-    raw = (rng.pareto(alpha, size=K) + 1.0) * n_min
-    raw = np.clip(raw, n_min, n_max)
-    sizes = np.maximum(n_min, (raw / raw.sum() * n_total)).astype(np.int64)
-    sizes = np.clip(sizes, n_min, n_max)
-    return sizes
+    """Power-law client sizes with Σ n_k == clip(n_total, K·n_min, K·n_max).
+
+    The pre-fix version clipped *after* normalizing (raw/raw.sum()·n_total,
+    then clip), so whatever mass the clip removed from the tail was simply
+    lost and the realized Σ n_k drifted far below the configured total.
+    Here the clipped mass is redistributed over the unsaturated clients
+    (iterated, since redistribution can saturate more of them) and the
+    float sizes are integerized largest-remainder style, so the realized
+    total is exact whenever ``K·n_min <= n_total <= K·n_max`` (and the
+    nearest feasible total otherwise).
+    """
+    target = float(np.clip(n_total, K * n_min, K * n_max))
+    raw = np.clip((rng.pareto(alpha, size=K) + 1.0) * n_min, n_min, n_max)
+    sizes = np.clip(raw / raw.sum() * target, n_min, n_max)
+    # Absorb the clipped mass largest-first (deficit) / smallest-first
+    # (surplus) so the power-law spread — the §1.2 "unbalanced" property —
+    # survives the renormalization; a proportional redistribution would
+    # drag the small clients up toward the mean.
+    gap = target - sizes.sum()
+    order = np.argsort(-sizes if gap > 0 else sizes, kind="stable")
+    for k in order:
+        if abs(gap) < 0.5:
+            break
+        if gap > 0:
+            take = min(gap, n_max - sizes[k])
+        else:
+            take = max(gap, n_min - sizes[k])
+        sizes[k] += take
+        gap -= take
+
+    # largest-remainder integerization, respecting the [n_min, n_max] bounds
+    base = np.clip(np.floor(sizes).astype(np.int64), n_min, n_max)
+    rem = int(round(target)) - int(base.sum())
+    frac_order = np.argsort(-(sizes - base), kind="stable")
+    step = 1 if rem > 0 else -1
+    while rem != 0:
+        adjustable = False
+        for k in frac_order:
+            if rem == 0:
+                break
+            if n_min <= base[k] + step <= n_max:
+                base[k] += step
+                rem -= step
+                adjustable = True
+        if not adjustable:      # every client saturated: nearest feasible
+            break
+    return base
 
 
 def generate(cfg, seed: int = 0) -> FederatedDataset:
-    """cfg: repro.configs.gplus_logreg.LogRegConfig (possibly .scaled())."""
+    """cfg: repro.configs.gplus_logreg.LogRegConfig (possibly .scaled()).
+
+    Fully vectorized over clients *and* examples — no per-client Python
+    loop — so the paper-scale K = 10,000 dataset generates in seconds:
+    client vocabularies are drawn with one Gumbel-top-``vocab_size`` pass
+    (exactly weighted sampling without replacement), vocabulary mixtures
+    with one batched gamma draw, and every example's private-vocab features
+    with one offset-searchsorted inverse-CDF lookup against its client's
+    mixture.
+    """
     rng = np.random.default_rng(seed)
     K, d = cfg.num_clients, cfg.num_features
     nnz = min(cfg.nnz_per_example, d - 2)
@@ -74,6 +125,7 @@ def generate(cfg, seed: int = 0) -> FederatedDataset:
     sizes = _power_law_sizes(rng, K, cfg.num_examples,
                              cfg.min_client_examples, cfg.max_client_examples)
     n = int(sizes.sum())
+    client_of = np.repeat(np.arange(K, dtype=np.int32), sizes)
 
     # ground-truth weights: heavy-tailed so rare features carry signal
     w_true = rng.standard_normal(d) * (rng.random(d) < 0.3)
@@ -85,57 +137,64 @@ def generate(cfg, seed: int = 0) -> FederatedDataset:
 
     vocab_size = max(8, int(0.02 * d))  # private vocabulary per client
 
-    all_idx = np.zeros((n, nnz + 2), np.int32)
-    all_val = np.zeros((n, nnz + 2), np.float32)
-    all_y = np.zeros(n, np.float32)
-    client_of = np.zeros(n, np.int32)
+    # client vocabularies: a zipf-weighted random subset per client —
+    # Gumbel-top-k over log popularity is exactly weighted sampling without
+    # replacement (Plackett–Luce).  Drawn in client blocks so the dense
+    # (block, d) score matrix bounds peak memory at O(block·d), not O(K·d)
+    # (at the paper's real d=20k, a full (10k, 20k) f64 draw is ~1.6 GB).
+    log_pop = np.log(global_pop)
+    vocab = np.empty((K, vocab_size), np.int32)                 # (K, V)
+    block = 2048
+    for k0 in range(0, K, block):
+        scores = log_pop[None, :] + rng.gumbel(size=(min(block, K - k0),
+                                                     d - 2))
+        vocab[k0:k0 + block] = np.argpartition(
+            -scores, vocab_size - 1, axis=1)[:, :vocab_size] + 2
+    # Dirichlet(0.3) mixture over each vocabulary (batched gamma-normalize)
+    mix = rng.standard_gamma(0.3, size=(K, vocab_size))
+    mix /= np.maximum(mix.sum(axis=1, keepdims=True), 1e-300)
 
-    start = 0
-    for k in range(K):
-        nk = int(sizes[k])
-        # client vocabulary: a zipf-weighted random subset + global mass
-        own = rng.choice(np.arange(2, d), size=vocab_size, replace=False,
-                         p=global_pop)
-        mix_w = rng.dirichlet(np.full(vocab_size, 0.3))
-        # per-example features: mostly from own vocab, some global
-        n_own = int(0.8 * nnz)
-        own_feats = rng.choice(own, size=(nk, n_own), p=mix_w)
-        glob_feats = rng.choice(np.arange(2, d), size=(nk, nnz - n_own), p=global_pop)
-        feats = np.concatenate([own_feats, glob_feats], axis=1)
+    # per-example features: mostly from own vocab, some global
+    n_own = int(0.8 * nnz)
+    # inverse-CDF sampling of every example's own-vocab features in one
+    # searchsorted: client k's CDF lives on the offset interval [k, k+1)
+    cdf = np.cumsum(mix, axis=1)
+    cdf[:, -1] = 1.0
+    flat_cdf = (cdf + np.arange(K)[:, None]).ravel()
+    u = rng.random((n, n_own))
+    pos = np.searchsorted(flat_cdf, client_of[:, None] + u, side="right")
+    # k + u can round up to k+1 in float64 when u -> 1 at large k; clip the
+    # (measure-~0) overflow back into the client's own vocabulary
+    local = np.clip(pos - client_of[:, None].astype(np.int64) * vocab_size,
+                    0, vocab_size - 1)
+    own_feats = vocab[client_of[:, None], local]                 # (n, n_own)
+    glob_feats = rng.choice(np.arange(2, d), size=(n, nnz - n_own),
+                            p=global_pop)
+    feats = np.concatenate([own_feats, glob_feats], axis=1)
 
-        rows_idx = np.concatenate(
-            [np.zeros((nk, 1), np.int32),                     # bias
-             np.ones((nk, 1), np.int32),                      # unknown-word
-             feats.astype(np.int32)], axis=1)
-        rows_val = np.ones((nk, nnz + 2), np.float32)
-        # dedupe within a row: zero out repeated features (keeps fixed width)
-        srt = np.sort(rows_idx, axis=1)
-        dup = np.concatenate([np.zeros((nk, 1), bool), srt[:, 1:] == srt[:, :-1]], axis=1)
-        order = np.argsort(rows_idx, axis=1)
-        inv = np.argsort(order, axis=1)
-        rows_val *= ~np.take_along_axis(dup, inv, axis=1)
+    all_idx = np.concatenate(
+        [np.zeros((n, 1), np.int32),                             # bias
+         np.ones((n, 1), np.int32),                              # unknown-word
+         feats.astype(np.int32)], axis=1)
+    all_val = np.ones((n, nnz + 2), np.float32)
+    # dedupe within a row: zero out repeated features (keeps fixed width)
+    srt = np.sort(all_idx, axis=1)
+    dup = np.concatenate([np.zeros((n, 1), bool),
+                          srt[:, 1:] == srt[:, :-1]], axis=1)
+    order = np.argsort(all_idx, axis=1)
+    inv = np.argsort(order, axis=1)
+    all_val *= ~np.take_along_axis(dup, inv, axis=1)
 
-        margin = (rows_val * w_true[rows_idx]).sum(axis=1)
-        client_bias = rng.standard_normal() * 1.5              # non-IID label skew
-        p = 1.0 / (1.0 + np.exp(-(0.7 * margin + client_bias)))
-        yk = np.where(rng.random(nk) < p, 1.0, -1.0).astype(np.float32)
-
-        sl = slice(start, start + nk)
-        all_idx[sl], all_val[sl], all_y[sl] = rows_idx, rows_val, yk
-        client_of[sl] = k
-        start += nk
+    margin = (all_val * w_true[all_idx]).sum(axis=1)
+    client_bias = rng.standard_normal(K) * 1.5                   # non-IID skew
+    p = 1.0 / (1.0 + np.exp(-(0.7 * margin + client_bias[client_of])))
+    all_y = np.where(rng.random(n) < p, 1.0, -1.0).astype(np.float32)
 
     # chronological 75/25 split per client (synthetic order = time order)
-    tr_mask = np.zeros(n, bool)
-    start = 0
-    tr_sizes = np.zeros(K, np.int64)
-    for k in range(K):
-        nk = int(sizes[k])
-        cut = max(1, int(0.75 * nk))
-        tr_mask[start : start + cut] = True
-        tr_sizes[k] = cut
-        start += nk
-
+    tr_sizes = np.maximum(1, (0.75 * sizes).astype(np.int64))
+    starts = np.concatenate([[0], np.cumsum(sizes)[:-1]])
+    pos_in_client = np.arange(n) - starts[client_of]
+    tr_mask = pos_in_client < tr_sizes[client_of]
     te_mask = ~tr_mask
     return FederatedDataset(
         idx=all_idx[tr_mask], val=all_val[tr_mask], y=all_y[tr_mask],

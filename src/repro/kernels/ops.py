@@ -12,7 +12,9 @@ from repro.kernels.cocoa_sdca import cocoa_sdca_update as _cocoa_sdca_update
 from repro.kernels.dane_update import dane_update as _dane_update
 from repro.kernels.fedavg_update import fedavg_update as _fedavg_update
 from repro.kernels.fsvrg_update import fsvrg_update as _fsvrg_update
+from repro.kernels.scaled_aggregate import fused_accumulate as _fused_accumulate
 from repro.kernels.scaled_aggregate import fused_aggregate as _fused_aggregate
+from repro.kernels.scaled_aggregate import fused_epilogue as _fused_epilogue
 from repro.kernels.scaled_aggregate import scaled_aggregate as _scaled_aggregate
 from repro.kernels.wkv6 import wkv6 as _wkv6
 
@@ -49,6 +51,16 @@ def scaled_aggregate(w_t, w_ks, weights, a_diag, **kw):
 def fused_aggregate(w_t, deltas, weights, a_diag, scale=1.0, **kw):
     kw.setdefault("interpret", not _on_tpu())
     return _fused_aggregate(w_t, deltas, weights, a_diag, scale, **kw)
+
+
+def fused_accumulate(acc, deltas, weights, **kw):
+    kw.setdefault("interpret", not _on_tpu())
+    return _fused_accumulate(acc, deltas, weights, **kw)
+
+
+def fused_epilogue(w_t, acc, a_diag, scale=1.0, **kw):
+    kw.setdefault("interpret", not _on_tpu())
+    return _fused_epilogue(w_t, acc, a_diag, scale, **kw)
 
 
 def wkv6(r, k, v, w, u, **kw):

@@ -72,3 +72,21 @@ def fused_aggregate_ref(w_t, deltas, weights, a_diag, scale=1.0):
     return (w_t.astype(jnp.float32)
             + a_diag.astype(jnp.float32) * (jnp.asarray(scale, jnp.float32)
                                             * agg))
+
+
+def fused_accumulate_ref(acc, deltas, weights):
+    """acc + Σ_k weights_k δ_k, in f32 — the chunk-accumulating phase of
+    :func:`fused_aggregate_ref` with an identity epilogue.  The streamed
+    round (``EngineConfig.client_chunk``) folds each (chunk, d) delta block
+    through this so the full (K, d) stack is never materialized."""
+    return (acc.astype(jnp.float32)
+            + (deltas.astype(jnp.float32)
+               * weights.astype(jnp.float32)[:, None]).sum(axis=0))
+
+
+def fused_epilogue_ref(w_t, acc, a_diag, scale=1.0):
+    """w^t + A ⊙ (scale · acc), in f32 — the epilogue-only phase applied to
+    a streamed delta-sum accumulator."""
+    return (w_t.astype(jnp.float32)
+            + a_diag.astype(jnp.float32) * (jnp.asarray(scale, jnp.float32)
+                                            * acc.astype(jnp.float32)))

@@ -97,6 +97,25 @@ def fused_aggregate(w_t, deltas, weights, a_diag, scale=1.0, *,
     return out[:d]
 
 
+def fused_accumulate(acc, deltas, weights, **kw):
+    """Chunk-accumulating entry: acc + Σ_k weights_k·δ_k over one client
+    chunk.
+
+    Reuses the kernel's init/acc/epilogue split with an *identity* epilogue
+    (w^t = acc, A = 1, s = 1): the streamed round
+    (``EngineConfig.client_chunk``) feeds each (chunk, d) delta block through
+    this entry, so peak delta memory is O(chunk·d) instead of O(K·d)."""
+    return fused_aggregate(acc, deltas, weights, jnp.ones_like(acc), 1.0, **kw)
+
+
+def fused_epilogue(w_t, acc, a_diag, scale=1.0, **kw):
+    """Epilogue-only entry: w^t + A ⊙ (s · acc), with ``acc`` the streamed
+    weighted delta sum — the kernel's final grid step applied to a single
+    pre-reduced (d,) row."""
+    return fused_aggregate(w_t, acc[None, :], jnp.ones((1,), jnp.float32),
+                           a_diag, scale, **kw)
+
+
 def scaled_aggregate(w_t, w_ks, weights, a_diag, **kw):
     """Iterate-consuming compatibility entry: w^t + A ⊙ Σ_k weights_k (w_k − w^t).
 

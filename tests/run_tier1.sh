@@ -28,4 +28,10 @@ python benchmarks/fig2_convergence.py --algo fedavg --rounds 2 --scale 0.001 \
 python benchmarks/bench_round.py --smoke \
     --json "${BENCH_ROUND_JSON:-BENCH_round.smoke.json}" > /dev/null
 
+# Paper-scale client-axis smoke: one budget-guarded K=10,000 streamed-round
+# config (2 algorithms, 2 rounds, 1 repeat — ~20 s on a CPU box), so the
+# chunked path is exercised at the paper's actual K on every CI run.
+python benchmarks/bench_round.py --smoke --paper-k \
+    --json "${BENCH_PAPERK_JSON:-BENCH_round.paperk.smoke.json}" > /dev/null
+
 exec python -m pytest -x -q "$@"

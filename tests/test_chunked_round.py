@@ -1,0 +1,310 @@
+"""The streamed (client_chunk) round path — the paper-scale client axis.
+
+Contracts:
+
+1. The chunk-accumulating ``fused_aggregate`` entries (``fused_accumulate``
+   + ``fused_epilogue``) compose to exactly the one-shot kernel's oracle.
+2. Engine-level chunked-vs-unchunked parity across the full knob cross —
+   weighting × participation × aggregator × client_chunk ∈ {1, 3, K} — on
+   the ragged real bucket layout, for both stateless and dual-state rounds
+   (including the frozen-state masking).  Chunked rounds consume the same
+   per-client keys as the reference (the split is hoisted into
+   ``RoundEngine.client_keys``), so they agree to float tolerance — the
+   only difference is summation order.
+3. Solver-level parity: a solver built with ``client_chunk`` dispatches the
+   streamed compiled round and matches the unchunked build.
+4. ``build_problem(max_bucket_rows=...)`` splits oversized buckets without
+   changing any client's data, order, or weight.
+5. A full FedAvg round completes at the paper's K = 10,000 (slow-marked).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_paper_k_config
+from repro.core import CoCoAConfig, CoCoAPlus, FSVRG, FSVRGConfig, \
+    build_problem, make_solver
+from repro.core.engine import EngineConfig, RoundEngine
+from repro.core.fedavg import FedAvg, FedAvgConfig
+from repro.data.synthetic import generate
+from repro.kernels import ops, ref
+
+
+# --------------------------------------------------------------------- #
+# 1. the chunk-accumulating kernel entries
+# --------------------------------------------------------------------- #
+
+
+@pytest.mark.parametrize("K,d", [(5, 1000), (1, 999), (13, 257)])
+def test_fused_accumulate_matches_oracle(K, d):
+    ks = jax.random.split(jax.random.PRNGKey(4), 3)
+    acc = jax.random.normal(ks[0], (d,))
+    deltas = jax.random.normal(ks[1], (K, d))
+    wts = jax.nn.softmax(jax.random.normal(ks[2], (K,)))
+    out = ops.fused_accumulate(acc, deltas, wts)
+    expect = ref.fused_accumulate_ref(acc, deltas, wts)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_fused_epilogue_matches_oracle():
+    ks = jax.random.split(jax.random.PRNGKey(5), 3)
+    w = jax.random.normal(ks[0], (777,))
+    acc = jax.random.normal(ks[1], (777,))
+    a = jnp.abs(jax.random.normal(ks[2], (777,))) + 0.5
+    out = ops.fused_epilogue(w, acc, a, 1.7)
+    expect = ref.fused_epilogue_ref(w, acc, a, 1.7)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_chunked_accumulation_composes_to_one_shot_kernel():
+    """Folding the delta stack through fused_accumulate chunk-by-chunk and
+    closing with fused_epilogue == the one-shot fused_aggregate oracle —
+    the init/acc/epilogue split really is a refactor of the same kernel."""
+    ks = jax.random.split(jax.random.PRNGKey(6), 4)
+    K, d, chunk = 12, 515, 5
+    wt = jax.random.normal(ks[0], (d,))
+    deltas = jax.random.normal(ks[1], (K, d))
+    wts = jax.nn.softmax(jax.random.normal(ks[2], (K,)))
+    a = jnp.abs(jax.random.normal(ks[3], (d,))) + 0.5
+    acc = jnp.zeros((d,))
+    for c0 in range(0, K, chunk):
+        acc = ops.fused_accumulate(acc, deltas[c0:c0 + chunk],
+                                   wts[c0:c0 + chunk])
+    out = ops.fused_epilogue(wt, acc, a, 1.3)
+    expect = ref.fused_aggregate_ref(wt, deltas, wts, a, 1.3)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               rtol=1e-5, atol=1e-5)
+
+
+# --------------------------------------------------------------------- #
+# 2. engine-level chunked-vs-unchunked parity
+# --------------------------------------------------------------------- #
+
+
+def _keyed_deltas(w, bucket, keys):
+    """A synthetic per-client-keyed pass: each client's delta is a function
+    of its own key and n_k only, so chunked and unchunked runs must agree
+    up to summation order.  Uses ``uniform`` (pure bit manipulation) rather
+    than ``normal`` — erfinv can differ by an ulp across batch shapes, which
+    would spoil the exact per-client state comparison."""
+    def one(n_k, ck):
+        return ((jax.random.uniform(ck, w.shape) - 0.5)
+                * (1.0 + 0.1 * n_k.astype(jnp.float32)))
+    return jax.vmap(one)(bucket.n_k, keys)
+
+
+def _passes():
+    def client_pass(w, bi, b, kb):
+        return _keyed_deltas(w, b, jax.random.split(kb, b.num_clients))
+
+    def chunk_pass(w, bi, cb, keys):
+        return _keyed_deltas(w, cb, keys)
+
+    return client_pass, chunk_pass
+
+
+@pytest.mark.parametrize("chunk", [1, 3, None])  # None -> K (>= every Kb)
+@pytest.mark.parametrize("weighting", ["nk", "uniform", "sum"])
+@pytest.mark.parametrize("participation", [1.0, 0.5])
+@pytest.mark.parametrize("aggregator", ["dense", "pallas"])
+def test_streamed_round_matches_reference(small_problem, chunk, weighting,
+                                          participation, aggregator):
+    prob = small_problem
+    chunk = prob.num_clients if chunk is None else chunk
+    a_diag = jnp.abs(jax.random.normal(jax.random.PRNGKey(2), (prob.d,))) + 0.5
+    kw = dict(weighting=weighting, participation=participation,
+              server_scaling="diag", aggregator=aggregator)
+    eng_ref = RoundEngine(prob, EngineConfig(**kw), a_diag=a_diag)
+    eng_chk = RoundEngine(prob, EngineConfig(client_chunk=chunk, **kw),
+                          a_diag=a_diag)
+    client_pass, chunk_pass = _passes()
+    w = jax.random.normal(jax.random.PRNGKey(1), (prob.d,)) * 0.1
+    key = jax.random.PRNGKey(3)
+    out_ref = eng_ref.round(w, key, client_pass)
+    out_chk = eng_chk.round_streamed(w, key, chunk_pass)
+    np.testing.assert_allclose(np.asarray(out_chk), np.asarray(out_ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("chunk", [1, 3])
+@pytest.mark.parametrize("participation", [1.0, 0.5])
+def test_streamed_round_with_state_matches_reference(small_problem, chunk,
+                                                     participation):
+    """Dual-state streaming: deltas, state threading, and the frozen-state
+    masking under the round's single Bernoulli draw all match the unchunked
+    reference (state updates are per-client, so they match exactly)."""
+    prob = small_problem
+    kw = dict(weighting="sum", participation=participation)
+    eng_ref = RoundEngine(prob, EngineConfig(**kw))
+    eng_chk = RoundEngine(prob, EngineConfig(client_chunk=chunk, **kw))
+
+    def keyed(w, bucket, state_b, keys):
+        deltas = _keyed_deltas(w, bucket, keys)
+        return deltas, state_b + deltas[:, :3]
+
+    def dual_pass(w, bi, b, s_b, kb):
+        return keyed(w, b, s_b, jax.random.split(kb, b.num_clients))
+
+    def dual_chunk_pass(w, bi, cb, s_c, keys):
+        return keyed(w, cb, s_c, keys)
+
+    states = [jnp.zeros((b.num_clients, 3)) for b in prob.buckets]
+    w = jnp.zeros(prob.d)
+    key = jax.random.PRNGKey(5)
+    w_ref, st_ref = eng_ref.round_with_state(w, states, key, dual_pass)
+    w_chk, st_chk = eng_chk.round_streamed_with_state(w, states, key,
+                                                      dual_chunk_pass)
+    np.testing.assert_allclose(np.asarray(w_chk), np.asarray(w_ref),
+                               rtol=1e-5, atol=1e-5)
+    for s_c, s_r in zip(st_chk, st_ref):
+        np.testing.assert_array_equal(np.asarray(s_c), np.asarray(s_r))
+
+
+def test_streamed_round_requires_chunk_and_pass(small_problem):
+    with pytest.raises(ValueError):
+        EngineConfig(client_chunk=0)
+    eng = RoundEngine(small_problem, EngineConfig())
+    with pytest.raises(ValueError):
+        eng.round_streamed(jnp.zeros(small_problem.d), jax.random.PRNGKey(0),
+                           lambda w, bi, cb, ks: None)
+    eng_chk = RoundEngine(small_problem, EngineConfig(client_chunk=2))
+    with pytest.raises(ValueError):
+        eng_chk.compile(lambda w, bi, b, kb: None)  # no chunk_pass supplied
+
+
+# --------------------------------------------------------------------- #
+# 3. solver-level parity: client_chunk plumbs through the compiled round
+# --------------------------------------------------------------------- #
+
+
+@pytest.mark.parametrize("chunk", [1, 3, None])
+@pytest.mark.parametrize("participation", [1.0, 0.5])
+def test_fedavg_chunked_matches_unchunked(small_problem, chunk,
+                                          participation):
+    prob = small_problem
+    chunk = prob.num_clients if chunk is None else chunk
+    key = jax.random.PRNGKey(0)
+    a = FedAvg(prob, FedAvgConfig(stepsize=0.1, participation=participation))
+    b = FedAvg(prob, FedAvgConfig(stepsize=0.1, participation=participation,
+                                  client_chunk=chunk))
+    sa = a.round(a.init(), key)
+    sb = b.round(b.init(), key)
+    np.testing.assert_allclose(np.asarray(sb.w), np.asarray(sa.w),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_fsvrg_chunked_fused_matches_unchunked(small_problem):
+    """FSVRG with diag server scaling through the chunked *fused* path
+    (fused_accumulate per chunk + fused_epilogue) == the dense unchunked
+    build — over 2 rounds, so the streamed iterate feeds the next round."""
+    prob = small_problem
+    a = FSVRG(prob, FSVRGConfig(stepsize=1.0))
+    b = FSVRG(prob, FSVRGConfig(stepsize=1.0, client_chunk=4,
+                                aggregator="pallas"))
+    sa, sb = a.init(), b.init()
+    base = jax.random.PRNGKey(1)
+    for r in range(2):
+        kr = jax.random.fold_in(base, r)
+        sa, sb = a.round(sa, kr), b.round(sb, kr)
+    np.testing.assert_allclose(np.asarray(sb.w), np.asarray(sa.w),
+                               rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.parametrize("participation", [1.0, 0.5])
+def test_cocoa_chunked_matches_unchunked(tiny_problem, participation):
+    """Dual-state solver: iterate AND dual blocks agree (blocks exactly —
+    per-client state never crosses the chunked reduction)."""
+    prob = tiny_problem
+    a = CoCoAPlus(prob, cfg=CoCoAConfig(participation=participation))
+    b = CoCoAPlus(prob, cfg=CoCoAConfig(participation=participation,
+                                        client_chunk=3))
+    key = jax.random.PRNGKey(2)
+    sa = a.round(a.init(), key)
+    sb = b.round(b.init(), key)
+    np.testing.assert_allclose(np.asarray(sb.w), np.asarray(sa.w),
+                               rtol=1e-5, atol=1e-7)
+    for x, y in zip(sa.aux, sb.aux):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_registry_plumbs_client_chunk(small_problem):
+    for algo, kw in (("gd", {}), ("dane", {}),
+                     ("dane", {"local_solver": "svrg", "mu": 0.0})):
+        a = make_solver(algo, small_problem, **kw)
+        b = make_solver(algo, small_problem, client_chunk=5, **kw)
+        key = jax.random.PRNGKey(3)
+        sa = a.round(a.init(), key)
+        sb = b.round(b.init(), key)
+        np.testing.assert_allclose(np.asarray(sb.w), np.asarray(sa.w),
+                                   rtol=1e-5, atol=1e-6)
+
+
+# --------------------------------------------------------------------- #
+# 4. max_bucket_rows grouping equivalence
+# --------------------------------------------------------------------- #
+
+
+def _client_rows(prob):
+    """Per-client (n_k, idx, val, y) in bucket-concatenated order."""
+    out = []
+    for b in prob.buckets:
+        for j in range(b.num_clients):
+            nk = int(b.n_k[j])
+            out.append((nk, np.asarray(b.idx[j, :nk]),
+                        np.asarray(b.val[j, :nk]), np.asarray(b.y[j, :nk])))
+    return out
+
+
+def test_max_bucket_rows_preserves_clients(small_dataset):
+    ds = small_dataset
+    base = build_problem(ds)
+    cap = 6 * int(ds.client_sizes.max())     # force several splits
+    capped = build_problem(ds, max_bucket_rows=cap)
+    assert len(capped.buckets) > len(base.buckets)
+    for b in capped.buckets:
+        assert b.num_clients == 1 or b.num_clients * b.m_pad <= cap
+    rows_base, rows_capped = _client_rows(base), _client_rows(capped)
+    assert len(rows_base) == len(rows_capped) == ds.num_clients
+    for (n0, i0, v0, y0), (n1, i1, v1, y1) in zip(rows_base, rows_capped):
+        assert n0 == n1
+        np.testing.assert_array_equal(i0, i1)
+        np.testing.assert_array_equal(v0, v1)
+        np.testing.assert_array_equal(y0, y1)
+    np.testing.assert_array_equal(np.asarray(base.client_weights),
+                                  np.asarray(capped.client_weights))
+
+
+def test_max_bucket_rows_none_is_identity(small_dataset):
+    base = build_problem(small_dataset)
+    same = build_problem(small_dataset, max_bucket_rows=None)
+    assert len(base.buckets) == len(same.buckets)
+    for a, b in zip(base.buckets, same.buckets):
+        np.testing.assert_array_equal(np.asarray(a.n_k), np.asarray(b.n_k))
+
+
+# --------------------------------------------------------------------- #
+# 5. the paper's K = 10,000
+# --------------------------------------------------------------------- #
+
+
+@pytest.mark.slow
+def test_paper_scale_k10000_fedavg_round():
+    """One full FedAvg round at the §4 client count, streamed: K = 10,000,
+    bounded per-bucket host memory, O(client_chunk·d) peak delta memory —
+    and the round makes progress."""
+    cfg = get_paper_k_config()
+    assert cfg.num_clients == 10_000
+    ds = generate(cfg, seed=0)
+    assert ds.num_clients == 10_000
+    prob = build_problem(ds, max_bucket_rows=20_000)
+    assert all(b.num_clients == 1 or b.num_clients * b.m_pad <= 20_000
+               for b in prob.buckets)
+    solver = make_solver("fedavg", prob, client_chunk=256)
+    state = solver.init()
+    f0 = float(prob.flat.loss(state.w))
+    state = solver.round(state, jax.random.PRNGKey(0))
+    f1 = float(prob.flat.loss(state.w))
+    assert np.isfinite(f1) and f1 < f0, (f1, f0)

@@ -47,7 +47,14 @@ def _prerefactor_fsvrg_round(problem, w, key, cfg, phi, a_diag, passes,
 
 @pytest.mark.parametrize("participation", [1.0, 0.5])
 def test_fsvrg_on_engine_matches_prerefactor_trajectory(tiny_problem, participation):
-    """3 rounds of engine-backed FSVRG == the seed round loop, bit-for-bit."""
+    """3 rounds of engine-backed FSVRG == the seed round loop, bit-for-bit.
+
+    The engine's *eager reference* round is the bit-exact pin surface (the
+    refactor must not change a single ulp of the round template); the
+    compiled round that ``solver.round`` dispatches is checked against the
+    same oracle at tight tolerance — whole-round jit may associate the
+    multi-bucket aggregation differently (see test_fused_round.py).
+    """
     prob = tiny_problem
     cfg = FSVRGConfig(stepsize=1.0, participation=participation)
     solver = FSVRG(prob, cfg)
@@ -60,14 +67,18 @@ def test_fsvrg_on_engine_matches_prerefactor_trajectory(tiny_problem, participat
     apply_fn = jax.jit(lambda w, agg, scale: w + scale * agg)
 
     state = solver.init()
+    w_eager = jnp.zeros(prob.d)
     w_ref = jnp.zeros(prob.d)
     key = jax.random.PRNGKey(0)
     for r in range(3):
         kr = jax.random.fold_in(key, r)
         state = solver.round(state, kr)
+        w_eager = solver._round_ref(w_eager, kr)
         w_ref = _prerefactor_fsvrg_round(prob, w_ref, kr, cfg, solver.phi,
                                          solver.a_diag, passes, apply_fn)
-        np.testing.assert_array_equal(np.asarray(state.w), np.asarray(w_ref))
+        np.testing.assert_array_equal(np.asarray(w_eager), np.asarray(w_ref))
+        np.testing.assert_allclose(np.asarray(state.w), np.asarray(w_ref),
+                                   rtol=1e-5, atol=1e-8)
 
 
 def test_partial_participation_reweighting_unbiased(small_problem):

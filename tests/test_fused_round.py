@@ -9,10 +9,14 @@ Four contracts from the round-hot-path fusion:
 3. The round's participation masks are drawn once
    (``RoundEngine.participation_masks``) and are bit-identical to the
    historical per-consumer re-derivation.
-4. The compiled round (``RoundEngine.compile`` / ``compile_with_state``) is
-   **bit-for-bit** the reference ``round`` / ``round_with_state`` — pinned
-   through the FSVRG and CoCoA+ solvers, whose ``round`` now dispatches the
-   compiled closure.
+4. The compiled round (``RoundEngine.compile`` / ``compile_with_state``)
+   pins against the reference ``round`` / ``round_with_state`` — through
+   the FSVRG and CoCoA+ solvers, whose ``round`` dispatches the compiled
+   closure.  The whole-round jit is free to re-associate the multi-bucket
+   ``agg + Σ`` chain (it is bit-identical on single-bucket problems, where
+   there is nothing to re-associate), so the iterate pin is a tight float
+   tolerance; everything per-client — deltas, dual-state blocks, the
+   participation draw — stays exact.
 """
 import jax
 import jax.numpy as jnp
@@ -159,8 +163,10 @@ def test_aggregate_with_explicit_masks_is_bit_identical(small_problem):
 @pytest.mark.parametrize("participation", [1.0, 0.5])
 def test_compiled_round_pins_reference_fsvrg(tiny_problem, participation):
     """FSVRG.round (the compiled closure) == the eager reference
-    RoundEngine.round over 3 rounds, bit for bit — the whole-round jit must
-    not change a single ulp (the full-gradient prelude stays eager)."""
+    RoundEngine.round over 3 rounds (the full-gradient prelude stays
+    eager).  Tight tolerance on the iterate: the whole-round jit may
+    re-associate the cross-bucket aggregation sum (single-bucket problems
+    pin bit-for-bit; this fixture has several buckets)."""
     prob = tiny_problem
     solver = FSVRG(prob, FSVRGConfig(stepsize=1.0,
                                      participation=participation))
@@ -171,14 +177,18 @@ def test_compiled_round_pins_reference_fsvrg(tiny_problem, participation):
         kr = jax.random.fold_in(base, r)
         state = solver.round(state, kr)
         w_ref = solver._round_ref(w_ref, kr)
-        np.testing.assert_array_equal(np.asarray(state.w), np.asarray(w_ref))
+        np.testing.assert_allclose(np.asarray(state.w), np.asarray(w_ref),
+                                   rtol=1e-5, atol=1e-8)
 
 
 @pytest.mark.parametrize("participation", [1.0, 0.5])
 def test_compiled_round_pins_reference_cocoa(tiny_problem, participation):
     """CoCoA+.round (compiled, dual-state) == the eager
-    RoundEngine.round_with_state reference, bit for bit — iterate AND dual
-    blocks, with the frozen-state masking under partial participation."""
+    RoundEngine.round_with_state reference — iterate at tight tolerance
+    (cross-bucket sum association, as for FSVRG), dual blocks **bit for
+    bit**: per-client state never crosses the aggregation, so the jit has
+    nothing to re-associate — including the frozen-state masking under
+    partial participation."""
     prob = tiny_problem
     solver = CoCoAPlus(prob, cfg=CoCoAConfig(participation=participation))
     state = solver.init()
@@ -188,7 +198,8 @@ def test_compiled_round_pins_reference_cocoa(tiny_problem, participation):
         kr = jax.random.fold_in(base, r)
         state = solver.round(state, kr)
         w_ref, alphas_ref = solver._round_ref(w_ref, alphas_ref, kr)
-        np.testing.assert_array_equal(np.asarray(state.w), np.asarray(w_ref))
+        np.testing.assert_allclose(np.asarray(state.w), np.asarray(w_ref),
+                                   rtol=1e-5, atol=1e-8)
         for a_c, a_r in zip(state.aux, alphas_ref):
             np.testing.assert_array_equal(np.asarray(a_c), np.asarray(a_r))
 

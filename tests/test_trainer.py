@@ -1,12 +1,17 @@
 """FederatedSolver protocol, registry, and Trainer driver.
 
-Pins ``Trainer.fit`` bit-for-bit against the pre-redesign hand-rolled fig2
-round loops (kept verbatim in tests/_oracles.py) for FSVRG, FedAvg, DANE,
-and CoCoA+ — the loop structure, key schedule, state threading, and
-history capture must all survive the API redesign exactly.  Also covers
-the registry round-trip (every registered name constructs, runs 2 rounds,
-and yields a valid SolverState pytree), the jit+lax.scan fast path, the
-checkpoint save/resume cycle, and the retrospective sweep protocol.
+Pins ``Trainer.fit`` against the pre-redesign hand-rolled fig2 round loops
+(kept verbatim in tests/_oracles.py) for FSVRG, FedAvg, DANE, and CoCoA+ —
+the loop structure, key schedule, state threading, and history capture
+must all survive the API redesign.  The oracles drive the *eager*
+reference round while ``Trainer`` drives each solver's compiled closure,
+so the iterate/history pins are a tight float tolerance (the whole-round
+jit may re-associate the cross-bucket aggregation sum — see
+test_fused_round.py); per-client dual blocks stay bit-for-bit.  Also
+covers the registry round-trip (every registered name constructs, runs 2
+rounds, and yields a valid SolverState pytree), the jit+lax.scan fast
+path, the checkpoint save/resume cycle, and the retrospective sweep
+protocol.
 """
 import jax
 import jax.numpy as jnp
@@ -33,8 +38,17 @@ def _eval_floats(prob):
 
 
 # --------------------------------------------------------------------- #
-# Trainer vs the pre-redesign fig2 loops, bit-for-bit
+# Trainer vs the pre-redesign fig2 loops
 # --------------------------------------------------------------------- #
+
+
+def _assert_history_close(hist, hist_ref):
+    assert len(hist) == len(hist_ref)
+    for rec, rec_ref in zip(hist, hist_ref):
+        assert rec.keys() == rec_ref.keys()
+        for k in rec:
+            np.testing.assert_allclose(rec[k], rec_ref[k],
+                                       rtol=1e-5, atol=1e-8)
 
 
 def test_trainer_pins_fig2_fsvrg_loop(tiny_problem):
@@ -44,8 +58,9 @@ def test_trainer_pins_fig2_fsvrg_loop(tiny_problem):
                                                eval_fn=_eval_floats(prob))
     res = Trainer(make_solver("fsvrg", prob, stepsize=1.0), rounds=3, seed=1,
                   eval_fn=ev).fit()
-    np.testing.assert_array_equal(np.asarray(res.w), np.asarray(w_ref))
-    assert res.history == hist_ref
+    np.testing.assert_allclose(np.asarray(res.w), np.asarray(w_ref),
+                               rtol=1e-5, atol=1e-8)
+    _assert_history_close(res.history, hist_ref)
 
 
 def test_trainer_pins_fig2_fedavg_loop(tiny_problem):
@@ -55,8 +70,9 @@ def test_trainer_pins_fig2_fedavg_loop(tiny_problem):
                                                 eval_fn=_eval_floats(prob))
     res = Trainer(make_solver("fedavg", prob, stepsize=0.5, local_epochs=2),
                   rounds=3, seed=2, eval_fn=ev).fit()
-    np.testing.assert_array_equal(np.asarray(res.w), np.asarray(w_ref))
-    assert res.history == hist_ref
+    np.testing.assert_allclose(np.asarray(res.w), np.asarray(w_ref),
+                               rtol=1e-5, atol=1e-8)
+    _assert_history_close(res.history, hist_ref)
 
 
 def test_trainer_pins_fig2_dane_loop(tiny_problem):
@@ -67,21 +83,24 @@ def test_trainer_pins_fig2_dane_loop(tiny_problem):
                                               eval_fn=_eval_floats(prob), **kw)
     res = Trainer(make_solver("dane", prob, **kw), rounds=3, seed=4,
                   eval_fn=ev).fit()
-    np.testing.assert_array_equal(np.asarray(res.w), np.asarray(w_ref))
-    assert res.history == hist_ref
+    np.testing.assert_allclose(np.asarray(res.w), np.asarray(w_ref),
+                               rtol=1e-5, atol=1e-8)
+    _assert_history_close(res.history, hist_ref)
 
 
 def test_trainer_pins_fig2_cocoa_loop(tiny_problem):
     """Iterates AND final dual blocks: the functional SolverState threading
-    must reproduce the pre-redesign mutable-class trajectory exactly."""
+    must reproduce the pre-redesign mutable-class trajectory (dual blocks
+    exactly — per-client state never crosses the aggregation sum)."""
     prob = tiny_problem
     ev = _eval(prob)
     w_ref, alphas_ref, hist_ref = _oracles.fig2_cocoa_loop(
         prob, 3, seed=0, eval_fn=_eval_floats(prob))
     res = Trainer(make_solver("cocoa", prob), rounds=3, seed=0,
                   eval_fn=ev).fit()
-    np.testing.assert_array_equal(np.asarray(res.w), np.asarray(w_ref))
-    assert res.history == hist_ref
+    np.testing.assert_allclose(np.asarray(res.w), np.asarray(w_ref),
+                               rtol=1e-5, atol=1e-8)
+    _assert_history_close(res.history, hist_ref)
     assert len(res.state.aux) == len(alphas_ref)
     for a_eng, a_ref in zip(res.state.aux, alphas_ref):
         np.testing.assert_array_equal(np.asarray(a_eng), np.asarray(a_ref))
