@@ -31,13 +31,23 @@ experiment's K = 10,000 clients (d and n_k shrunk so it fits CPU CI,
                                  delta-native ``fused_aggregate`` chunk
                                  entry.
 
+``--participation-sweep`` appends the partial-participation family at the
+same paper-scale config: for each participation p ∈ {1.0, 0.3, 0.1} it
+times the **masked** streamed round (every client's pass runs; the
+Bernoulli draw zeroes non-participants' weights) against the **cohort**
+round (``EngineConfig.cohort``: only the sampled clients are gathered and
+computed, capacity from ``cohort_capacity``).  At p=1.0 the cohort knob is
+a compile-time no-op, so that row is the ≈1× sanity anchor; at the paper's
+~10% participation the cohort path should win by roughly 1/p.
+
 Writes ``BENCH_round.json`` at the repo root — ≥ 2 problem scales × ≥ 3
 algorithms, median/mean/min round latency per path and the
 dense-vs-fused speedups, so every future PR has a trajectory to be judged
 against.  ``--smoke`` is the CI guard: a tiny config that exercises every
 path end-to-end (run by ``tests/run_tier1.sh`` with a scratch ``--json`` so
 the committed trajectory file is not clobbered; ``--smoke --paper-k`` is the
-budget-guarded large-K variant, skipping the scale sweep).
+budget-guarded large-K variant, and ``--smoke --participation-sweep`` the
+budget-guarded cohort variant — each skips the scale sweep).
 """
 from __future__ import annotations
 
@@ -51,7 +61,7 @@ import time
 import jax
 
 from repro.configs import get_logreg_config, get_paper_k_config
-from repro.core import build_problem, make_solver
+from repro.core import build_problem, cohort_capacity, make_solver
 from repro.data.synthetic import generate
 
 REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
@@ -69,6 +79,12 @@ PAPER_K_ALGOS = ("gd", "fedavg", "fsvrg")
 PAPER_K_PATHS = ("eager_dense", "compiled_chunked_dense",
                  "compiled_chunked_fused")
 PAPER_K_BUCKET_ROWS = 20_000
+
+#: the participation-sweep family: masked streamed round vs cohort round at
+#: the paper-scale config, per participation level
+SWEEP_PARTICIPATIONS = (1.0, 0.3, 0.1)
+SWEEP_PATHS = ("masked_chunked", "cohort_chunked")
+SWEEP_ALGO = "fedavg"
 
 
 def _round_closures(algo: str, prob):
@@ -93,6 +109,26 @@ def _paper_k_closures(algo: str, prob, chunk: int):
         "compiled_chunked_dense": chunked._round_fast,
         "compiled_chunked_fused": fused._round_fast,
     }
+
+
+def _sweep_closures(algo: str, prob, chunk: int, participation: float):
+    """(masked_chunked, cohort_chunked) compiled round closures at one
+    participation level, plus the cohort capacity used.  Both paths stream
+    with the same client_chunk; the only difference is whether the
+    non-participants' passes run at all."""
+    masked = make_solver(algo, prob, client_chunk=chunk,
+                         participation=participation)
+    cap = cohort_capacity(participation,
+                          max(b.num_clients for b in prob.buckets)) \
+        if participation < 1.0 else None
+    kw = dict(client_chunk=chunk, participation=participation)
+    if cap is not None:
+        kw["cohort"] = cap
+    cohort = make_solver(algo, prob, **kw)
+    return {
+        "masked_chunked": masked._round_fast,
+        "cohort_chunked": cohort._round_fast,
+    }, cap
 
 
 def _time_rounds(closures, w0, rounds: int, repeats: int):
@@ -152,21 +188,30 @@ def main(argv=None):
                          "reduced budget")
     ap.add_argument("--paper-chunk", type=int, default=512,
                     help="client_chunk for the --paper-k streamed rounds")
+    ap.add_argument("--participation-sweep", action="store_true",
+                    help="append the masked-vs-cohort family at the paper-k "
+                         "config over --sweep-participations; with --smoke, "
+                         "run ONLY it at reduced budget")
+    ap.add_argument("--sweep-participations",
+                    default=",".join(str(p) for p in SWEEP_PARTICIPATIONS))
     args = ap.parse_args(argv)
 
     if args.smoke:
-        scales = [] if args.paper_k else [0.001]
+        scales = [] if (args.paper_k or args.participation_sweep) else [0.001]
         algos = ["gd", "fedavg"]
         rounds, repeats = 2, 1
         pk_algos = ["gd", "fedavg"]
+        sweep_ps = [0.1]     # budget guard: the headline level only
     else:
         scales = [float(s) for s in args.scales.split(",") if s]
         algos = [a.strip() for a in args.algos.split(",")]
         rounds, repeats = args.rounds, args.repeats
         pk_algos = list(PAPER_K_ALGOS)
+        sweep_ps = [float(p) for p in args.sweep_participations.split(",")
+                    if p]
 
     results = {
-        "schema": 2,
+        "schema": 3,
         "smoke": bool(args.smoke),
         "backend": jax.default_backend(),
         "jax_version": jax.__version__,
@@ -245,10 +290,14 @@ def main(argv=None):
               "(beats eager: {fused_beats_eager})"
               .format(**results["largest"]))
 
-    if args.paper_k:
+    pk_prob = None
+    if args.paper_k or args.participation_sweep:
         pk_cfg = get_paper_k_config()
         ds = generate(pk_cfg, seed=args.seed)
-        prob = build_problem(ds, max_bucket_rows=PAPER_K_BUCKET_ROWS)
+        pk_prob = build_problem(ds, max_bucket_rows=PAPER_K_BUCKET_ROWS)
+
+    if args.paper_k:
+        prob = pk_prob
         entry = {
             "scale": "paper-k",
             "clients": int(ds.num_clients),
@@ -290,6 +339,56 @@ def main(argv=None):
               "chunked-vs-eager "
               "{per_algo_paired_speedup_chunked_vs_eager}"
               .format(**results["paper_k"]))
+
+    if args.participation_sweep:
+        prob = pk_prob
+        entry = {
+            "scale": "paper-k-participation-sweep",
+            "clients": int(ds.num_clients),
+            "features": int(ds.num_features),
+            "buckets": len(prob.buckets),
+            "client_chunk": args.paper_chunk,
+            "max_bucket_rows": PAPER_K_BUCKET_ROWS,
+            "algo": SWEEP_ALGO,
+            "paths": list(SWEEP_PATHS),
+            "participations": {},
+        }
+        for p in sweep_ps:
+            closures, cap = _sweep_closures(SWEEP_ALGO, prob,
+                                            args.paper_chunk, p)
+            w0 = jax.numpy.zeros(prob.d)
+            all_samples = _time_rounds(closures, w0, rounds, repeats)
+            rec = {"cohort_capacity": cap}
+            for path in SWEEP_PATHS:
+                rec[path] = _stats(all_samples[path])
+                print(f"sweep-p={p},{SWEEP_ALGO},{path},"
+                      f"{rec[path]['median_s']:.5f},"
+                      f"{rec[path]['mean_s']:.5f},{rec[path]['min_s']:.5f}")
+            rec["paired_speedup_cohort_vs_masked"] = statistics.median(
+                m / c for m, c in zip(all_samples["masked_chunked"],
+                                      all_samples["cohort_chunked"]))
+            entry["participations"][str(p)] = rec
+        results["configs"].append(entry)
+        summary = {
+            "algo": SWEEP_ALGO,
+            "clients": entry["clients"],
+            "client_chunk": entry["client_chunk"],
+            "per_participation_paired_speedup_cohort_vs_masked": {
+                p_str: rec["paired_speedup_cohort_vs_masked"]
+                for p_str, rec in entry["participations"].items()},
+        }
+        lowest = str(min(sweep_ps))
+        if lowest in entry["participations"]:
+            s_low = entry["participations"][lowest][
+                "paired_speedup_cohort_vs_masked"]
+            summary["lowest_participation"] = float(lowest)
+            summary["speedup_cohort_vs_masked_at_lowest"] = s_low
+            summary["cohort_beats_masked_2x_at_lowest"] = s_low >= 2.0
+        results["participation_sweep"] = summary
+        print("# participation sweep ({algo}, K={clients}): paired "
+              "cohort-vs-masked "
+              "{per_participation_paired_speedup_cohort_vs_masked}"
+              .format(**summary))
 
     with open(args.json, "w") as f:
         json.dump(results, f, indent=1)

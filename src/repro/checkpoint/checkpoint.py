@@ -8,12 +8,21 @@ stored via a uint16 view (npz has no bfloat16) and restored exactly.
 Sharded arrays are gathered to host before saving (fine at the scale this
 container runs; a production TPU deployment would swap in per-shard files —
 the manifest format already records per-leaf dtype/shape to allow that).
+
+Manifest format v2 stores each leaf's key path *structurally* — a list of
+``[kind, key]`` pairs where kind is ``"d"`` (dict key), ``"s"`` (sequence
+index), ``"a"`` (attribute name), or ``"i"`` (flattened index).  The v1
+format stored only ``jax.tree_util.keystr`` strings, which cannot tell a
+list index ``[0]`` from an int dict key ``[0]`` (so restore silently
+converted int-keyed dicts to lists) and indexed into an empty key list for
+a bare-array pytree (root leaf, keystr ``""`` → IndexError).  v1
+checkpoints still restore through the legacy string parser.
 """
 from __future__ import annotations
 
 import json
 import os
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -34,10 +43,29 @@ def _from_numpy(arr: np.ndarray, dtype: str):
     return jnp.asarray(arr, dtype=dtype)
 
 
+def _encode_key_path(kp) -> List[List[Any]]:
+    """A leaf's key path as JSON-safe ``[kind, key]`` pairs — the
+    disambiguation the keystr strings lose (list index vs int dict key)."""
+    out: List[List[Any]] = []
+    for entry in kp:
+        if isinstance(entry, jax.tree_util.DictKey):
+            out.append(["d", entry.key])
+        elif isinstance(entry, jax.tree_util.SequenceKey):
+            out.append(["s", entry.idx])
+        elif isinstance(entry, jax.tree_util.GetAttrKey):
+            out.append(["a", entry.name])
+        elif isinstance(entry, jax.tree_util.FlattenedIndexKey):
+            out.append(["i", entry.key])
+        else:  # pragma: no cover - future key types degrade to their repr
+            out.append(["d", str(entry)])
+    return out
+
+
 def save(path: str, tree: Any, *, step: int = 0,
          metadata: Optional[Dict] = None) -> None:
     os.makedirs(path, exist_ok=True)
     leaves, treedef = jax.tree.flatten(tree)
+    flat_with_path = jax.tree_util.tree_flatten_with_path(tree)[0]
     payload = {}
     index = []
     for i, leaf in enumerate(leaves):
@@ -45,23 +73,68 @@ def save(path: str, tree: Any, *, step: int = 0,
         payload[f"leaf_{i}"] = arr
         index.append({"dtype": dtype, "shape": list(arr.shape)})
     np.savez(os.path.join(path, "arrays.npz"), **payload)
+    # structure for reconstruction: keystrs stay for human inspection (and
+    # v1 readers); key_paths carry the [kind, key] pairs restore uses
+    paths = [jax.tree_util.keystr(kp) for kp, _ in flat_with_path]
+    key_paths = [_encode_key_path(kp) for kp, _ in flat_with_path]
     manifest = {
         "treedef": str(treedef),
         "step": step,
         "metadata": metadata or {},
         "leaves": index,
-        "format_version": 1,
+        "format_version": 2,
+        "paths": paths,
+        "key_paths": key_paths,
     }
-    # structure for reconstruction: store the pytree as nested keys
-    paths = [jax.tree_util.keystr(kp)
-             for kp, _ in jax.tree_util.tree_flatten_with_path(tree)[0]]
-    manifest["paths"] = paths
     with open(os.path.join(path, "manifest.json"), "w") as f:
         json.dump(manifest, f)
     # treedef is reconstructed from an example tree: persist via pickle-free
-    # nested-dict rebuild (paths are keystrs like "['a']['b']")
+    # nested-dict rebuild
     with open(os.path.join(path, "treedef.json"), "w") as f:
-        json.dump({"paths": paths}, f)
+        json.dump({"paths": paths, "key_paths": key_paths}, f)
+
+
+# --------------------------------------------------------------------- #
+# v2 reconstruction: kind-tagged paths -> nested dicts / lists
+# --------------------------------------------------------------------- #
+
+
+def _build_from_key_paths(key_paths, leaves):
+    if len(leaves) == 1 and not key_paths[0]:
+        # bare-array pytree: the root IS the leaf (v1 crashed here)
+        return leaves[0]
+    root: Dict = {}
+    for kp, leaf in zip(key_paths, leaves):
+        node = root
+        for kind, key in kp[:-1]:
+            node = node.setdefault((kind, key), {})
+        kind, key = kp[-1]
+        node[(kind, key)] = leaf
+    return _finish(root)
+
+
+def _finish(node):
+    """Collapse the (kind, key)-keyed build dicts into their containers:
+    "s"/"i" kinds become lists (sorted by index), "d"/"a" become dicts —
+    an int-keyed dict stays a dict because its kind says so."""
+    if not isinstance(node, dict):
+        return node
+    kinds = {kind for kind, _ in node}
+    if kinds <= {"s", "i"}:
+        idxs = sorted(key for _, key in node)
+        if idxs != list(range(len(idxs))):  # pragma: no cover - corrupt file
+            raise ValueError(f"non-contiguous sequence indices: {idxs}")
+        return [_finish(node[(kind, i)]) for i in idxs
+                for kind in ("s", "i") if (kind, i) in node]
+    if kinds & {"s", "i"}:  # pragma: no cover - corrupt file
+        raise ValueError("mixed sequence/dict keys at one tree node")
+    return {key: _finish(v) for (_, key), v in node.items()}
+
+
+# --------------------------------------------------------------------- #
+# v1 fallback: parse keystr strings (list index vs int dict key is
+# ambiguous there — int-keyed dicts come back as lists, as they always did)
+# --------------------------------------------------------------------- #
 
 
 def _set_path(root: Dict, keystr_path: str, value) -> None:
@@ -74,18 +147,6 @@ def _set_path(root: Dict, keystr_path: str, value) -> None:
     node[flat_keys[-1]] = value
 
 
-def restore(path: str) -> Tuple[Any, Dict]:
-    with open(os.path.join(path, "manifest.json")) as f:
-        manifest = json.load(f)
-    data = np.load(os.path.join(path, "arrays.npz"))
-    root: Dict = {}
-    for i, (meta, kp) in enumerate(zip(manifest["leaves"], manifest["paths"])):
-        leaf = _from_numpy(data[f"leaf_{i}"], meta["dtype"])
-        _set_path(root, kp, leaf)
-    root = _listify(root)
-    return root, {"step": manifest["step"], "metadata": manifest["metadata"]}
-
-
 def _listify(node):
     """Convert int-keyed dicts (from list/tuple indices) back to lists."""
     if isinstance(node, dict):
@@ -93,3 +154,22 @@ def _listify(node):
             return [_listify(node[i]) for i in sorted(node)]
         return {k: _listify(v) for k, v in node.items()}
     return node
+
+
+def restore(path: str) -> Tuple[Any, Dict]:
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    data = np.load(os.path.join(path, "arrays.npz"))
+    leaves = [_from_numpy(data[f"leaf_{i}"], meta["dtype"])
+              for i, meta in enumerate(manifest["leaves"])]
+    info = {"step": manifest["step"], "metadata": manifest["metadata"]}
+    if manifest.get("key_paths") is not None:
+        return _build_from_key_paths(manifest["key_paths"], leaves), info
+    # legacy v1 manifest
+    paths = manifest["paths"]
+    if len(leaves) == 1 and paths[0] == "":
+        return leaves[0], info
+    root: Dict = {}
+    for kp, leaf in zip(paths, leaves):
+        _set_path(root, kp, leaf)
+    return _listify(root), info

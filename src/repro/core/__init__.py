@@ -25,7 +25,7 @@
 from repro.core.problem import (ClientBucket, FederatedLogReg, LogRegProblem,
                                 build_dense_problem, build_problem,
                                 build_test_problem)
-from repro.core.engine import EngineConfig, RoundEngine
+from repro.core.engine import EngineConfig, RoundEngine, cohort_capacity
 from repro.core.solver import FederatedSolver, SolverState
 from repro.core.registry import available, get_spec, make_solver, register
 from repro.core.trainer import FitResult, Trainer, sweep
@@ -39,6 +39,7 @@ from repro.core.baselines import DistributedGD
 __all__ = [
     "ClientBucket", "FederatedLogReg", "LogRegProblem", "build_dense_problem",
     "build_problem", "build_test_problem", "EngineConfig", "RoundEngine",
+    "cohort_capacity",
     "FederatedSolver", "SolverState",
     "available", "get_spec", "make_solver", "register",
     "FitResult", "Trainer", "sweep",

@@ -56,12 +56,16 @@ class DistributedGD(FederatedSolver):
 
     def __init__(self, problem: FederatedLogReg, stepsize: float = 2.0,
                  aggregator: str = "dense",
-                 client_chunk: Optional[int] = None):
+                 client_chunk: Optional[int] = None,
+                 participation: float = 1.0,
+                 cohort: Optional[int] = None):
         self.problem = problem
         self.stepsize = stepsize
         self.engine = RoundEngine(problem,
                                   EngineConfig(aggregator=aggregator,
-                                               client_chunk=client_chunk))
+                                               client_chunk=client_chunk,
+                                               participation=participation,
+                                               cohort=cohort))
         self._passes = [
             jax.jit(functools.partial(_gd_client_pass, bucket=b,
                                       lam=problem.flat.lam, stepsize=stepsize))

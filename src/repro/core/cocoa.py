@@ -137,6 +137,9 @@ class CoCoAConfig:
     # None -> materialize each bucket's (Kb, d) delta stack; an int streams
     # the client axis in chunks of this size (see EngineConfig.client_chunk)
     client_chunk: Optional[int] = None
+    # under partial participation, compute only the sampled cohort (padded
+    # to this per-bucket capacity; see EngineConfig.cohort / cohort_capacity)
+    cohort: Optional[int] = None
 
 
 class CoCoAPlus(FederatedSolver):
@@ -178,7 +181,8 @@ class CoCoAPlus(FederatedSolver):
             problem,
             EngineConfig(weighting="sum", participation=cfg.participation,
                          aggregator=cfg.aggregator,
-                         client_chunk=cfg.client_chunk),
+                         client_chunk=cfg.client_chunk,
+                         cohort=cfg.cohort),
         )
 
         def cocoa_pass(w, bi, bucket, alpha_b, kb):

@@ -70,6 +70,9 @@ class DANEConfig:
     # None -> materialize each bucket's (Kb, d) delta stack; an int streams
     # the client axis in chunks of this size (see EngineConfig.client_chunk)
     client_chunk: Optional[int] = None
+    # under partial participation, compute only the sampled cohort (padded
+    # to this per-bucket capacity; see EngineConfig.cohort / cohort_capacity)
+    cohort: Optional[int] = None
 
     def __post_init__(self):
         if self.local_solver not in _SOLVERS:
@@ -203,7 +206,8 @@ class DANE(FederatedSolver):
             problem,
             EngineConfig(participation=cfg.participation, weighting="uniform",
                          aggregator=cfg.aggregator,
-                         client_chunk=cfg.client_chunk),
+                         client_chunk=cfg.client_chunk,
+                         cohort=cfg.cohort),
         )
 
         # Alg. 2 step 1's full gradient is the eager prelude (its own round

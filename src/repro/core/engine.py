@@ -71,11 +71,28 @@ path inside the same single ``jax.jit``.  The per-client key split is
 hoisted into the engine (:meth:`client_keys`) so chunked rounds consume
 the *same* per-client randomness as the reference and differ only in
 summation order (float tolerance, not bit-for-bit).
+
+Streaming fixes the *memory* axis; ``EngineConfig.cohort`` fixes the
+*compute* axis.  Under partial participation the masked paths still run
+every client's pass and zero the non-participants' weights — at the
+paper's ~10% participation that wastes ~90% of round flops.  The cohort
+path (:meth:`round_cohort` / :meth:`round_cohort_with_state`) reuses the
+round's single Bernoulli draw to *gather* only the sampled clients' rows,
+weights, per-client keys, and aux-state slices into a padded
+fixed-capacity bucket (static shapes under jit — size the capacity with
+:func:`cohort_capacity`), runs passes + aggregation over O(C·K) clients,
+and scatters dual state back.  Reweighting still sees the full weight and
+mask vectors, so the unbiasedness contract is identical to the masked
+reference; a capacity-overflowing draw falls back per-bucket to the
+masked pass via ``lax.cond``.  ``compile``/``compile_with_state`` trace
+the cohort body whenever ``cohort`` is set and participation < 1.0,
+composing with ``client_chunk`` (the gathered cohort is streamed).
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
+import math
 from typing import Any, Callable, List, Optional, Sequence, Tuple
 
 import jax
@@ -125,6 +142,26 @@ class EngineConfig:
     # regime on a CPU box.  Chunked rounds match the reference to float
     # tolerance (summation order), not bit-for-bit.
     client_chunk: Optional[int] = None
+    # None -> under partial participation, every client's pass still runs
+    # and the Bernoulli draw merely zeroes non-participants' weights.  An
+    # int caps the *computed* cohort instead: each bucket gathers only the
+    # sampled clients, padded to a fixed per-bucket capacity
+    # min(cohort, Kb, cohort_capacity(participation, Kb)) so jit shapes
+    # stay static, and runs passes + aggregation over O(participation·K)
+    # clients.  Size the ceiling with :func:`cohort_capacity` on the
+    # largest bucket; a draw that overflows the capacity falls back to
+    # the masked full-bucket pass for that bucket (lax.cond), so results
+    # never depend on the capacity.  No-op at participation=1.0.
+    cohort: Optional[int] = None
+
+    @staticmethod
+    def _check_optional_count(value, name: str):
+        # NB: bool is a subclass of int, so isinstance(True, int) is true —
+        # reject bools explicitly or cohort=True silently means cohort=1.
+        if value is not None and (
+                isinstance(value, bool) or not isinstance(value, int)
+                or value < 1):
+            raise ValueError(f"{name} must be a positive int or None")
 
     def __post_init__(self):
         if self.weighting not in _WEIGHTINGS:
@@ -135,10 +172,8 @@ class EngineConfig:
             raise ValueError(f"aggregator must be one of {_AGGREGATORS}")
         if not 0.0 < self.participation <= 1.0:
             raise ValueError("participation must be in (0, 1]")
-        if self.client_chunk is not None and (
-                not isinstance(self.client_chunk, int)
-                or self.client_chunk < 1):
-            raise ValueError("client_chunk must be a positive int or None")
+        self._check_optional_count(self.client_chunk, "client_chunk")
+        self._check_optional_count(self.cohort, "cohort")
 
 
 @functools.partial(jax.jit, static_argnames=("scaled",))
@@ -156,6 +191,28 @@ def _kernel(name: str) -> Callable:
         return getattr(ops, name)
     from repro.kernels import ref
     return getattr(ref, name + "_ref")
+
+
+def cohort_capacity(participation: float, num_clients: int, *,
+                    z: float = 6.0) -> int:
+    """Static per-bucket cohort capacity for ``EngineConfig.cohort``.
+
+    The realized cohort is Binomial(Kb, participation); a capacity of
+    mean + z·σ (+1) covers the draw with overwhelming probability (z=6 ⇒
+    overflow odds ~1e-9 per bucket per round), so the lax.cond fallback to
+    the masked full-bucket pass is for correctness, not a path that ever
+    runs in practice.  Pass the *largest* bucket's client count — the
+    engine right-sizes every bucket's gather on its own to
+    ``min(cohort, Kb, cohort_capacity(participation, Kb))``, so the knob
+    only needs to be a safe ceiling.
+    """
+    if not 0.0 < participation <= 1.0:
+        raise ValueError("participation must be in (0, 1]")
+    if num_clients < 1:
+        raise ValueError("num_clients must be >= 1")
+    mean = participation * num_clients
+    sd = math.sqrt(participation * (1.0 - participation) * num_clients)
+    return max(1, min(num_clients, int(math.ceil(mean + z * sd)) + 1))
 
 
 class RoundEngine:
@@ -359,7 +416,7 @@ class RoundEngine:
             [x, jnp.zeros((pad,) + x.shape[1:], x.dtype)], axis=0)
 
     def _stream_bucket(self, w, bi: int, bucket: ClientBucket, kb, wts,
-                       chunk_pass, state_b=None, sel=None):
+                       chunk_pass, state_b=None, sel=None, keys=None):
         """Run one bucket's client pass chunk-by-chunk, returning the
         bucket's weighted delta **sum** (a (d,) vector) and — for dual-state
         passes — the updated bucket state.
@@ -368,12 +425,18 @@ class RoundEngine:
         zero-weight, n_k = 0 clients (an exact no-op in the aggregate) and
         reshaped to (num_chunks, chunk, ...); ``lax.scan`` folds the chunks
         so only one (chunk, d) delta block is ever live.
+
+        ``keys`` overrides the per-client key derivation — the cohort path
+        streams a *gathered* bucket and must hand each gathered client the
+        key it would have received at its original position, not a fresh
+        ``split`` over the gathered axis.
         """
         Kb = bucket.num_clients
         chunk = min(self.cfg.client_chunk, Kb)
         pad = (-Kb) % chunk
         nch = (Kb + pad) // chunk
-        keys = self.client_keys(kb, Kb)
+        if keys is None:
+            keys = self.client_keys(kb, Kb)
         if pad:
             # padded clients carry weight 0; their key is never consumed in
             # a way that matters, but must be a valid key array
@@ -485,6 +548,179 @@ class RoundEngine:
         return self._streamed_round(w, key, chunk_pass, list(states),
                                     self.participation_masks(key))
 
+    # -- the cohort round: O(participation · K) client passes --------------- #
+
+    def _bucket_accumulate(self, w, deltas, wts):
+        """One bucket's weighted delta sum as a (d,) vector — the fused
+        kernel's accumulate entry under ``aggregator="pallas"``, the plain
+        jnp weighted sum otherwise."""
+        if self.cfg.aggregator == "pallas":
+            return _kernel("fused_accumulate")(jnp.zeros_like(w), deltas, wts)
+        return (wts[:, None] * deltas).sum(axis=0)
+
+    def _masked_bucket(self, w, bi: int, bucket: ClientBucket, kb, keys,
+                       wtsz, sel, chunk_pass, state_b=None):
+        """The masked reference body over the *keyed* chunk-pass contract:
+        every client's pass runs, zero-weighted non-participants drop out of
+        the sum, and dual state freezes where ``sel`` is 0.  This is both
+        the cohort path's overflow fallback and its participation=1.0 /
+        cap≥Kb degenerate case, so the two lax.cond branches share one
+        aggregation recipe."""
+        if self.cfg.client_chunk is not None:
+            return self._stream_bucket(w, bi, bucket, kb, wtsz, chunk_pass,
+                                       state_b=state_b, sel=sel, keys=keys)
+        if state_b is None:
+            deltas = chunk_pass(w, bi, bucket, keys)
+            s_new = None
+        else:
+            deltas, s_new = chunk_pass(w, bi, bucket, state_b, keys)
+            if sel is not None:
+                s_new = jax.tree_util.tree_map(
+                    lambda new, old: jnp.where(
+                        sel.reshape((bucket.num_clients,)
+                                    + (1,) * (new.ndim - 1)) > 0, new, old),
+                    s_new, state_b)
+        return self._bucket_accumulate(w, deltas, wtsz), s_new
+
+    def _cohort_bucket(self, w, bi: int, bucket: ClientBucket, kb, wts, sel,
+                       chunk_pass, state_b=None):
+        """One bucket's contribution with only the sampled clients computed.
+
+        The round's Bernoulli draw ``sel`` is turned into a gather: the
+        (at most ``cap``, the bucket's own right-sized static capacity —
+        see below) participating clients' rows,
+        weights, per-client keys, and aux-state slices move into a padded
+        fixed-capacity cohort bucket (static shapes for jit), the keyed
+        chunk pass runs over that O(cap) bucket, and dual state scatters
+        back to its original client slots — everyone else's state is
+        untouched, which *is* the freezing contract.  Padding slots carry
+        weight 0 and n_k = 0 (exact no-ops in the aggregate, same trick as
+        the streamed path's pad clients) and scatter out of bounds (mode
+        "drop").  A draw with more participants than ``cap`` takes the
+        lax.cond fallback: the masked full-bucket pass, identical to the
+        no-cohort round.
+        """
+        Kb = bucket.num_clients
+        # per-bucket static capacity: cfg.cohort is a ceiling; each bucket
+        # right-sizes its own gather to its Binomial(Kb, p) draw, so small
+        # buckets don't inherit the largest bucket's capacity and compute
+        # nearly all of their clients anyway
+        cap = min(self.cfg.cohort, Kb,
+                  cohort_capacity(self.cfg.participation, Kb)
+                  if self.cfg.participation < 1.0 else Kb)
+        keys = self.client_keys(kb, Kb)
+        wtsz = wts * sel if sel is not None else wts
+        if sel is None or cap >= Kb:
+            # nothing to gain from gathering — run the masked reference body
+            return self._masked_bucket(w, bi, bucket, kb, keys, wtsz, sel,
+                                       chunk_pass, state_b=state_b)
+        count = jnp.count_nonzero(sel > 0)
+
+        def cohort_branch(_):
+            gidx = jnp.nonzero(sel > 0, size=cap, fill_value=0)[0]
+            valid = jnp.arange(cap) < count
+            g_bucket = ClientBucket(bucket.idx[gidx], bucket.val[gidx],
+                                    bucket.y[gidx],
+                                    jnp.where(valid, bucket.n_k[gidx], 0))
+            g_keys = keys[gidx]
+            g_wts = jnp.where(valid, wtsz[gidx], 0.0)
+            g_state = None if state_b is None else jax.tree_util.tree_map(
+                lambda a: a[gidx], state_b)
+            if self.cfg.client_chunk is not None:
+                acc_b, s_new = self._stream_bucket(
+                    w, bi, g_bucket, kb, g_wts, chunk_pass,
+                    state_b=g_state, sel=None, keys=g_keys)
+            elif state_b is None:
+                acc_b = self._bucket_accumulate(
+                    w, chunk_pass(w, bi, g_bucket, g_keys), g_wts)
+                s_new = None
+            else:
+                deltas, s_new = chunk_pass(w, bi, g_bucket, g_state, g_keys)
+                acc_b = self._bucket_accumulate(w, deltas, g_wts)
+            if state_b is None:
+                return acc_b, None
+            # scatter updated slices back to their original client slots;
+            # padding rows target index Kb — out of bounds, dropped — and
+            # non-gathered clients keep their old state (frozen).  Valid
+            # gidx entries are unique, so the scatter is deterministic.
+            scatter_idx = jnp.where(valid, gidx, Kb)
+            new_state = jax.tree_util.tree_map(
+                lambda old, new: old.at[scatter_idx].set(new, mode="drop"),
+                state_b, s_new)
+            return acc_b, new_state
+
+        def masked_branch(_):
+            return self._masked_bucket(w, bi, bucket, kb, keys, wtsz, sel,
+                                       chunk_pass, state_b=state_b)
+
+        return jax.lax.cond(count <= cap, cohort_branch, masked_branch, None)
+
+    def _cohort_round(self, w, key, chunk_pass, states, masks):
+        """The cohort twin of :meth:`_streamed_round`: the same full-vector
+        mass reductions (the reweighting contract never sees the gather —
+        expected/realized mass come from the *complete* weight and mask
+        vectors), with each bucket's delta sum produced by
+        :meth:`_cohort_bucket` over only the sampled clients."""
+        cfg = self.cfg
+        reweight = self._reweightable(masks)
+        acc = jnp.zeros_like(w)
+        total_mass = jnp.zeros(())
+        expected_mass = jnp.zeros(())
+        new_states: Optional[List[Any]] = [] if states is not None else None
+        for bi, (wi, b) in enumerate(zip(self._offsets, self.problem.buckets)):
+            kb = jax.random.fold_in(key, wi)
+            wts = self.bucket_weights(wi, b.num_clients)
+            sel = masks[bi] if masks is not None else None
+            if sel is not None and reweight:
+                total_mass = total_mass + (wts * sel).sum()
+                expected_mass = expected_mass + wts.sum()
+            acc_b, s_b = self._cohort_bucket(
+                w, bi, b, kb, wts, sel, chunk_pass,
+                state_b=states[bi] if states is not None else None)
+            acc = acc + acc_b
+            if new_states is not None:
+                new_states.append(s_b)
+        scale = self._reweight_scale(total_mass, expected_mass) \
+            if reweight else None
+
+        if cfg.aggregator == "pallas":
+            a = self.a_diag if cfg.server_scaling == "diag" else jnp.ones_like(w)
+            s = scale if scale is not None else 1.0
+            w_next = _kernel("fused_epilogue")(w, acc, a, s).astype(w.dtype)
+        else:
+            w_next = self._finish_dense(w, acc, scale)
+        return w_next, new_states
+
+    def round_cohort(self, w: jax.Array, key: jax.Array,
+                     chunk_pass: ChunkClientPassFn) -> jax.Array:
+        """:meth:`round` computing only the sampled cohort — same single
+        Bernoulli draw, same weighting/reweighting/scaling semantics, same
+        per-client key chain; results match the masked reference to float
+        tolerance (summation order), not bit-for-bit.  At participation=1.0
+        (or cap ≥ Kb) this degrades to the keyed full-bucket pass."""
+        if self.cfg.cohort is None:
+            raise ValueError("round_cohort requires cfg.cohort")
+        w_next, _ = self._cohort_round(w, key, chunk_pass, None,
+                                       self.participation_masks(key))
+        return w_next
+
+    def round_cohort_with_state(self, w: jax.Array, states: Sequence[Any],
+                                key: jax.Array,
+                                chunk_pass: DualChunkClientPassFn
+                                ) -> Tuple[jax.Array, List[Any]]:
+        """:meth:`round_with_state` computing only the sampled cohort.  Aux
+        state is gathered with the cohort and scattered back afterwards;
+        non-participants' state is simply never touched, which coincides
+        with the masked path's freezing bit-for-bit.  Cohort members'
+        updates match the masked path to tight float tolerance (the
+        overflow ``lax.cond`` compiles both branches, and XLA may round
+        the per-client elementwise chain one ulp away from eager
+        dispatch)."""
+        if self.cfg.cohort is None:
+            raise ValueError("round_cohort_with_state requires cfg.cohort")
+        return self._cohort_round(w, key, chunk_pass, list(states),
+                                  self.participation_masks(key))
+
     # -- the compiled round: O(1) dispatches per round ---------------------- #
 
     def _should_donate(self, donate: Optional[bool]) -> bool:
@@ -494,10 +730,17 @@ class RoundEngine:
     def _require_chunk_pass(self, chunk_pass):
         if chunk_pass is None:
             raise ValueError(
-                "cfg.client_chunk is set but no chunk_pass was supplied — "
-                "streamed rounds need the per-client-keyed chunk pass "
+                "cfg.client_chunk/cfg.cohort is set but no chunk_pass was "
+                "supplied — streamed and cohort rounds need the "
+                "per-client-keyed chunk pass "
                 "(chunk_pass(w, bi, chunk_bucket, keys, *ctx))")
         return chunk_pass
+
+    def _use_cohort(self) -> bool:
+        # Static dispatch: the gather only pays off when the draw actually
+        # discards clients, so at participation=1.0 the knob is a no-op and
+        # compile falls through to the streamed/materialized body.
+        return self.cfg.cohort is not None and self.cfg.participation < 1.0
 
     def compile(self, client_pass: Callable, *,
                 prelude: Optional[Callable] = None,
@@ -524,10 +767,24 @@ class RoundEngine:
         the **streamed** path (:meth:`round_streamed`) over ``chunk_pass``
         instead — peak delta memory O(client_chunk·d); :meth:`round` (and
         :meth:`reference`) stay the unchunked bit-exact reference.
+
+        When ``cfg.cohort`` is set *and* participation < 1.0, the jitted
+        body is the **cohort** path (:meth:`round_cohort`) over
+        ``chunk_pass``: only the sampled clients' passes run — composed
+        with ``client_chunk`` when both are set (the gathered cohort is
+        streamed in chunks).
         """
         donate_args = (0,) if self._should_donate(donate) else ()
 
-        if self.cfg.client_chunk is not None:
+        if self._use_cohort():
+            c_pass = self._require_chunk_pass(chunk_pass)
+
+            @functools.partial(jax.jit, donate_argnums=donate_args)
+            def _body(w, ctx, key):
+                return self.round_cohort(
+                    w, key,
+                    lambda w_, bi, cb, ks: c_pass(w_, bi, cb, ks, *ctx))
+        elif self.cfg.client_chunk is not None:
             c_pass = self._require_chunk_pass(chunk_pass)
 
             @functools.partial(jax.jit, donate_argnums=donate_args)
@@ -571,11 +828,24 @@ class RoundEngine:
         over a tuple-of-pytrees ``states``; both the iterate and the state
         buffers are donated on accelerator backends.  With
         ``cfg.client_chunk`` set, the jitted body is the streamed
-        :meth:`round_streamed_with_state` over ``chunk_pass``.
+        :meth:`round_streamed_with_state` over ``chunk_pass``; with
+        ``cfg.cohort`` set under partial participation it is the cohort
+        :meth:`round_cohort_with_state` (aux state gathered with the
+        cohort and scattered back).
         """
         donate_args = (0, 1) if self._should_donate(donate) else ()
 
-        if self.cfg.client_chunk is not None:
+        if self._use_cohort():
+            c_pass = self._require_chunk_pass(chunk_pass)
+
+            @functools.partial(jax.jit, donate_argnums=donate_args)
+            def _body(w, states, ctx, key):
+                w2, new_states = self.round_cohort_with_state(
+                    w, list(states), key,
+                    lambda w_, bi, cb, s_c, ks: c_pass(w_, bi, cb, s_c, ks,
+                                                       *ctx))
+                return w2, tuple(new_states)
+        elif self.cfg.client_chunk is not None:
             c_pass = self._require_chunk_pass(chunk_pass)
 
             @functools.partial(jax.jit, donate_argnums=donate_args)

@@ -50,6 +50,9 @@ class FedAvgConfig:
     # the client axis in chunks of this size (paper-scale K on bounded
     # memory; see EngineConfig.client_chunk)
     client_chunk: Optional[int] = None
+    # under partial participation, compute only the sampled cohort (padded
+    # to this per-bucket capacity; see EngineConfig.cohort / cohort_capacity)
+    cohort: Optional[int] = None
 
 
 def _local_sgd_pass(w0, bucket: ClientBucket, lam, cfg: FedAvgConfig,
@@ -121,6 +124,7 @@ class FedAvg(FederatedSolver):
                 weighting="nk" if cfg.use_weighted_agg else "uniform",
                 aggregator=cfg.aggregator,
                 client_chunk=cfg.client_chunk,
+                cohort=cfg.cohort,
             ),
         )
 

@@ -55,6 +55,9 @@ class FSVRGConfig:
     # the client axis in chunks of this size (paper-scale K on bounded
     # memory; see EngineConfig.client_chunk)
     client_chunk: Optional[int] = None
+    # under partial participation, compute only the sampled cohort (padded
+    # to this per-bucket capacity; see EngineConfig.cohort / cohort_capacity)
+    cohort: Optional[int] = None
 
 
 def _client_pass(w0, full_grad, bucket: ClientBucket, lam, phi, cfg: FSVRGConfig, key):
@@ -142,6 +145,7 @@ class FSVRG(FederatedSolver):
                 server_scaling="diag" if (cfg.use_A and not plain) else "none",
                 aggregator=cfg.aggregator,
                 client_chunk=cfg.client_chunk,
+                cohort=cfg.cohort,
             ),
             a_diag=self.a_diag,
         )

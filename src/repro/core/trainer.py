@@ -125,6 +125,12 @@ class Trainer:
             raise ValueError("pass w0 or state, not both")
         start = int(state.round)
         if start >= self.rounds:
+            # the "saved checkpoint never lags the returned result"
+            # invariant must hold for the degenerate run too: a restored
+            # state handed to a past-budget fit would otherwise return
+            # without ever touching the checkpoint directory
+            if self.checkpoint_dir:
+                self.save(state)
             return FitResult(state=state, history=[], solver=self.solver)
         if self.scan:
             return self._fit_scan(state, start)

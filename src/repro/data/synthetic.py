@@ -117,6 +117,10 @@ def generate(cfg, seed: int = 0) -> FederatedDataset:
     with one batched gamma draw, and every example's private-vocab features
     with one offset-searchsorted inverse-CDF lookup against its client's
     mixture.
+
+    The chronological 75/25 per-client split guarantees ≥1 train *and* ≥1
+    test example for every client with n_k ≥ 2.  A client with n_k == 1
+    puts its single example in train and has zero test examples.
     """
     rng = np.random.default_rng(seed)
     K, d = cfg.num_clients, cfg.num_features
@@ -190,8 +194,15 @@ def generate(cfg, seed: int = 0) -> FederatedDataset:
     p = 1.0 / (1.0 + np.exp(-(0.7 * margin + client_bias[client_of])))
     all_y = np.where(rng.random(n) < p, 1.0, -1.0).astype(np.float32)
 
-    # chronological 75/25 split per client (synthetic order = time order)
+    # chronological 75/25 split per client (synthetic order = time order).
+    # Every client with n_k >= 2 keeps at least one test example: the
+    # train share is clamped to [1, n_k − 1] (at n_k == 1 the max(1, ·)
+    # floor used to consume the whole client, emitting a zero-test
+    # client).  A client with n_k == 1 still contributes its only example
+    # to train and has zero test examples — there is no way to give it
+    # both; callers that need test coverage everywhere must keep n_min >= 2.
     tr_sizes = np.maximum(1, (0.75 * sizes).astype(np.int64))
+    tr_sizes = np.where(sizes >= 2, np.minimum(tr_sizes, sizes - 1), tr_sizes)
     starts = np.concatenate([[0], np.cumsum(sizes)[:-1]])
     pos_in_client = np.arange(n) - starts[client_of]
     tr_mask = pos_in_client < tr_sizes[client_of]

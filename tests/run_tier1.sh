@@ -34,4 +34,11 @@ python benchmarks/bench_round.py --smoke \
 python benchmarks/bench_round.py --smoke --paper-k \
     --json "${BENCH_PAPERK_JSON:-BENCH_round.paperk.smoke.json}" > /dev/null
 
+# Cohort-round smoke: budget-guarded K=10,000 partial-participation sweep
+# (p=0.1 only, 2 rounds, 1 repeat) timing the cohort-gathered round
+# against the masked streamed round, so the gather/scatter path is
+# exercised at the paper's K and participation on every CI run.
+python benchmarks/bench_round.py --smoke --participation-sweep \
+    --json "${BENCH_COHORT_JSON:-BENCH_round.cohort.smoke.json}" > /dev/null
+
 exec python -m pytest -x -q "$@"

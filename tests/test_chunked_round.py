@@ -163,6 +163,22 @@ def test_streamed_round_with_state_matches_reference(small_problem, chunk,
         np.testing.assert_array_equal(np.asarray(s_c), np.asarray(s_r))
 
 
+def test_engine_config_rejects_bool_counts():
+    """isinstance(True, int) is true in Python, so client_chunk=True used to
+    slip through the positive-int guard and silently mean chunk size 1; the
+    same hole would have applied to cohort=True."""
+    with pytest.raises(ValueError):
+        EngineConfig(client_chunk=True)
+    with pytest.raises(ValueError):
+        EngineConfig(cohort=True)
+    with pytest.raises(ValueError):
+        EngineConfig(cohort=0)
+    with pytest.raises(ValueError):
+        EngineConfig(client_chunk=False)
+    cfg = EngineConfig(client_chunk=1, cohort=1)  # real ints still pass
+    assert cfg.client_chunk == 1 and cfg.cohort == 1
+
+
 def test_streamed_round_requires_chunk_and_pass(small_problem):
     with pytest.raises(ValueError):
         EngineConfig(client_chunk=0)

@@ -1,0 +1,356 @@
+"""The cohort round path — compute only the sampled clients.
+
+Contracts:
+
+1. Same round key ⇒ same participant set: the cohort engine's Bernoulli
+   draw is bit-identical to the masked engine's (the gather consumes no
+   randomness), so the two paths see exactly the same cohort.
+2. Engine-level cohort-vs-masked parity across the full knob cross —
+   weighting × aggregator × client_chunk × cohort capacity — for both
+   stateless and dual-state rounds.  The gather hands each sampled client
+   the per-client key and weight of its original position, so the update
+   matches the masked reference up to summation order (float tolerance).
+   Cohort members' dual state matches to tight float tolerance — not
+   bit-for-bit, because the overflow lax.cond forces both branches
+   through XLA, which may FMA-contract the per-client elementwise chain
+   differently from the eager reference's op-by-op dispatch (1-ulp).
+3. Non-participants' dual state is frozen — on the cohort path it is never
+   touched at all, which must coincide with the masked path's
+   jnp.where-freezing bit-for-bit.
+4. A draw that overflows the static capacity takes the per-bucket lax.cond
+   fallback to the masked pass — results never depend on the capacity.
+5. Solver-level parity: every sparse solver config (FSVRG/FedAvg/GD/DANE/
+   CoCoA+) plumbs ``cohort`` into its compiled round.
+6. ``cohort_capacity`` sizes the static bucket so overflow is a z-sigma
+   tail event; at participation=1.0 the knob is a compile-time no-op.
+7. A cohort FedAvg round completes at the paper's K = 10,000 and matches
+   the masked round (slow-marked).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_paper_k_config
+from repro.core import CoCoAConfig, CoCoAPlus, FSVRG, FSVRGConfig, \
+    build_problem, cohort_capacity, make_solver
+from repro.core.engine import EngineConfig, RoundEngine
+from repro.core.fedavg import FedAvg, FedAvgConfig
+from repro.data.synthetic import generate
+
+
+# --------------------------------------------------------------------- #
+# keyed synthetic passes (same idiom as test_chunked_round: uniform, not
+# normal — erfinv can differ by an ulp across batch shapes, which would
+# spoil the exact per-client state comparisons)
+# --------------------------------------------------------------------- #
+
+
+def _keyed_deltas(w, bucket, keys):
+    def one(n_k, ck):
+        return ((jax.random.uniform(ck, w.shape) - 0.5)
+                * (1.0 + 0.1 * n_k.astype(jnp.float32)))
+    return jax.vmap(one)(bucket.n_k, keys)
+
+
+def _passes():
+    def client_pass(w, bi, b, kb):
+        return _keyed_deltas(w, b, jax.random.split(kb, b.num_clients))
+
+    def chunk_pass(w, bi, cb, keys):
+        return _keyed_deltas(w, cb, keys)
+
+    return client_pass, chunk_pass
+
+
+def _dual_passes():
+    def keyed(w, bucket, state_b, keys):
+        deltas = _keyed_deltas(w, bucket, keys)
+        return deltas, state_b + deltas[:, :3]
+
+    def dual_pass(w, bi, b, s_b, kb):
+        return keyed(w, b, s_b, jax.random.split(kb, b.num_clients))
+
+    def dual_chunk_pass(w, bi, cb, s_c, keys):
+        return keyed(w, cb, s_c, keys)
+
+    return dual_pass, dual_chunk_pass
+
+
+# --------------------------------------------------------------------- #
+# 1. same key ⇒ same participant set
+# --------------------------------------------------------------------- #
+
+
+def test_cohort_engine_draws_identical_masks(small_problem):
+    """The gather must reuse the round's single Bernoulli draw, not
+    re-derive one: masks from the cohort and masked engines are
+    bit-identical for the same round key."""
+    prob = small_problem
+    eng_m = RoundEngine(prob, EngineConfig(participation=0.3))
+    eng_c = RoundEngine(prob, EngineConfig(participation=0.3, cohort=3))
+    for r in range(4):
+        key = jax.random.PRNGKey(r)
+        for a, b in zip(eng_m.participation_masks(key),
+                        eng_c.participation_masks(key)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# --------------------------------------------------------------------- #
+# 2. engine-level cohort-vs-masked parity
+# --------------------------------------------------------------------- #
+
+
+@pytest.mark.parametrize("cohort", [2, 4, None])  # None -> cohort_capacity
+@pytest.mark.parametrize("chunk", [None, 3])
+@pytest.mark.parametrize("weighting", ["nk", "uniform", "sum"])
+@pytest.mark.parametrize("aggregator", ["dense", "pallas"])
+def test_cohort_round_matches_masked_reference(small_problem, cohort, chunk,
+                                               weighting, aggregator):
+    prob = small_problem
+    p = 0.4
+    if cohort is None:
+        cohort = cohort_capacity(p, max(b.num_clients for b in prob.buckets))
+    a_diag = jnp.abs(jax.random.normal(jax.random.PRNGKey(2), (prob.d,))) + 0.5
+    kw = dict(weighting=weighting, participation=p, server_scaling="diag",
+              aggregator=aggregator, client_chunk=chunk)
+    eng_ref = RoundEngine(prob, EngineConfig(**kw), a_diag=a_diag)
+    eng_coh = RoundEngine(prob, EngineConfig(cohort=cohort, **kw),
+                          a_diag=a_diag)
+    client_pass, chunk_pass = _passes()
+    w = jax.random.normal(jax.random.PRNGKey(1), (prob.d,)) * 0.1
+    for r in range(3):   # several keys: small caps hit both cond branches
+        key = jax.random.PRNGKey(10 + r)
+        out_ref = eng_ref.round(w, key, client_pass)
+        out_coh = eng_coh.round_cohort(w, key, chunk_pass)
+        np.testing.assert_allclose(np.asarray(out_coh), np.asarray(out_ref),
+                                   rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("cohort", [1, 3])
+@pytest.mark.parametrize("chunk", [None, 2])
+def test_cohort_round_with_state_matches_reference(small_problem, cohort,
+                                                   chunk):
+    """Dual-state gather/scatter: the iterate matches to float tolerance;
+    per-client state matches the masked path — bitwise for clients outside
+    the draw (never touched on either path), tight float tolerance for
+    participants (the lax.cond branches are XLA-compiled, which may round
+    the per-client elementwise chain one ulp away from eager dispatch)."""
+    prob = small_problem
+    kw = dict(weighting="sum", participation=0.4, client_chunk=chunk)
+    eng_ref = RoundEngine(prob, EngineConfig(**kw))
+    eng_coh = RoundEngine(prob, EngineConfig(cohort=cohort, **kw))
+    dual_pass, dual_chunk_pass = _dual_passes()
+    states = [jnp.arange(b.num_clients * 3, dtype=jnp.float32)
+              .reshape(b.num_clients, 3) for b in prob.buckets]
+    w = jnp.zeros(prob.d)
+    for r in range(3):
+        key = jax.random.PRNGKey(20 + r)
+        masks = eng_ref.participation_masks(key)
+        w_ref, st_ref = eng_ref.round_with_state(w, states, key, dual_pass)
+        w_coh, st_coh = eng_coh.round_cohort_with_state(w, states, key,
+                                                        dual_chunk_pass)
+        np.testing.assert_allclose(np.asarray(w_coh), np.asarray(w_ref),
+                                   rtol=1e-5, atol=1e-5)
+        for sel, s_c, s_r in zip(masks, st_coh, st_ref):
+            out = np.asarray(sel) <= 0
+            np.testing.assert_array_equal(np.asarray(s_c)[out],
+                                          np.asarray(s_r)[out])
+            np.testing.assert_allclose(np.asarray(s_c), np.asarray(s_r),
+                                       rtol=1e-5, atol=1e-5)
+
+
+def test_cohort_freezes_nonparticipant_state(small_problem):
+    """Clients outside the draw keep their previous state bit-for-bit —
+    the scatter never writes their slots."""
+    prob = small_problem
+    eng = RoundEngine(prob, EngineConfig(weighting="sum", participation=0.3,
+                                         cohort=4))
+    _, dual_chunk_pass = _dual_passes()
+    states = [jnp.ones((b.num_clients, 3)) for b in prob.buckets]
+    key = jax.random.PRNGKey(7)
+    masks = eng.participation_masks(key)
+    _, new_states = eng.round_cohort_with_state(jnp.zeros(prob.d), states,
+                                                key, dual_chunk_pass)
+    changed_any = False
+    for sel, s_old, s_new in zip(masks, states, new_states):
+        sel = np.asarray(sel) > 0
+        np.testing.assert_array_equal(np.asarray(s_new)[~sel],
+                                      np.asarray(s_old)[~sel])
+        changed_any |= bool(
+            (np.asarray(s_new)[sel] != np.asarray(s_old)[sel]).any())
+    assert changed_any  # the draw picked someone and their state moved
+
+
+def test_cohort_overflow_falls_back_to_masked(small_problem):
+    """Capacity 1 at participation 0.9: nearly every draw overflows, so the
+    lax.cond fallback carries the round — and still matches the masked
+    reference (results must never depend on the capacity)."""
+    prob = small_problem
+    kw = dict(participation=0.9)
+    eng_ref = RoundEngine(prob, EngineConfig(**kw))
+    eng_coh = RoundEngine(prob, EngineConfig(cohort=1, **kw))
+    client_pass, chunk_pass = _passes()
+    w = jnp.zeros(prob.d)
+    key = jax.random.PRNGKey(11)
+    np.testing.assert_allclose(
+        np.asarray(eng_coh.round_cohort(w, key, chunk_pass)),
+        np.asarray(eng_ref.round(w, key, client_pass)),
+        rtol=1e-5, atol=1e-5)
+
+
+def test_cohort_compile_dispatch_and_errors(small_problem):
+    prob = small_problem
+    client_pass, chunk_pass = _passes()
+    # round_cohort without the knob
+    eng = RoundEngine(prob, EngineConfig(participation=0.5))
+    with pytest.raises(ValueError):
+        eng.round_cohort(jnp.zeros(prob.d), jax.random.PRNGKey(0), chunk_pass)
+    # compile on a cohort engine needs the keyed chunk pass
+    eng_c = RoundEngine(prob, EngineConfig(participation=0.5, cohort=3))
+    with pytest.raises(ValueError):
+        eng_c.compile(client_pass)
+    # at participation=1.0 the knob is a static no-op: compiled rounds are
+    # bit-identical to the plain engine's
+    eng_full = RoundEngine(prob, EngineConfig(cohort=3))
+    w = jax.random.normal(jax.random.PRNGKey(4), (prob.d,)) * 0.1
+    key = jax.random.PRNGKey(5)
+    out_plain = RoundEngine(prob, EngineConfig()).compile(
+        client_pass, chunk_pass=chunk_pass)(w, key)
+    out_noop = eng_full.compile(client_pass, chunk_pass=chunk_pass)(w, key)
+    np.testing.assert_array_equal(np.asarray(out_noop), np.asarray(out_plain))
+    # compiled cohort round == eager cohort round (tight float tolerance —
+    # the whole-round jit may re-associate the cross-bucket sum)
+    out_eager = eng_c.round_cohort(w, key, chunk_pass)
+    out_comp = eng_c.compile(client_pass, chunk_pass=chunk_pass)(w, key)
+    np.testing.assert_allclose(np.asarray(out_comp), np.asarray(out_eager),
+                               rtol=1e-5, atol=1e-6)
+
+
+# --------------------------------------------------------------------- #
+# 5. solver-level parity: cohort plumbs through every sparse config
+# --------------------------------------------------------------------- #
+
+
+def test_fedavg_cohort_matches_masked(small_problem):
+    prob = small_problem
+    key = jax.random.PRNGKey(0)
+    a = FedAvg(prob, FedAvgConfig(stepsize=0.1, participation=0.3))
+    b = FedAvg(prob, FedAvgConfig(stepsize=0.1, participation=0.3, cohort=4))
+    np.testing.assert_allclose(np.asarray(b.round(b.init(), key).w),
+                               np.asarray(a.round(a.init(), key).w),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_fsvrg_cohort_fused_chunked_matches_masked(small_problem):
+    """FSVRG with diag scaling through the fused cohort path, composed with
+    client_chunk — 2 rounds, so the cohort iterate feeds the next draw."""
+    prob = small_problem
+    kw = dict(stepsize=1.0, participation=0.3)
+    a = FSVRG(prob, FSVRGConfig(**kw))
+    b = FSVRG(prob, FSVRGConfig(aggregator="pallas", client_chunk=3,
+                                cohort=4, **kw))
+    sa, sb = a.init(), b.init()
+    base = jax.random.PRNGKey(1)
+    for r in range(2):
+        kr = jax.random.fold_in(base, r)
+        sa, sb = a.round(sa, kr), b.round(sb, kr)
+    np.testing.assert_allclose(np.asarray(sb.w), np.asarray(sa.w),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_cocoa_cohort_matches_masked(tiny_problem):
+    """Dual-state solver end-to-end: iterate to float tolerance, dual
+    blocks gathered, updated, scattered back — tight tolerance (the cond
+    branches' XLA rounding; see the module docstring), and the blocks must
+    stay consistent with the iterate over consecutive rounds."""
+    prob = tiny_problem
+    a = CoCoAPlus(prob, cfg=CoCoAConfig(participation=0.5))
+    b = CoCoAPlus(prob, cfg=CoCoAConfig(participation=0.5, cohort=3))
+    key = jax.random.PRNGKey(2)
+    sa, sb = a.init(), b.init()
+    for r in range(2):
+        kr = jax.random.fold_in(key, r)
+        sa, sb = a.round(sa, kr), b.round(sb, kr)
+    np.testing.assert_allclose(np.asarray(sb.w), np.asarray(sa.w),
+                               rtol=1e-5, atol=1e-6)
+    for x, y in zip(sa.aux, sb.aux):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y),
+                                   rtol=1e-5, atol=1e-6)
+
+
+def test_registry_plumbs_cohort(small_problem):
+    for algo, kw in (("gd", {"participation": 0.5}),
+                     ("dane", {"participation": 0.5}),
+                     ("dane", {"participation": 0.5, "local_solver": "svrg",
+                               "mu": 0.0})):
+        a = make_solver(algo, small_problem, **kw)
+        b = make_solver(algo, small_problem, cohort=4, **kw)
+        key = jax.random.PRNGKey(3)
+        sa = a.round(a.init(), key)
+        sb = b.round(b.init(), key)
+        np.testing.assert_allclose(np.asarray(sb.w), np.asarray(sa.w),
+                                   rtol=1e-5, atol=1e-6)
+
+
+# --------------------------------------------------------------------- #
+# 6. capacity sizing
+# --------------------------------------------------------------------- #
+
+
+def test_cohort_capacity_bounds_and_monotonicity():
+    assert cohort_capacity(1.0, 1000) == 1000          # clipped to K
+    assert cohort_capacity(0.1, 1) == 1
+    c = cohort_capacity(0.1, 10_000)
+    assert 1000 < c < 1300, c                          # mean + 6σ headroom
+    assert cohort_capacity(0.3, 10_000) > c            # monotone in p
+    assert cohort_capacity(0.1, 20_000) > c            # monotone in K
+    with pytest.raises(ValueError):
+        cohort_capacity(0.0, 100)
+    with pytest.raises(ValueError):
+        cohort_capacity(0.1, 0)
+
+
+def test_cohort_capacity_covers_the_draw(small_problem):
+    """At the recommended z, realized cohorts fit the capacity for every
+    bucket over many rounds (the cond fallback is a tail event)."""
+    prob = small_problem
+    p = 0.3
+    eng = RoundEngine(prob, EngineConfig(participation=p))
+    for b in prob.buckets:
+        cap = cohort_capacity(p, b.num_clients)
+        assert cap <= b.num_clients
+    caps = [cohort_capacity(p, b.num_clients) for b in prob.buckets]
+    for r in range(50):
+        masks = eng.participation_masks(jax.random.PRNGKey(r))
+        for cap, m in zip(caps, masks):
+            assert int((np.asarray(m) > 0).sum()) <= cap
+
+
+# --------------------------------------------------------------------- #
+# 7. the paper's K = 10,000, cohort-gathered
+# --------------------------------------------------------------------- #
+
+
+@pytest.mark.slow
+def test_paper_scale_k10000_fedavg_cohort_round():
+    """One FedAvg round at the §4 client count with 10% participation,
+    cohort-gathered + streamed: the compiled round runs over ~1,000
+    computed clients instead of 10,000 and matches the masked streamed
+    round on the same key."""
+    cfg = get_paper_k_config()
+    ds = generate(cfg, seed=0)
+    prob = build_problem(ds, max_bucket_rows=20_000)
+    p = 0.1
+    cap = cohort_capacity(p, max(b.num_clients for b in prob.buckets))
+    masked = make_solver("fedavg", prob, client_chunk=256, participation=p)
+    cohort = make_solver("fedavg", prob, client_chunk=256, participation=p,
+                         cohort=cap)
+    key = jax.random.PRNGKey(0)
+    sm = masked.round(masked.init(), key)
+    sc = cohort.round(cohort.init(), key)
+    f0 = float(prob.flat.loss(jnp.zeros(prob.d)))
+    f1 = float(prob.flat.loss(sc.w))
+    assert np.isfinite(f1) and f1 < f0, (f1, f0)
+    np.testing.assert_allclose(np.asarray(sc.w), np.asarray(sm.w),
+                               rtol=1e-4, atol=1e-6)

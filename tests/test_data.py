@@ -167,3 +167,25 @@ def test_error_rate_zero_margin_predicts_plus_one(ds):
     expect = float((np.asarray(prob.flat.y) == -1).mean())
     assert abs(err - expect) < 1e-6
     assert err < 1.0  # the old behavior
+
+
+# --------------------------------------------------------------------- #
+# the 75/25 split never starves a splittable client of test examples
+# --------------------------------------------------------------------- #
+
+
+def test_split_gives_every_multi_example_client_a_test_example():
+    """Every client with n_k >= 2 keeps >= 1 train AND >= 1 test example;
+    an n_k == 1 client puts its only example in train (documented).  The
+    old max(1, floor(0.75 n_k)) consumed n_k == 1 clients whole — and this
+    guard must hold at the generator's minimum (n_min as low as 1)."""
+    import dataclasses
+    cfg = dataclasses.replace(get_logreg_config().scaled(0.002),
+                              min_client_examples=1)
+    ds = generate(cfg, seed=5)
+    tr = np.bincount(ds.client_of, minlength=ds.num_clients)
+    te = np.bincount(ds.test_client_of, minlength=ds.num_clients)
+    total = tr + te
+    assert (tr >= 1).all()
+    assert (te[total >= 2] >= 1).all(), "zero-test client with n_k >= 2"
+    assert (te[total == 1] == 0).all() and (tr[total == 1] == 1).all()

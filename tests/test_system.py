@@ -70,3 +70,66 @@ def test_checkpoint_roundtrip():
         for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(restored)):
             assert a.dtype == b.dtype
             np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_checkpoint_roundtrip_bare_array():
+    """A bare-array pytree: the root IS the leaf (keystr "") — the v1
+    string-path reconstruction indexed an empty key list and crashed."""
+    from repro.checkpoint import restore, save
+
+    w = jnp.arange(12.0).reshape(3, 4)
+    with tempfile.TemporaryDirectory() as tmp:
+        path = os.path.join(tmp, "ckpt")
+        save(path, w, step=3)
+        restored, meta = restore(path)
+        assert meta["step"] == 3
+        np.testing.assert_array_equal(np.asarray(restored), np.asarray(w))
+
+
+def test_checkpoint_roundtrip_int_keyed_dict():
+    """An int-keyed dict must come back as a dict, not a list — the keystr
+    for dict key 0 and list index 0 are both "[0]", so only the structured
+    v2 key paths can tell them apart."""
+    from repro.checkpoint import restore, save
+
+    # NB: keys must not mix types at one level (jax sorts dict keys), so
+    # the int-keyed dicts live under string-keyed parents
+    tree = {"ints": {0: jnp.zeros(2), 2: jnp.ones(3)},  # non-contiguous
+            "nested": [jnp.full(2, 5.0), {1: jnp.full(1, 7.0)}]}
+    with tempfile.TemporaryDirectory() as tmp:
+        path = os.path.join(tmp, "ckpt")
+        save(path, tree)
+        restored, _ = restore(path)
+        assert isinstance(restored["ints"], dict)
+        assert set(restored["ints"]) == {0, 2}
+        np.testing.assert_array_equal(np.asarray(restored["ints"][2]),
+                                      np.ones(3))
+        assert isinstance(restored["nested"], list)
+        assert isinstance(restored["nested"][1], dict)
+        np.testing.assert_array_equal(np.asarray(restored["nested"][1][1]),
+                                      np.full(1, 7.0))
+
+
+def test_checkpoint_v1_manifest_still_restores():
+    """Legacy manifests (no key_paths) restore through the string-path
+    parser, int-index dicts listified as they always were."""
+    import json
+
+    from repro.checkpoint import restore, save
+
+    tree = {"a": [jnp.zeros(2), jnp.ones(2)], "b": jnp.full(3, 2.0)}
+    with tempfile.TemporaryDirectory() as tmp:
+        path = os.path.join(tmp, "ckpt")
+        save(path, tree, step=1)
+        mpath = os.path.join(path, "manifest.json")
+        with open(mpath) as f:
+            manifest = json.load(f)
+        del manifest["key_paths"]          # downgrade to the v1 format
+        manifest["format_version"] = 1
+        with open(mpath, "w") as f:
+            json.dump(manifest, f)
+        restored, meta = restore(path)
+        assert meta["step"] == 1
+        np.testing.assert_array_equal(np.asarray(restored["a"][1]), np.ones(2))
+        np.testing.assert_array_equal(np.asarray(restored["b"]),
+                                      np.full(3, 2.0))

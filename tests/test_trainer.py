@@ -239,6 +239,21 @@ def test_fit_past_round_budget_is_noop(tiny_problem):
     np.testing.assert_array_equal(np.asarray(again.w), np.asarray(res.w))
 
 
+def test_fit_past_round_budget_still_checkpoints(tiny_problem, tmp_path):
+    """The degenerate start >= rounds return must uphold the "saved
+    checkpoint never lags the returned result" invariant: a restored state
+    handed to a past-budget fit with checkpoint_dir set used to return
+    without ever writing the directory."""
+    solver = make_solver("gd", tiny_problem)
+    res = Trainer(solver, rounds=2, seed=0).fit()
+    ckpt = str(tmp_path / "late")
+    again = Trainer(solver, rounds=2, seed=0,
+                    checkpoint_dir=ckpt).fit(state=res.state)
+    restored = Trainer.restore(ckpt)
+    assert int(restored.round) == int(again.state.round) == 2
+    np.testing.assert_array_equal(np.asarray(restored.w), np.asarray(again.w))
+
+
 # --------------------------------------------------------------------- #
 # retrospective sweep
 # --------------------------------------------------------------------- #
