@@ -40,14 +40,37 @@ computed, capacity from ``cohort_capacity``).  At p=1.0 the cohort knob is
 a compile-time no-op, so that row is the ≈1× sanity anchor; at the paper's
 ~10% participation the cohort path should win by roughly 1/p.
 
+``--virtual`` appends the bounded-memory *virtual data* sweep: the client
+axis pushed to the §1.2 "as many nodes as users" regime, K ∈ {10⁴, 10⁵,
+10⁶} on ``configs.get_virtual_k_config`` — no dataset is ever
+materialized; each scanned chunk's rows are regenerated inside the
+compiled round (``EngineConfig.virtual_data``).  Alongside the round
+latency it records the memory columns that make the claim checkable:
+
+  * ``live_buffer_mb``     — Σ nbytes over ``jax.live_arrays()`` after the
+                             timed rounds: every device buffer the process
+                             retains.  The headline column — it must stay
+                             at per-client *metadata* scale (a few B/client)
+                             while ``est_materialized_mb`` grows ~50x per
+                             K step.
+  * ``est_materialized_mb``— what the same dataset's row arrays would
+                             occupy if generated materialized.
+  * ``rss_mb``             — psutil RSS after the entry's rounds.
+  * ``peak_rss_mb``        — ``ru_maxrss``: the *process-lifetime* high
+                             water mark, i.e. a monotone upper bound shared
+                             by everything that ran before (compiles, other
+                             entries); reported for context, not a per-K
+                             signal.
+
 Writes ``BENCH_round.json`` at the repo root — ≥ 2 problem scales × ≥ 3
 algorithms, median/mean/min round latency per path and the
 dense-vs-fused speedups, so every future PR has a trajectory to be judged
 against.  ``--smoke`` is the CI guard: a tiny config that exercises every
 path end-to-end (run by ``tests/run_tier1.sh`` with a scratch ``--json`` so
 the committed trajectory file is not clobbered; ``--smoke --paper-k`` is the
-budget-guarded large-K variant, and ``--smoke --participation-sweep`` the
-budget-guarded cohort variant — each skips the scale sweep).
+budget-guarded large-K variant, ``--smoke --participation-sweep`` the
+budget-guarded cohort variant, and ``--smoke --virtual`` the budget-guarded
+K=10⁴ virtual variant — each skips the scale sweep).
 """
 from __future__ import annotations
 
@@ -55,14 +78,22 @@ import argparse
 import json
 import math
 import os
+import resource
 import statistics
 import time
 
 import jax
 
-from repro.configs import get_logreg_config, get_paper_k_config
-from repro.core import build_problem, cohort_capacity, make_solver
-from repro.data.synthetic import generate
+try:
+    import psutil
+except ImportError:          # pragma: no cover - env-dependent
+    psutil = None
+
+from repro.configs import (get_logreg_config, get_paper_k_config,
+                           get_virtual_k_config)
+from repro.core import (build_problem, build_virtual_problem,
+                        cohort_capacity, make_solver)
+from repro.data.synthetic import generate, virtual_dataset
 
 REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 DEFAULT_JSON = os.path.join(REPO_ROOT, "BENCH_round.json")
@@ -85,6 +116,38 @@ PAPER_K_BUCKET_ROWS = 20_000
 SWEEP_PARTICIPATIONS = (1.0, 0.3, 0.1)
 SWEEP_PATHS = ("masked_chunked", "cohort_chunked")
 SWEEP_ALGO = "fedavg"
+
+#: the virtual-data client-axis sweep (ascending, so each K's numbers land
+#: before the next, bigger one runs); gd+fedavg up to 10⁵, gd only at 10⁶
+VIRTUAL_KS = (10_000, 100_000, 1_000_000)
+VIRTUAL_ALGOS = ("gd", "fedavg")
+VIRTUAL_GD_ONLY_ABOVE = 100_000
+VIRTUAL_PATH = "compiled_virtual_chunked"
+
+
+def _virtual_closures(algos, pv, chunk: int):
+    """algo -> compiled virtual streamed round on the virtual problem (the
+    solver factories detect ``problem.virtual`` and route their keyed chunk
+    passes through ``EngineConfig.virtual_data``)."""
+    return {algo: make_solver(algo, pv, client_chunk=chunk)._round_fast
+            for algo in algos}
+
+
+def _memory_columns():
+    """(rss_mb, peak_rss_mb, live_buffer_mb) right now — see the module
+    docstring for what each column can and cannot claim."""
+    rss_mb = (psutil.Process().memory_info().rss / 2**20) if psutil else None
+    # ru_maxrss is KB on Linux; process-lifetime monotone high-water mark
+    peak_rss_mb = resource.getrusage(resource.RUSAGE_SELF).ru_maxrss / 1024
+    live_mb = sum(a.nbytes for a in jax.live_arrays()) / 2**20
+    return rss_mb, peak_rss_mb, live_mb
+
+
+def _est_materialized_mb(cfg) -> float:
+    """What generate() would hold for this config: per row, nnz idx (i32) +
+    nnz val (f32) + label (f32) + client id (i32), train + test."""
+    row_bytes = cfg.nnz_per_example * 8 + 8
+    return cfg.num_examples * row_bytes / 2**20
 
 
 def _round_closures(algo: str, prob):
@@ -194,14 +257,24 @@ def main(argv=None):
                          "run ONLY it at reduced budget")
     ap.add_argument("--sweep-participations",
                     default=",".join(str(p) for p in SWEEP_PARTICIPATIONS))
+    ap.add_argument("--virtual", action="store_true",
+                    help="append the virtual-data client-axis sweep "
+                         "(K up to 10^6, rows regenerated on demand); with "
+                         "--smoke, run ONLY it at K=10^4")
+    ap.add_argument("--virtual-ks",
+                    default=",".join(str(k) for k in VIRTUAL_KS))
+    ap.add_argument("--virtual-chunk", type=int, default=2048,
+                    help="client_chunk for the --virtual streamed rounds")
     args = ap.parse_args(argv)
 
     if args.smoke:
-        scales = [] if (args.paper_k or args.participation_sweep) else [0.001]
+        scales = [] if (args.paper_k or args.participation_sweep
+                        or args.virtual) else [0.001]
         algos = ["gd", "fedavg"]
         rounds, repeats = 2, 1
         pk_algos = ["gd", "fedavg"]
         sweep_ps = [0.1]     # budget guard: the headline level only
+        virtual_ks = [10_000]
     else:
         scales = [float(s) for s in args.scales.split(",") if s]
         algos = [a.strip() for a in args.algos.split(",")]
@@ -209,9 +282,10 @@ def main(argv=None):
         pk_algos = list(PAPER_K_ALGOS)
         sweep_ps = [float(p) for p in args.sweep_participations.split(",")
                     if p]
+        virtual_ks = sorted(int(k) for k in args.virtual_ks.split(",") if k)
 
     results = {
-        "schema": 3,
+        "schema": 4,
         "smoke": bool(args.smoke),
         "backend": jax.default_backend(),
         "jax_version": jax.__version__,
@@ -389,6 +463,70 @@ def main(argv=None):
               "cohort-vs-masked "
               "{per_participation_paired_speedup_cohort_vs_masked}"
               .format(**summary))
+
+    if args.virtual:
+        entry = {
+            "scale": "virtual-k-sweep",
+            "client_chunk": args.virtual_chunk,
+            "path": VIRTUAL_PATH,
+            "ks": {},
+        }
+        for K in virtual_ks:
+            vcfg = get_virtual_k_config(K)
+            vds = virtual_dataset(vcfg, seed=args.seed)
+            pv = build_virtual_problem(vds)
+            # 10⁶ is the bounded-memory existence proof, not a latency
+            # horse race: one timed gd round is the budget-sane payload
+            v_algos = [a for a in VIRTUAL_ALGOS
+                       if K <= VIRTUAL_GD_ONLY_ABOVE or a == "gd"]
+            v_rounds = rounds if K <= VIRTUAL_GD_ONLY_ABOVE else 1
+            v_repeats = repeats if K <= VIRTUAL_GD_ONLY_ABOVE else 1
+            closures = _virtual_closures(v_algos, pv, args.virtual_chunk)
+            w0 = jax.numpy.zeros(pv.d)
+            all_samples = _time_rounds(closures, w0, v_rounds, v_repeats)
+            rec = {
+                "clients": int(vcfg.num_clients),
+                "examples": int(vcfg.num_examples),
+                "features": int(vcfg.num_features),
+                "buckets": len(pv.buckets),
+                "rounds_per_repeat": v_rounds,
+                "repeats": v_repeats,
+                "algos": {a: _stats(all_samples[a]) for a in v_algos},
+            }
+            del closures, pv, vds, all_samples, w0
+            rss_mb, peak_rss_mb, live_mb = _memory_columns()
+            rec["rss_mb"] = rss_mb
+            rec["peak_rss_mb"] = peak_rss_mb
+            rec["live_buffer_mb"] = live_mb
+            rec["est_materialized_mb"] = _est_materialized_mb(vcfg)
+            for a in v_algos:
+                s = rec["algos"][a]
+                print(f"virtual-k={K},{a},{VIRTUAL_PATH},"
+                      f"{s['median_s']:.5f},{s['mean_s']:.5f},"
+                      f"{s['min_s']:.5f}")
+            print(f"# virtual-k={K}: live_buffer={live_mb:.1f}MB vs "
+                  f"est_materialized={rec['est_materialized_mb']:.1f}MB "
+                  f"(rss={rss_mb if rss_mb is None else round(rss_mb, 1)}MB, "
+                  f"peak_rss={peak_rss_mb:.1f}MB)")
+            entry["ks"][str(K)] = rec
+        results["configs"].append(entry)
+        largest_k = str(max(virtual_ks))
+        big = entry["ks"][largest_k]
+        results["virtual"] = {
+            "client_chunk": args.virtual_chunk,
+            "largest_k": int(largest_k),
+            "largest_k_median_round_s": {
+                a: s["median_s"] for a, s in big["algos"].items()},
+            "largest_k_live_buffer_mb": big["live_buffer_mb"],
+            "largest_k_est_materialized_mb": big["est_materialized_mb"],
+            "bounded_memory": big["live_buffer_mb"]
+            < 0.25 * big["est_materialized_mb"],
+        }
+        print("# virtual sweep: K={largest_k} round medians "
+              "{largest_k_median_round_s}; live buffers "
+              "{largest_k_live_buffer_mb:.1f}MB vs materialized-estimate "
+              "{largest_k_est_materialized_mb:.1f}MB "
+              "(bounded: {bounded_memory})".format(**results["virtual"]))
 
     with open(args.json, "w") as f:
         json.dump(results, f, indent=1)

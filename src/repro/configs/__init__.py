@@ -40,6 +40,13 @@ def get_paper_k_config():
     return mod.PAPER_K_CONFIG
 
 
+def get_virtual_k_config(num_clients: int):
+    """The virtual-data (on-demand regeneration) config at a chosen K —
+    the §1.2 'as many nodes as users' regime (see gplus_logreg)."""
+    mod = importlib.import_module("repro.configs.gplus_logreg")
+    return mod.get_virtual_k_config(num_clients)
+
+
 def get_fedavg_config():
     mod = importlib.import_module("repro.configs.fedavg_gplus")
     return mod.CONFIG
@@ -68,6 +75,7 @@ def get_gd_config():
 __all__ = [
     "ArchConfig", "InputShape", "MoEConfig", "INPUT_SHAPES", "SHAPES",
     "ARCH_IDS", "get_config", "get_logreg_config", "get_paper_k_config",
+    "get_virtual_k_config",
     "get_fedavg_config", "get_dane_config", "get_cocoa_config",
     "get_fsvrg_config", "get_gd_config",
 ]

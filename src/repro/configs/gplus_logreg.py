@@ -63,3 +63,32 @@ PAPER_K_CONFIG = LogRegConfig(
     max_client_examples=24,
     nnz_per_example=12,
 )
+
+#: The thesis-scale client axis: "as many nodes as there are users of the
+#: service" (§1.2).  d and n_k are kept small enough that a *virtual* round
+#: (rows regenerated on demand inside the scan — EngineConfig.virtual_data)
+#: is CPU-feasible at K up to 10⁶, while materializing the same dataset
+#: at K=10⁶ would be ~4·10⁶ examples of (nnz+2)-wide rows — the regime the
+#: virtual layout exists for.  Use :func:`get_virtual_k_config` to pick K.
+VIRTUAL_K_CONFIG = LogRegConfig(
+    name="gplus-logreg-virtual-k",
+    num_clients=100_000,
+    num_features=202,
+    num_examples=400_000,
+    min_client_examples=2,
+    max_client_examples=8,
+    nnz_per_example=6,
+)
+
+
+def get_virtual_k_config(num_clients: int) -> LogRegConfig:
+    """VIRTUAL_K_CONFIG at a chosen K, total examples tracking 4·K so the
+    per-client size distribution is K-independent."""
+    if num_clients < 8:
+        raise ValueError("num_clients must be >= 8")
+    return dataclasses.replace(
+        VIRTUAL_K_CONFIG,
+        name=f"gplus-logreg-virtual-k{num_clients}",
+        num_clients=num_clients,
+        num_examples=4 * num_clients,
+    )

@@ -23,8 +23,9 @@
   neural.py    — FSVRG/FedAvg for neural-network pytrees over the mesh
 """
 from repro.core.problem import (ClientBucket, FederatedLogReg, LogRegProblem,
+                                VirtualBucket, VirtualFlat, VirtualLayout,
                                 build_dense_problem, build_problem,
-                                build_test_problem)
+                                build_test_problem, build_virtual_problem)
 from repro.core.engine import EngineConfig, RoundEngine, cohort_capacity
 from repro.core.solver import FederatedSolver, SolverState
 from repro.core.registry import available, get_spec, make_solver, register
@@ -37,9 +38,10 @@ from repro.core.cocoa import (CoCoAConfig, CoCoAPlus, DualMethod,
 from repro.core.baselines import DistributedGD
 
 __all__ = [
-    "ClientBucket", "FederatedLogReg", "LogRegProblem", "build_dense_problem",
-    "build_problem", "build_test_problem", "EngineConfig", "RoundEngine",
-    "cohort_capacity",
+    "ClientBucket", "FederatedLogReg", "LogRegProblem", "VirtualBucket",
+    "VirtualFlat", "VirtualLayout", "build_dense_problem", "build_problem",
+    "build_test_problem", "build_virtual_problem", "EngineConfig",
+    "RoundEngine", "cohort_capacity",
     "FederatedSolver", "SolverState",
     "available", "get_spec", "make_solver", "register",
     "FitResult", "Trainer", "sweep",

@@ -58,15 +58,18 @@ class DistributedGD(FederatedSolver):
                  aggregator: str = "dense",
                  client_chunk: Optional[int] = None,
                  participation: float = 1.0,
-                 cohort: Optional[int] = None):
+                 cohort: Optional[int] = None,
+                 virtual_data: bool = False):
         self.problem = problem
         self.stepsize = stepsize
+        virtual = virtual_data or problem.virtual is not None
         self.engine = RoundEngine(problem,
                                   EngineConfig(aggregator=aggregator,
                                                client_chunk=client_chunk,
                                                participation=participation,
-                                               cohort=cohort))
-        self._passes = [
+                                               cohort=cohort,
+                                               virtual_data=virtual))
+        self._passes = [] if virtual else [
             jax.jit(functools.partial(_gd_client_pass, bucket=b,
                                       lam=problem.flat.lam, stepsize=stepsize))
             for b in problem.buckets
@@ -78,7 +81,8 @@ class DistributedGD(FederatedSolver):
             w, cb, problem.flat.lam, stepsize)
         self._round_fast = self.engine.compile(gd_pass,
                                                chunk_pass=gd_chunk_pass)
-        self._round_ref = self.engine.reference(gd_pass)
+        self._round_ref = self.engine.reference(gd_pass,
+                                                chunk_pass=gd_chunk_pass)
 
     @property
     def hyperparams(self):

@@ -140,6 +140,11 @@ class CoCoAConfig:
     # under partial participation, compute only the sampled cohort (padded
     # to this per-bucket capacity; see EngineConfig.cohort / cohort_capacity)
     cohort: Optional[int] = None
+    # run on a build_virtual_problem layout: rows regenerate on demand
+    # inside the round (see EngineConfig.virtual_data; auto-detected).  The
+    # dual blocks α_k stay materialized — they are the algorithm's own
+    # state, not the dataset's.
+    virtual_data: bool = False
 
 
 class CoCoAPlus(FederatedSolver):
@@ -172,7 +177,8 @@ class CoCoAPlus(FederatedSolver):
         n = problem.flat.n
         lam = problem.flat.lam
         self._scale = 1.0 / (lam * n)
-        self._pass = [
+        virtual = cfg.virtual_data or problem.virtual is not None
+        self._pass = [] if virtual else [
             jax.jit(lambda w, a, key, b=b: _sdca_local_pass(
                 w, a, b, lam, n, self.sigma, use_kernel, key))
             for b in problem.buckets
@@ -182,7 +188,8 @@ class CoCoAPlus(FederatedSolver):
             EngineConfig(weighting="sum", participation=cfg.participation,
                          aggregator=cfg.aggregator,
                          client_chunk=cfg.client_chunk,
-                         cohort=cfg.cohort),
+                         cohort=cfg.cohort,
+                         virtual_data=virtual),
         )
 
         def cocoa_pass(w, bi, bucket, alpha_b, kb):
@@ -196,7 +203,8 @@ class CoCoAPlus(FederatedSolver):
 
         self._round_fast = self.engine.compile_with_state(
             cocoa_pass, chunk_pass=cocoa_chunk_pass)
-        self._round_ref = self.engine.reference_with_state(cocoa_pass)
+        self._round_ref = self.engine.reference_with_state(
+            cocoa_pass, chunk_pass=cocoa_chunk_pass)
 
     def init(self, w0: Optional[jax.Array] = None) -> SolverState:
         if w0 is not None and bool(jnp.any(w0 != 0)):

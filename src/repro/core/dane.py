@@ -73,6 +73,9 @@ class DANEConfig:
     # under partial participation, compute only the sampled cohort (padded
     # to this per-bucket capacity; see EngineConfig.cohort / cohort_capacity)
     cohort: Optional[int] = None
+    # run on a build_virtual_problem layout: rows regenerate on demand
+    # inside the round (see EngineConfig.virtual_data; auto-detected)
+    virtual_data: bool = False
 
     def __post_init__(self):
         if self.local_solver not in _SOLVERS:
@@ -190,7 +193,10 @@ class DANE(FederatedSolver):
         if use_kernel is None:
             use_kernel = jax.default_backend() == "tpu"
         lam = problem.flat.lam
-        if cfg.local_solver == "gd":
+        virtual = cfg.virtual_data or problem.virtual is not None
+        if virtual:
+            self._passes = []
+        elif cfg.local_solver == "gd":
             self._passes = [
                 jax.jit(functools.partial(_dane_gd_pass, bucket=b, lam=lam,
                                           cfg=cfg, use_kernel=use_kernel))
@@ -207,7 +213,8 @@ class DANE(FederatedSolver):
             EngineConfig(participation=cfg.participation, weighting="uniform",
                          aggregator=cfg.aggregator,
                          client_chunk=cfg.client_chunk,
-                         cohort=cfg.cohort),
+                         cohort=cfg.cohort,
+                         virtual_data=virtual),
         )
 
         # Alg. 2 step 1's full gradient is the eager prelude (its own round
@@ -227,7 +234,8 @@ class DANE(FederatedSolver):
         prelude = lambda w: (self.problem.flat.grad(w),)
         self._round_fast = self.engine.compile(dane_pass, prelude=prelude,
                                                chunk_pass=dane_chunk_pass)
-        self._round_ref = self.engine.reference(dane_pass, prelude=prelude)
+        self._round_ref = self.engine.reference(dane_pass, prelude=prelude,
+                                                chunk_pass=dane_chunk_pass)
 
     def round(self, state: SolverState, key: jax.Array) -> SolverState:
         return state.replace(w=self._round_fast(state.w, key),

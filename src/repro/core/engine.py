@@ -87,6 +87,23 @@ reference; a capacity-overflowing draw falls back per-bucket to the
 masked pass via ``lax.cond``.  ``compile``/``compile_with_state`` trace
 the cohort body whenever ``cohort`` is set and participation < 1.0,
 composing with ``client_chunk`` (the gathered cohort is streamed).
+
+Streaming and cohorts bound the *compute* and *delta* memory, but the
+bucket rows themselves were still materialized up front — O(n·nnz), the
+last axis that breaks at the paper's thesis scale ("as many nodes as
+users of the service": K=10⁶).  ``EngineConfig.virtual_data`` removes it:
+the problem carries a :class:`~repro.core.problem.VirtualLayout`
+(``build_virtual_problem``) whose buckets hold only (client_ids, n_k,
+m_pad), and every round path **regenerates the rows it is about to
+consume inside the traced body** — the streamed path materializes one
+chunk's rows per ``lax.scan`` step (peak data memory
+O(client_chunk·m_pad·nnz) regardless of K), the cohort path generates
+rows only for the gathered cohort, and the plain paths realize one
+bucket at a time.  The per-client seeding contract
+(``fold_in(base, k)`` per client, ``fold_in`` per row) makes regenerated
+rows bit-for-bit equal to the materialized dataset's, so virtual rounds
+match materialized rounds exactly per client and to float tolerance on
+iterates (the usual summation-order calibration).
 """
 from __future__ import annotations
 
@@ -98,7 +115,7 @@ from typing import Any, Callable, List, Optional, Sequence, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.problem import ClientBucket, FederatedLogReg
+from repro.core.problem import ClientBucket, FederatedLogReg, VirtualBucket
 
 #: client_pass(w, bucket_index, bucket, key) -> (Kb, d) deltas w_k - w
 ClientPassFn = Callable[[jax.Array, int, ClientBucket, jax.Array], jax.Array]
@@ -153,6 +170,12 @@ class EngineConfig:
     # the masked full-bucket pass for that bucket (lax.cond), so results
     # never depend on the capacity.  No-op at participation=1.0.
     cohort: Optional[int] = None
+    # False -> buckets carry materialized rows (ClientBucket).  True -> the
+    # problem was built by build_virtual_problem: buckets are VirtualBucket
+    # specs and every round path regenerates the rows it consumes inside
+    # the traced body through problem.virtual — one chunk (or one gathered
+    # cohort) at a time, so peak data memory is independent of K.
+    virtual_data: bool = False
 
     @staticmethod
     def _check_optional_count(value, name: str):
@@ -174,6 +197,8 @@ class EngineConfig:
             raise ValueError("participation must be in (0, 1]")
         self._check_optional_count(self.client_chunk, "client_chunk")
         self._check_optional_count(self.cohort, "cohort")
+        if not isinstance(self.virtual_data, bool):
+            raise ValueError("virtual_data must be a bool")
 
 
 @functools.partial(jax.jit, static_argnames=("scaled",))
@@ -226,6 +251,17 @@ class RoundEngine:
         self.cfg = cfg
         if cfg.server_scaling == "diag" and a_diag is None:
             raise ValueError("server_scaling='diag' requires an a_diag")
+        layout = getattr(problem, "virtual", None)
+        if cfg.virtual_data and layout is None:
+            raise ValueError(
+                "virtual_data=True requires a problem built by "
+                "build_virtual_problem (problem.virtual is the layout)")
+        if layout is not None and not cfg.virtual_data:
+            raise ValueError(
+                "the problem carries a virtual layout (no materialized "
+                "rows); set EngineConfig(virtual_data=True) to run rounds "
+                "on it")
+        self._virtual = layout if cfg.virtual_data else None
         self.a_diag = jnp.ones((problem.d,)) if a_diag is None else a_diag
         # per-bucket first-client index — the fold_in offset of every bucket's
         # round key, precomputed once so compiled rounds close over constants
@@ -235,6 +271,15 @@ class RoundEngine:
             offsets.append(wi)
             wi += b.num_clients
         self._offsets = tuple(offsets)
+
+    def _realize(self, bucket):
+        """Materialize a virtual bucket's rows through the problem's
+        layout (traceable — this is the call that runs *inside* scan/cond
+        bodies so only the about-to-be-consumed rows are ever live).
+        No-op on an already-materialized :class:`ClientBucket`."""
+        if self._virtual is not None and isinstance(bucket, VirtualBucket):
+            return self._virtual.realize(bucket)
+        return bucket
 
     # -- step 3: sampling & weighting ------------------------------------- #
 
@@ -360,7 +405,7 @@ class RoundEngine:
         deltas: List[jax.Array] = []
         for bi, (wi, b) in enumerate(zip(self._offsets, self.problem.buckets)):
             kb = jax.random.fold_in(key, wi)
-            deltas.append(client_pass(w, bi, b, kb))
+            deltas.append(client_pass(w, bi, self._realize(b), kb))
         return self.aggregate(w, deltas, key,
                               masks=self.participation_masks(key))
 
@@ -387,7 +432,7 @@ class RoundEngine:
         new_states: List[Any] = []
         for bi, (wi, b) in enumerate(zip(self._offsets, self.problem.buckets)):
             kb = jax.random.fold_in(key, wi)
-            d_b, s_b = client_pass(w, bi, b, states[bi], kb)
+            d_b, s_b = client_pass(w, bi, self._realize(b), states[bi], kb)
             if masks is not None:
                 sel = masks[bi]
                 s_b = jax.tree_util.tree_map(
@@ -430,7 +475,15 @@ class RoundEngine:
         streams a *gathered* bucket and must hand each gathered client the
         key it would have received at its original position, not a fresh
         ``split`` over the gathered axis.
+
+        Under ``virtual_data`` the scan carries (client_ids, n_k) instead
+        of rows, and the body regenerates the chunk's rows through the
+        problem's :class:`~repro.core.problem.VirtualLayout` before the
+        pass — only one (chunk, m_pad, nnz) row block is ever live, so
+        peak data memory is independent of K.
         """
+        virtual = (self._virtual is not None
+                   and isinstance(bucket, VirtualBucket))
         Kb = bucket.num_clients
         chunk = min(self.cfg.client_chunk, Kb)
         pad = (-Kb) % chunk
@@ -447,20 +500,34 @@ class RoundEngine:
             x = self._pad_clients(x, pad)
             return x.reshape((nch, chunk) + x.shape[1:])
 
-        xs = {
-            "idx": chunked(bucket.idx), "val": chunked(bucket.val),
-            "y": chunked(bucket.y), "n_k": chunked(bucket.n_k),
-            "keys": keys.reshape((nch, chunk) + keys.shape[1:]),
-            "wts": chunked(wts),
-        }
+        if virtual:
+            # padded clients have cid 0 but n_k 0 — client_rows_padded
+            # zeroes all their rows, so they are exact no-ops downstream
+            xs = {
+                "cid": chunked(bucket.client_ids),
+                "n_k": chunked(bucket.n_k),
+                "keys": keys.reshape((nch, chunk) + keys.shape[1:]),
+                "wts": chunked(wts),
+            }
+        else:
+            xs = {
+                "idx": chunked(bucket.idx), "val": chunked(bucket.val),
+                "y": chunked(bucket.y), "n_k": chunked(bucket.n_k),
+                "keys": keys.reshape((nch, chunk) + keys.shape[1:]),
+                "wts": chunked(wts),
+            }
         if state_b is not None:
             xs["state"] = jax.tree_util.tree_map(chunked, state_b)
         if sel is not None:
             xs["sel"] = chunked(sel)
         fused = self.cfg.aggregator == "pallas"
+        m_pad = bucket.m_pad
 
         def body(acc, x):
-            cb = ClientBucket(x["idx"], x["val"], x["y"], x["n_k"])
+            if virtual:
+                cb = self._virtual.materialize(x["cid"], x["n_k"], m_pad)
+            else:
+                cb = ClientBucket(x["idx"], x["val"], x["y"], x["n_k"])
             if state_b is None:
                 deltas = chunk_pass(w, bi, cb, x["keys"])
                 s_new = None
@@ -487,6 +554,10 @@ class RoundEngine:
         return acc, new_state
 
     def _streamed_round(self, w, key, chunk_pass, states, masks):
+        # The keyed-chunk-pass round body: per-bucket work goes through
+        # _masked_bucket, which streams when cfg.client_chunk is set and
+        # otherwise runs the direct keyed pass over the (realized) bucket —
+        # so this one body serves round_streamed AND round_virtual.
         cfg = self.cfg
         reweight = self._reweightable(masks)
         acc = jnp.zeros_like(w)
@@ -502,9 +573,10 @@ class RoundEngine:
                     total_mass = total_mass + (wts * sel).sum()
                     expected_mass = expected_mass + wts.sum()
                 wts = wts * sel
-            acc_b, s_b = self._stream_bucket(
-                w, bi, b, kb, wts, chunk_pass,
-                state_b=states[bi] if states is not None else None, sel=sel)
+            acc_b, s_b = self._masked_bucket(
+                w, bi, b, kb, self.client_keys(kb, b.num_clients), wts, sel,
+                chunk_pass,
+                state_b=states[bi] if states is not None else None)
             acc = acc + acc_b
             if new_states is not None:
                 new_states.append(s_b)
@@ -548,6 +620,38 @@ class RoundEngine:
         return self._streamed_round(w, key, chunk_pass, list(states),
                                     self.participation_masks(key))
 
+    # -- the virtual round: rows regenerated inside the traced body --------- #
+
+    def round_virtual(self, w: jax.Array, key: jax.Array,
+                      chunk_pass: ChunkClientPassFn) -> jax.Array:
+        """:meth:`round` over on-demand data: each bucket's rows are
+        regenerated through the problem's virtual layout inside the round
+        body — chunk-by-chunk under ``lax.scan`` when ``client_chunk`` is
+        set (peak data memory O(client_chunk·m_pad·nnz), the K=10⁶
+        regime), one whole bucket at a time otherwise.  Same weighting /
+        participation / key chain as :meth:`round`; per-client quantities
+        are bit-for-bit (regenerated rows ARE the materialized rows),
+        iterates match to float tolerance (summation order).
+        """
+        if not self.cfg.virtual_data:
+            raise ValueError("round_virtual requires cfg.virtual_data")
+        w_next, _ = self._streamed_round(w, key, chunk_pass, None,
+                                         self.participation_masks(key))
+        return w_next
+
+    def round_virtual_with_state(self, w: jax.Array, states: Sequence[Any],
+                                 key: jax.Array,
+                                 chunk_pass: DualChunkClientPassFn
+                                 ) -> Tuple[jax.Array, List[Any]]:
+        """:meth:`round_with_state` over on-demand data — aux state still
+        lives materialized (it is O(K·m_pad), the algorithm's own memory,
+        not the dataset's); only the rows are regenerated."""
+        if not self.cfg.virtual_data:
+            raise ValueError("round_virtual_with_state requires "
+                             "cfg.virtual_data")
+        return self._streamed_round(w, key, chunk_pass, list(states),
+                                    self.participation_masks(key))
+
     # -- the cohort round: O(participation · K) client passes --------------- #
 
     def _bucket_accumulate(self, w, deltas, wts):
@@ -569,6 +673,7 @@ class RoundEngine:
         if self.cfg.client_chunk is not None:
             return self._stream_bucket(w, bi, bucket, kb, wtsz, chunk_pass,
                                        state_b=state_b, sel=sel, keys=keys)
+        bucket = self._realize(bucket)
         if state_b is None:
             deltas = chunk_pass(w, bi, bucket, keys)
             s_new = None
@@ -619,9 +724,17 @@ class RoundEngine:
         def cohort_branch(_):
             gidx = jnp.nonzero(sel > 0, size=cap, fill_value=0)[0]
             valid = jnp.arange(cap) < count
-            g_bucket = ClientBucket(bucket.idx[gidx], bucket.val[gidx],
-                                    bucket.y[gidx],
-                                    jnp.where(valid, bucket.n_k[gidx], 0))
+            if self._virtual is not None and isinstance(bucket, VirtualBucket):
+                # gather only the cohort's *identities*; their rows are
+                # regenerated below (realize / the streamed body) — data is
+                # only ever produced for the O(cap) sampled clients
+                g_bucket = VirtualBucket(
+                    bucket.client_ids[gidx],
+                    jnp.where(valid, bucket.n_k[gidx], 0), bucket.m_pad)
+            else:
+                g_bucket = ClientBucket(bucket.idx[gidx], bucket.val[gidx],
+                                        bucket.y[gidx],
+                                        jnp.where(valid, bucket.n_k[gidx], 0))
             g_keys = keys[gidx]
             g_wts = jnp.where(valid, wtsz[gidx], 0.0)
             g_state = None if state_b is None else jax.tree_util.tree_map(
@@ -632,10 +745,12 @@ class RoundEngine:
                     state_b=g_state, sel=None, keys=g_keys)
             elif state_b is None:
                 acc_b = self._bucket_accumulate(
-                    w, chunk_pass(w, bi, g_bucket, g_keys), g_wts)
+                    w, chunk_pass(w, bi, self._realize(g_bucket), g_keys),
+                    g_wts)
                 s_new = None
             else:
-                deltas, s_new = chunk_pass(w, bi, g_bucket, g_state, g_keys)
+                deltas, s_new = chunk_pass(w, bi, self._realize(g_bucket),
+                                           g_state, g_keys)
                 acc_b = self._bucket_accumulate(w, deltas, g_wts)
             if state_b is None:
                 return acc_b, None
@@ -730,9 +845,9 @@ class RoundEngine:
     def _require_chunk_pass(self, chunk_pass):
         if chunk_pass is None:
             raise ValueError(
-                "cfg.client_chunk/cfg.cohort is set but no chunk_pass was "
-                "supplied — streamed and cohort rounds need the "
-                "per-client-keyed chunk pass "
+                "cfg.client_chunk/cfg.cohort/cfg.virtual_data is set but no "
+                "chunk_pass was supplied — streamed, cohort, and virtual "
+                "rounds need the per-client-keyed chunk pass "
                 "(chunk_pass(w, bi, chunk_bucket, keys, *ctx))")
         return chunk_pass
 
@@ -773,6 +888,13 @@ class RoundEngine:
         ``chunk_pass``: only the sampled clients' passes run — composed
         with ``client_chunk`` when both are set (the gathered cohort is
         streamed in chunks).
+
+        Under ``cfg.virtual_data``, every dispatched body regenerates rows
+        on demand (the cohort body generates only the gathered cohort's
+        rows, the streamed body one chunk's rows per scan step); with
+        neither ``cohort`` nor ``client_chunk`` set the jitted body is
+        :meth:`round_virtual` over ``chunk_pass`` — bucket-at-a-time
+        regeneration.
         """
         donate_args = (0,) if self._should_donate(donate) else ()
 
@@ -792,6 +914,14 @@ class RoundEngine:
                 return self.round_streamed(
                     w, key,
                     lambda w_, bi, cb, ks: c_pass(w_, bi, cb, ks, *ctx))
+        elif self.cfg.virtual_data:
+            c_pass = self._require_chunk_pass(chunk_pass)
+
+            @functools.partial(jax.jit, donate_argnums=donate_args)
+            def _body(w, ctx, key):
+                return self.round_virtual(
+                    w, key,
+                    lambda w_, bi, cb, ks: c_pass(w_, bi, cb, ks, *ctx))
         else:
 
             @functools.partial(jax.jit, donate_argnums=donate_args)
@@ -807,10 +937,27 @@ class RoundEngine:
         return compiled_round
 
     def reference(self, client_pass: Callable, *,
-                  prelude: Optional[Callable] = None) -> Callable:
+                  prelude: Optional[Callable] = None,
+                  chunk_pass: Optional[Callable] = None) -> Callable:
         """The eager twin of :meth:`compile` — same calling convention,
         Python-loop dispatch through :meth:`round`.  The pin tests (and the
-        round-latency benchmark's "eager dense" baseline) call this."""
+        round-latency benchmark's "eager dense" baseline) call this.
+
+        Under ``cfg.virtual_data`` there are no per-bucket closures to
+        reference (the rows don't exist until a round asks for them), so
+        the eager path runs :meth:`round_virtual` over ``chunk_pass`` —
+        bucket-at-a-time regeneration, Python-loop dispatch."""
+        if self.cfg.virtual_data:
+            c_pass = self._require_chunk_pass(chunk_pass)
+
+            def reference_round(w, key):
+                ctx = tuple(prelude(w)) if prelude is not None else ()
+                return self.round_virtual(
+                    w, key,
+                    lambda w_, bi, cb, ks: c_pass(w_, bi, cb, ks, *ctx))
+
+            return reference_round
+
         def reference_round(w, key):
             ctx = tuple(prelude(w)) if prelude is not None else ()
             return self.round(
@@ -855,6 +1002,16 @@ class RoundEngine:
                     lambda w_, bi, cb, s_c, ks: c_pass(w_, bi, cb, s_c, ks,
                                                        *ctx))
                 return w2, tuple(new_states)
+        elif self.cfg.virtual_data:
+            c_pass = self._require_chunk_pass(chunk_pass)
+
+            @functools.partial(jax.jit, donate_argnums=donate_args)
+            def _body(w, states, ctx, key):
+                w2, new_states = self.round_virtual_with_state(
+                    w, list(states), key,
+                    lambda w_, bi, cb, s_c, ks: c_pass(w_, bi, cb, s_c, ks,
+                                                       *ctx))
+                return w2, tuple(new_states)
         else:
 
             @functools.partial(jax.jit, donate_argnums=donate_args)
@@ -872,8 +1029,24 @@ class RoundEngine:
         return compiled_round
 
     def reference_with_state(self, dual_pass: Callable, *,
-                             prelude: Optional[Callable] = None) -> Callable:
-        """The eager twin of :meth:`compile_with_state`."""
+                             prelude: Optional[Callable] = None,
+                             chunk_pass: Optional[Callable] = None
+                             ) -> Callable:
+        """The eager twin of :meth:`compile_with_state` (see
+        :meth:`reference` for the ``virtual_data`` dispatch)."""
+        if self.cfg.virtual_data:
+            c_pass = self._require_chunk_pass(chunk_pass)
+
+            def reference_round(w, states, key):
+                ctx = tuple(prelude(w)) if prelude is not None else ()
+                w2, new_states = self.round_virtual_with_state(
+                    w, list(states), key,
+                    lambda w_, bi, cb, s_c, ks: c_pass(w_, bi, cb, s_c, ks,
+                                                       *ctx))
+                return w2, tuple(new_states)
+
+            return reference_round
+
         def reference_round(w, states, key):
             ctx = tuple(prelude(w)) if prelude is not None else ()
             w2, new_states = self.round_with_state(

@@ -53,6 +53,9 @@ class FedAvgConfig:
     # under partial participation, compute only the sampled cohort (padded
     # to this per-bucket capacity; see EngineConfig.cohort / cohort_capacity)
     cohort: Optional[int] = None
+    # run on a build_virtual_problem layout: rows regenerate on demand
+    # inside the round (see EngineConfig.virtual_data; auto-detected)
+    virtual_data: bool = False
 
 
 def _local_sgd_pass(w0, bucket: ClientBucket, lam, cfg: FedAvgConfig,
@@ -111,7 +114,8 @@ class FedAvg(FederatedSolver):
         use_kernel = cfg.use_kernel
         if use_kernel is None:
             use_kernel = jax.default_backend() == "tpu"
-        self._passes = [
+        virtual = cfg.virtual_data or problem.virtual is not None
+        self._passes = [] if virtual else [
             jax.jit(functools.partial(_local_sgd_pass, bucket=b,
                                       lam=problem.flat.lam, cfg=cfg,
                                       use_kernel=use_kernel))
@@ -125,6 +129,7 @@ class FedAvg(FederatedSolver):
                 aggregator=cfg.aggregator,
                 client_chunk=cfg.client_chunk,
                 cohort=cfg.cohort,
+                virtual_data=virtual,
             ),
         )
 
@@ -137,7 +142,8 @@ class FedAvg(FederatedSolver):
 
         self._round_fast = self.engine.compile(fedavg_pass,
                                                chunk_pass=fedavg_chunk_pass)
-        self._round_ref = self.engine.reference(fedavg_pass)
+        self._round_ref = self.engine.reference(fedavg_pass,
+                                                chunk_pass=fedavg_chunk_pass)
 
     def round(self, state: SolverState, key: jax.Array) -> SolverState:
         return state.replace(w=self._round_fast(state.w, key),

@@ -58,6 +58,10 @@ class FSVRGConfig:
     # under partial participation, compute only the sampled cohort (padded
     # to this per-bucket capacity; see EngineConfig.cohort / cohort_capacity)
     cohort: Optional[int] = None
+    # run on a build_virtual_problem layout: rows regenerate on demand
+    # inside the round (see EngineConfig.virtual_data).  Auto-detected from
+    # the problem, so passing a virtual problem is enough.
+    virtual_data: bool = False
 
 
 def _client_pass(w0, full_grad, bucket: ClientBucket, lam, phi, cfg: FSVRGConfig, key):
@@ -130,9 +134,12 @@ class FSVRG(FederatedSolver):
         self.name = "svrg_naive" if cfg.naive else "fsvrg"
         flat = problem.flat
         n = flat.n
+        virtual = cfg.virtual_data or problem.virtual is not None
         self.phi = scaling.global_feature_counts(flat) / n
         self.a_diag = scaling.aggregation_diag(problem) if cfg.use_A else jnp.ones((problem.d,))
-        self._passes = [
+        # virtual problems have no materialized buckets to close over — all
+        # round paths go through the keyed chunk pass instead
+        self._passes = [] if virtual else [
             jax.jit(functools.partial(_client_pass, bucket=b, lam=flat.lam, cfg=cfg))
             for b in problem.buckets
         ]
@@ -146,6 +153,7 @@ class FSVRG(FederatedSolver):
                 aggregator=cfg.aggregator,
                 client_chunk=cfg.client_chunk,
                 cohort=cfg.cohort,
+                virtual_data=virtual,
             ),
             a_diag=self.a_diag,
         )
@@ -163,7 +171,8 @@ class FSVRG(FederatedSolver):
         prelude = lambda w: (self.problem.flat.grad(w),)
         self._round_fast = self.engine.compile(fsvrg_pass, prelude=prelude,
                                                chunk_pass=fsvrg_chunk_pass)
-        self._round_ref = self.engine.reference(fsvrg_pass, prelude=prelude)
+        self._round_ref = self.engine.reference(fsvrg_pass, prelude=prelude,
+                                                chunk_pass=fsvrg_chunk_pass)
 
     def round(self, state: SolverState, key: jax.Array) -> SolverState:
         return state.replace(w=self._round_fast(state.w, key),

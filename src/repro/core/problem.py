@@ -10,7 +10,7 @@ passes run as `vmap(scan)` — the production answer to the paper's
 from __future__ import annotations
 
 import dataclasses
-from typing import List
+from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -75,13 +75,203 @@ class ClientBucket:
 
 
 @dataclasses.dataclass(frozen=True)
+class VirtualBucket:
+    """A bucket of *virtual* clients: who they are and how many rows they
+    have, but no rows — those regenerate on demand from the client ids
+    (see :class:`VirtualLayout`).  Mirrors :class:`ClientBucket`'s
+    ``num_clients``/``m_pad``/``n_k`` surface so engine bookkeeping
+    (weights, offsets, masks) is layout-blind.
+    """
+
+    client_ids: jax.Array    # (Kb,) int32 global client ids
+    n_k: jax.Array           # (Kb,) int32 true TRAIN sizes
+    m_pad: int
+
+    @property
+    def num_clients(self) -> int:
+        return self.n_k.shape[0]
+
+
+@dataclasses.dataclass(frozen=True)
+class VirtualLayout:
+    """The bridge from virtual buckets to the rows the client passes eat.
+
+    Wraps the :class:`~repro.data.synthetic.VirtualDataset` spec;
+    ``materialize`` is traceable, so the engine can call it *inside* a
+    ``lax.scan`` body to regenerate just one chunk's (or one gathered
+    cohort's) rows — peak data memory O(chunk · m_pad · nnz) regardless
+    of K.
+    """
+
+    vds: Any   # repro.data.synthetic.VirtualDataset
+
+    def materialize(self, client_ids, n_k, m_pad: int) -> ClientBucket:
+        idx, val, y = self.vds.client_rows_padded(client_ids, n_k, m_pad)
+        return ClientBucket(idx, val, y, jnp.asarray(n_k, jnp.int32))
+
+    def realize(self, vb: VirtualBucket) -> ClientBucket:
+        return self.materialize(vb.client_ids, vb.n_k, vb.m_pad)
+
+
+class VirtualFlat:
+    """Flat-view twin over virtual data, streamed in client chunks.
+
+    Provides what solvers and scaling actually consume from
+    :class:`LogRegProblem` — ``lam``/``n``/``num_features``,
+    ``grad``/``loss``/``error_rate`` — plus exact ``feature_counts``/
+    ``omega`` for FSVRG's diagonal scalings, all computed by regenerating
+    ``eval_chunk`` clients at a time inside a ``lax.scan`` (O(chunk·m_pad)
+    live rows, never the full (n, nnz) arrays).  Per-row quantities use the
+    exact :class:`LogRegProblem` expressions (``g_scalar = -y·σ(-z)/n``
+    *before* the scatter), so only cross-row summation order differs from
+    the materialized flat view — iterate-level parity is tight-tolerance,
+    per-count quantities (feature_counts, omega, error counts) are exact.
+    """
+
+    def __init__(self, layout: VirtualLayout, buckets: List[VirtualBucket],
+                 lam: float, num_features: int, n: int,
+                 eval_chunk: int = 256):
+        self.layout = layout
+        self.lam = float(lam)
+        self.num_features = int(num_features)
+        self._n = int(n)
+        self.eval_chunk = int(eval_chunk)
+        # per-bucket (cids, nks) padded to a whole number of chunks; padded
+        # clients have n_k == 0, so client_rows_padded zeroes all their rows
+        # (idx 0 / val 0 / y 1) and they drop out of every masked reduction
+        self._chunks: List[Tuple[jax.Array, jax.Array, int]] = []
+        for vb in buckets:
+            chunk = min(self.eval_chunk, vb.num_clients)
+            nch = -(-vb.num_clients // chunk)
+            pad = nch * chunk - vb.num_clients
+            cid = jnp.concatenate(
+                [vb.client_ids, jnp.zeros((pad,), vb.client_ids.dtype)])
+            nk = jnp.concatenate([vb.n_k, jnp.zeros((pad,), vb.n_k.dtype)])
+            self._chunks.append((cid.reshape(nch, chunk),
+                                 nk.reshape(nch, chunk), vb.m_pad))
+        self._stats_fns: Dict[int, Any] = {}
+        self._count_fns: Dict[int, Any] = {}
+
+    @property
+    def n(self) -> int:
+        return self._n
+
+    def margins(self, w: jax.Array) -> jax.Array:
+        raise NotImplementedError(
+            "VirtualFlat has no materialized row axis; use loss/grad/"
+            "error_rate, which stream over regenerated client chunks.")
+
+    def _stats_fn(self, m_pad: int):
+        fn = self._stats_fns.get(m_pad)
+        if fn is None:
+            vds, n, d = self.layout.vds, self._n, self.num_features
+
+            @jax.jit
+            def fn(w, cids, nks):
+                def body(carry, x):
+                    g, ls, err = carry
+                    cid, nk = x
+                    idx, val, y = vds.client_rows_padded(cid, nk, m_pad)
+                    mask = (jnp.arange(m_pad)[None, :]
+                            < nk[:, None]).astype(jnp.float32)
+                    margins = (val * w[idx]).sum(-1)
+                    z = y * margins
+                    g_scalar = -y * jax.nn.sigmoid(-z) / n
+                    g = g.at[idx].add((g_scalar * mask)[..., None] * val)
+                    ls = ls + (jax.nn.softplus(-z) * mask).sum()
+                    preds = jnp.where(margins >= 0, 1.0, -1.0)
+                    err = err + ((preds != y).astype(jnp.float32)
+                                 * mask).sum()
+                    return (g, ls, err), None
+
+                init = (jnp.zeros((d,), w.dtype), jnp.float32(0.0),
+                        jnp.float32(0.0))
+                (g, ls, err), _ = jax.lax.scan(body, init, (cids, nks))
+                return g, ls, err
+
+            self._stats_fns[m_pad] = fn
+        return fn
+
+    def _stats(self, w: jax.Array):
+        g = jnp.zeros((self.num_features,), jnp.float32)
+        ls = jnp.float32(0.0)
+        err = jnp.float32(0.0)
+        for cids, nks, m_pad in self._chunks:
+            bg, bl, be = self._stats_fn(m_pad)(w, cids, nks)
+            g, ls, err = g + bg, ls + bl, err + be
+        return g, ls, err
+
+    def grad(self, w: jax.Array) -> jax.Array:
+        return self._stats(w)[0] + self.lam * w
+
+    def loss(self, w: jax.Array) -> jax.Array:
+        return (self._stats(w)[1] / self._n
+                + 0.5 * self.lam * jnp.dot(w, w))
+
+    def error_rate(self, w: jax.Array) -> jax.Array:
+        return self._stats(w)[2] / self._n
+
+    def _count_fn(self, m_pad: int):
+        fn = self._count_fns.get(m_pad)
+        if fn is None:
+            vds, d = self.layout.vds, self.num_features
+
+            @jax.jit
+            def fn(cids, nks):
+                def body(carry, x):
+                    cnt, om = carry
+                    cid, nk = x
+                    idx, val, _ = vds.client_rows_padded(cid, nk, m_pad)
+                    nz = (val != 0).astype(jnp.float32)
+                    cnt = cnt.at[idx].add(nz)
+                    chunk = cid.shape[0]
+                    pres = jnp.zeros((chunk, d), jnp.float32).at[
+                        jnp.arange(chunk)[:, None, None], idx].add(nz)
+                    om = om + (pres > 0).astype(jnp.float32).sum(0)
+                    return (cnt, om), None
+
+                init = (jnp.zeros((d,), jnp.float32),
+                        jnp.zeros((d,), jnp.float32))
+                (cnt, om), _ = jax.lax.scan(body, init, (cids, nks))
+                return cnt, om
+
+            self._count_fns[m_pad] = fn
+        return fn
+
+    def _counts(self):
+        cnt = jnp.zeros((self.num_features,), jnp.float32)
+        om = jnp.zeros((self.num_features,), jnp.float32)
+        for cids, nks, m_pad in self._chunks:
+            bc, bo = self._count_fn(m_pad)(cids, nks)
+            cnt, om = cnt + bc, om + bo
+        return cnt, om
+
+    def feature_counts(self) -> jax.Array:
+        """#examples with feature j present — the materialized
+        ``scaling.global_feature_counts`` streamed (exact: integer sums)."""
+        return self._counts()[0]
+
+    def omega(self) -> jax.Array:
+        """#clients with feature j present — the materialized
+        ``scaling.omega`` streamed (exact: integer sums)."""
+        return self._counts()[1]
+
+
+@dataclasses.dataclass(frozen=True)
 class FederatedLogReg:
-    """The problem as the algorithms see it: flat view + client buckets."""
+    """The problem as the algorithms see it: flat view + client buckets.
+
+    When ``virtual`` is set (see :func:`build_virtual_problem`), ``flat``
+    is a :class:`VirtualFlat` and ``buckets`` hold :class:`VirtualBucket`
+    specs; the engine materializes rows on demand through ``virtual``
+    under ``EngineConfig.virtual_data``.
+    """
 
     flat: LogRegProblem
     buckets: List[ClientBucket]
     client_weights: jax.Array    # (K,) n_k / n, bucket-concatenated order
     num_clients: int
+    virtual: Optional[VirtualLayout] = None
 
     @property
     def d(self) -> int:
@@ -125,6 +315,20 @@ def _split_by_rows(groups: List[List[int]], sizes,
     return out
 
 
+def _level_groups(sizes, max_bucket_rows: int | None) -> List[List[int]]:
+    """The canonical client grouping: stable-sort by ceil(log2 n_k), one
+    group per level, split under ``max_bucket_rows``.  Shared by
+    :func:`build_problem` and :func:`build_virtual_problem` so the two
+    layouts produce the *identical* bucket-concatenated client order —
+    and therefore identical weights, fold_in offsets, and per-client
+    keys — which is what makes virtual rounds bit-for-bit comparable to
+    materialized ones."""
+    levels = np.ceil(np.log2(np.maximum(sizes, 1))).astype(np.int64)
+    order = np.argsort(levels, kind="stable")
+    return _split_by_rows(_equal_runs(order, levels[order]), sizes,
+                          max_bucket_rows)
+
+
 def build_problem(ds, lam: float | None = None, *,
                   max_bucket_rows: int | None = None) -> FederatedLogReg:
     """ds: repro.data.synthetic.FederatedDataset.
@@ -144,16 +348,13 @@ def build_problem(ds, lam: float | None = None, *,
 
     slices = ds.client_slices()
     sizes = ds.client_sizes.astype(np.int64)
-    levels = np.ceil(np.log2(np.maximum(sizes, 1))).astype(np.int64)
-    order = np.argsort(levels, kind="stable")
 
     buckets: List[ClientBucket] = []
     weights: List[float] = []
     # One pass over the sorted order: each bucket is a contiguous run of
     # equal ceil(log2 n_k), so the run boundaries are where the sorted level
     # sequence changes — no per-bucket rescan of the tail.
-    groups = _split_by_rows(_equal_runs(order, levels[order]), sizes,
-                            max_bucket_rows)
+    groups = _level_groups(sizes, max_bucket_rows)
     for members in groups:
         m_pad = int(max(sizes[k] for k in members))
         Kb = len(members)
@@ -177,6 +378,46 @@ def build_problem(ds, lam: float | None = None, *,
         flat=flat, buckets=buckets,
         client_weights=jnp.asarray(np.array(weights, np.float32)),
         num_clients=int(ds.num_clients),
+    )
+
+
+def build_virtual_problem(vds, lam: float | None = None, *,
+                          max_bucket_rows: int | None = None,
+                          eval_chunk: int = 256) -> FederatedLogReg:
+    """vds: repro.data.synthetic.VirtualDataset.
+
+    The virtual twin of :func:`build_problem`: same client grouping
+    (:func:`_level_groups` over the TRAIN sizes), same weights, same
+    default lam — but buckets carry only (client_ids, n_k, m_pad) and the
+    flat view streams (:class:`VirtualFlat`), so the build is O(K) in
+    memory and time regardless of Σ n_k.  Run rounds on it with
+    ``EngineConfig(virtual_data=True, ...)``.
+    """
+    sizes = np.asarray(vds.client_sizes, np.int64)
+    n = int(sizes.sum())
+    lam = (1.0 / n) if lam is None else lam
+
+    layout = VirtualLayout(vds)
+    buckets: List[VirtualBucket] = []
+    weight_parts: List[np.ndarray] = []
+    for members in _level_groups(sizes, max_bucket_rows):
+        mem = np.asarray(members, np.int64)
+        buckets.append(VirtualBucket(
+            client_ids=jnp.asarray(mem.astype(np.int32)),
+            n_k=jnp.asarray(sizes[mem].astype(np.int32)),
+            m_pad=int(sizes[mem].max()),
+        ))
+        weight_parts.append(sizes[mem] / n)
+
+    flat = VirtualFlat(layout, buckets, lam=float(lam),
+                       num_features=vds.num_features, n=n,
+                       eval_chunk=eval_chunk)
+    return FederatedLogReg(
+        flat=flat, buckets=buckets,
+        client_weights=jnp.asarray(
+            np.concatenate(weight_parts).astype(np.float32)),
+        num_clients=int(vds.num_clients),
+        virtual=layout,
     )
 
 

@@ -22,7 +22,11 @@ import jax.numpy as jnp
 
 
 def global_feature_counts(flat) -> jax.Array:
-    """n^j for a LogRegProblem."""
+    """n^j for a LogRegProblem (or a VirtualFlat, which streams the count
+    over regenerated client chunks — integer sums, so the two layouts
+    agree exactly)."""
+    if hasattr(flat, "feature_counts"):
+        return flat.feature_counts()
     present = (flat.val != 0).astype(jnp.float32)
     return jnp.zeros((flat.num_features,)).at[flat.idx].add(present)
 
@@ -34,7 +38,10 @@ def client_feature_counts(idx, val, num_features) -> jax.Array:
 
 
 def omega(problem) -> jax.Array:
-    """ω^j — #clients whose data touches coordinate j."""
+    """ω^j — #clients whose data touches coordinate j.  Virtual problems
+    stream the count over regenerated chunks (exact, same integer sums)."""
+    if getattr(problem, "virtual", None) is not None:
+        return problem.flat.omega()
     d = problem.d
     om = jnp.zeros((d,))
     for b in problem.buckets:

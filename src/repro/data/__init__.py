@@ -1,3 +1,6 @@
-from repro.data.synthetic import FederatedDataset, generate
+from repro.data.synthetic import (FederatedDataset, VirtualDataset, generate,
+                                  make_client_batch, train_split_sizes,
+                                  virtual_dataset)
 
-__all__ = ["FederatedDataset", "generate"]
+__all__ = ["FederatedDataset", "VirtualDataset", "generate",
+           "make_client_batch", "train_split_sizes", "virtual_dataset"]

@@ -7,19 +7,47 @@ depends on:
   * massively distributed: K clients (paper: 10,000)
   * unbalanced: n_k power-law in [min_client_examples, max_client_examples]
     (paper: 75..9,000, mean ~216)
-  * non-IID: each client has a private "vocabulary" — a Dirichlet-weighted
+  * non-IID: each client has a private "vocabulary" — a heavy-tail-weighted
     subset of features — plus globally common features (bias, unknown-word),
     giving the Fig.-1 feature-vs-node occupancy profile
   * sparse: fixed nnz bag-of-words rows
   * per-client label bias so "predict the per-author majority" beats the
     global model (the paper's 17.14% vs 26.27% observation)
   * chronological 75/25 train/test split per client
+
+The per-client seeding contract (the virtual-data foundation)
+-------------------------------------------------------------
+
+Every client's data is a pure function of ``(PRNGKey(seed), k)`` and every
+row a pure function of the client key and its chronological position:
+
+    ck        = fold_in(PRNGKey(seed), k)
+    vocab/mix = f(fold_in(ck, VOCAB/MIX/BIAS tags))       # per-client params
+    row p     = f(fold_in(fold_in(ck, ROWS tag), p))      # per-row draws
+
+so any client's rows can be regenerated *on demand* without touching any
+other client — :func:`make_client_batch` / :meth:`VirtualDataset.client_rows_padded`
+— and :func:`generate` materializes the whole dataset through the *same*
+sampler (``_client_params`` / ``_row``), just batched differently.  Both
+paths therefore agree **bit-for-bit**: the sampler uses only batch-shape-
+stable primitives (uniform, log/exp, sigmoid, sort, top_k, searchsorted) —
+never ``normal``/``gamma``, whose erfinv / rejection internals can differ
+by an ulp across batch shapes — so vmapping over rows, clients, or the
+flattened dataset produces identical bits.
+
+Only the O(K) size draw and the O(d) ground truth live outside the keyed
+sampler (numpy, drawn once into the :class:`VirtualDataset` spec); the
+spec is all a K=10⁶ round needs in memory.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import List
+import functools
+import math
+from typing import List, Optional, Tuple
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
 
@@ -107,29 +135,205 @@ def _power_law_sizes(rng, K, n_total, n_min, n_max, alpha=1.6):
     return base
 
 
-def generate(cfg, seed: int = 0) -> FederatedDataset:
-    """cfg: repro.configs.gplus_logreg.LogRegConfig (possibly .scaled()).
+def train_split_sizes(sizes) -> np.ndarray:
+    """The chronological 75/25 split rule, shared by :func:`generate` and the
+    virtual layout so the two paths cannot drift on train/test boundaries.
 
-    Fully vectorized over clients *and* examples — no per-client Python
-    loop — so the paper-scale K = 10,000 dataset generates in seconds:
-    client vocabularies are drawn with one Gumbel-top-``vocab_size`` pass
-    (exactly weighted sampling without replacement), vocabulary mixtures
-    with one batched gamma draw, and every example's private-vocab features
-    with one offset-searchsorted inverse-CDF lookup against its client's
-    mixture.
-
-    The chronological 75/25 per-client split guarantees ≥1 train *and* ≥1
-    test example for every client with n_k ≥ 2.  A client with n_k == 1
-    puts its single example in train and has zero test examples.
+    Train gets ``max(1, floor(0.75 n_k))`` **capped at n_k − 1**: every
+    client with n_k >= 2 keeps at least one train AND one test example (the
+    pre-PR-6 ``max(1, ·)`` floor consumed n_k == 1 clients whole, emitting
+    zero-test clients).  A client with n_k == 1 puts its single example in
+    train and has zero test examples — there is no way to give it both;
+    callers that need test coverage everywhere must keep n_min >= 2.
     """
+    sizes = np.asarray(sizes, np.int64)
+    tr = np.maximum(1, (0.75 * sizes).astype(np.int64))
+    return np.where(sizes >= 2, np.minimum(tr, sizes - 1), tr)
+
+
+# --------------------------------------------------------------------- #
+# the shared per-client sampler (one code path for generate / virtual)
+# --------------------------------------------------------------------- #
+
+# fold_in tag domains off the client key ck = fold_in(base, k)
+_ROWS_TAG, _VOCAB_TAG, _MIX_TAG, _BIAS_TAG = 0, 1, 2, 3
+# fold_in tag domains off the row key rk = fold_in(fold_in(ck, ROWS), pos)
+_OWN_TAG, _GLOB_TAG, _LABEL_TAG = 0, 1, 2
+
+#: logistic(0, s) has std s·π/√3 — this scale gives the per-client label
+#: bias std 1.5 (the non-IID skew) from a uniform draw, avoiding
+#: jax.random.normal whose erfinv can differ by an ulp across batch shapes.
+_BIAS_SCALE = 1.5 * math.sqrt(3.0) / math.pi
+
+
+def _client_params(ck, log_pop, vocab_size: int):
+    """One client's (vocab, mixture CDF, label bias) from its key.
+
+    Gumbel-top-k over log popularity is exactly weighted sampling without
+    replacement (Plackett–Luce) — the client's private vocabulary is a
+    zipf-weighted random subset of the feature space.  The mixture over the
+    vocabulary is a normalized Weibull(0.3) draw ``(−log u)^{1/0.3}`` —
+    the same heavy-tail-dominated profile as a Dirichlet(0.3) gamma draw,
+    but built from uniforms only (bit-stable across batch shapes, unlike
+    ``jax.random.gamma``'s rejection loop).
+    """
+    g = jax.random.gumbel(jax.random.fold_in(ck, _VOCAB_TAG), log_pop.shape)
+    _, top = jax.lax.top_k(log_pop + g, vocab_size)
+    vocab = (top + 2).astype(jnp.int32)                      # skip bias/unk
+    u = jax.random.uniform(jax.random.fold_in(ck, _MIX_TAG), (vocab_size,),
+                           minval=1e-7, maxval=1.0)
+    raw = (-jnp.log(u)) ** (1.0 / 0.3)
+    cdf = jnp.cumsum(raw / raw.sum())
+    cdf = cdf.at[-1].set(1.0)
+    ub = jax.random.uniform(jax.random.fold_in(ck, _BIAS_TAG), (),
+                            minval=1e-6, maxval=1.0 - 1e-6)
+    bias = _BIAS_SCALE * jnp.log(ub / (1.0 - ub))
+    return vocab, cdf, bias
+
+
+def _row(rk, vocab, cdf, bias, w_true, global_cdf, nnz: int, n_own: int):
+    """One example (idx, val, y) from its row key and its client's params.
+
+    Features: ``n_own`` inverse-CDF draws from the client's private
+    vocabulary mixture + ``nnz − n_own`` from the global zipf popularity,
+    prefixed by the always-on bias (0) and unknown-word (1) features.
+    Duplicate features within the row are zeroed out (fixed width kept).
+    The label is Bernoulli(sigmoid(0.7·margin + client bias)).
+    """
+    V = vocab.shape[0]
+    u_own = jax.random.uniform(jax.random.fold_in(rk, _OWN_TAG), (n_own,))
+    own = vocab[jnp.clip(jnp.searchsorted(cdf, u_own, side="right"), 0, V - 1)]
+    dg = global_cdf.shape[0]
+    u_glob = jax.random.uniform(jax.random.fold_in(rk, _GLOB_TAG),
+                                (nnz - n_own,))
+    glob = (jnp.clip(jnp.searchsorted(global_cdf, u_glob, side="right"),
+                     0, dg - 1) + 2).astype(jnp.int32)
+    idx = jnp.concatenate([jnp.array([0, 1], jnp.int32), own, glob])
+    val = jnp.ones((nnz + 2,), jnp.float32)
+    # dedupe within the row: zero out repeated features (keeps fixed width)
+    srt = jnp.sort(idx)
+    dup = jnp.concatenate([jnp.zeros((1,), bool), srt[1:] == srt[:-1]])
+    order = jnp.argsort(idx)
+    inv = jnp.argsort(order)
+    val = val * (~dup[inv]).astype(jnp.float32)
+
+    margin = (val * w_true[idx]).sum()
+    p = jax.nn.sigmoid(jnp.float32(0.7) * margin + bias)
+    u_y = jax.random.uniform(jax.random.fold_in(rk, _LABEL_TAG), ())
+    y = jnp.where(u_y < p, 1.0, -1.0).astype(jnp.float32)
+    return idx, val, y
+
+
+def _client_rows(ck, vocab, cdf, bias, num_rows: int, w_true, global_cdf,
+                 nnz: int, n_own: int):
+    """The client's first ``num_rows`` chronological rows — row p is keyed by
+    ``fold_in(fold_in(ck, ROWS), p)``, independent of how many rows are
+    asked for (a prefix is always a prefix)."""
+    rows_key = jax.random.fold_in(ck, _ROWS_TAG)
+    positions = jnp.arange(num_rows, dtype=jnp.uint32)
+    return jax.vmap(
+        lambda p: _row(jax.random.fold_in(rows_key, p), vocab, cdf, bias,
+                       w_true, global_cdf, nnz, n_own))(positions)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("num_rows", "vocab_size", "nnz", "n_own"))
+def _one_client_rows(base_key, client_id, w_true, log_pop, global_cdf, *,
+                     num_rows: int, vocab_size: int, nnz: int, n_own: int):
+    ck = jax.random.fold_in(base_key, client_id)
+    vocab, cdf, bias = _client_params(ck, log_pop, vocab_size)
+    return _client_rows(ck, vocab, cdf, bias, num_rows, w_true, global_cdf,
+                        nnz, n_own)
+
+
+# --------------------------------------------------------------------- #
+# the virtual dataset: O(K + d) spec, rows regenerated on demand
+# --------------------------------------------------------------------- #
+
+
+@dataclasses.dataclass(frozen=True)
+class VirtualDataset:
+    """The O(K + d) spec from which any client's rows regenerate on demand.
+
+    Holds exactly what :func:`generate` draws *outside* the keyed sampler —
+    the power-law sizes, the ground-truth weights, the global popularity —
+    plus the base PRNG key.  ``client_sizes`` are the per-client **train**
+    sizes (:func:`train_split_sizes` of the full sizes), matching
+    :class:`FederatedDataset.client_sizes`; a client's test rows are the
+    chronological tail ``[client_sizes[k], full_sizes[k])``.
+    """
+
+    base_key: jax.Array        # PRNGKey(seed)
+    full_sizes: np.ndarray     # (K,) int64, train+test rows per client
+    client_sizes: np.ndarray   # (K,) int32, TRAIN rows per client
+    w_true: jax.Array          # (d,) f32 ground-truth weights
+    log_pop: jax.Array         # (d-2,) f32 log zipf popularity
+    global_cdf: jax.Array      # (d-2,) f32 zipf CDF
+    num_features: int
+    nnz: int
+    vocab_size: int
+    n_own: int
+
+    @property
+    def num_clients(self) -> int:
+        return len(self.client_sizes)
+
+    @property
+    def num_examples(self) -> int:
+        """Train examples (matches ``FederatedDataset.num_examples``)."""
+        return int(self.client_sizes.sum())
+
+    def client_rows_padded(self, client_ids, n_k, m_pad: int
+                           ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+        """Regenerate a batch of clients' rows into the engine's padded
+        bucket layout: (C, m_pad, nnz) idx/val and (C, m_pad) y, with rows
+        at positions >= n_k zeroed to the padding contract (idx=0, val=0,
+        y=1).  Traceable — this is what runs inside the round's
+        ``lax.scan`` body under ``EngineConfig.virtual_data``.
+        """
+        base, log_pop = self.base_key, self.log_pop
+        w_true, gcdf = self.w_true, self.global_cdf
+        V, nnz, n_own = self.vocab_size, self.nnz, self.n_own
+
+        def one(cid, nk):
+            ck = jax.random.fold_in(base, cid.astype(jnp.uint32))
+            vocab, cdf, bias = _client_params(ck, log_pop, V)
+            idx, val, y = _client_rows(ck, vocab, cdf, bias, m_pad, w_true,
+                                       gcdf, nnz, n_own)
+            keep = jnp.arange(m_pad) < nk
+            return (jnp.where(keep[:, None], idx, 0),
+                    jnp.where(keep[:, None], val, 0.0),
+                    jnp.where(keep, y, 1.0))
+
+        return jax.vmap(one)(jnp.asarray(client_ids), jnp.asarray(n_k))
+
+
+def make_client_batch(vds: VirtualDataset, k: int,
+                      num_rows: Optional[int] = None
+                      ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Client ``k``'s first ``num_rows`` chronological rows (default: all
+    of them, train + test) regenerated from its fold_in seed — bit-for-bit
+    equal to the row-slice ``k`` of :func:`generate` on the same config and
+    seed (the property tests pin this for every client)."""
+    if num_rows is None:
+        num_rows = int(vds.full_sizes[k])
+    return _one_client_rows(
+        vds.base_key, jnp.uint32(k), vds.w_true, vds.log_pop, vds.global_cdf,
+        num_rows=num_rows, vocab_size=vds.vocab_size, nnz=vds.nnz,
+        n_own=vds.n_own)
+
+
+def virtual_dataset(cfg, seed: int = 0) -> VirtualDataset:
+    """The virtual twin of :func:`generate`: same cfg, same seed, same data —
+    but O(K + d) memory.  Draws the numpy-stream quantities (sizes, w_true)
+    in the exact order :func:`generate` historically did, so the two paths
+    share sizes/weights bit-for-bit."""
     rng = np.random.default_rng(seed)
     K, d = cfg.num_clients, cfg.num_features
     nnz = min(cfg.nnz_per_example, d - 2)
 
     sizes = _power_law_sizes(rng, K, cfg.num_examples,
                              cfg.min_client_examples, cfg.max_client_examples)
-    n = int(sizes.sum())
-    client_of = np.repeat(np.arange(K, dtype=np.int32), sizes)
 
     # ground-truth weights: heavy-tailed so rare features carry signal
     w_true = rng.standard_normal(d) * (rng.random(d) < 0.3)
@@ -138,78 +342,122 @@ def generate(cfg, seed: int = 0) -> FederatedDataset:
     ranks = np.arange(2, d)
     global_pop = 1.0 / ranks ** 1.1
     global_pop /= global_pop.sum()
+    gcdf = np.cumsum(global_pop)
+    gcdf[-1] = 1.0
 
-    vocab_size = max(8, int(0.02 * d))  # private vocabulary per client
+    vocab_size = min(max(8, int(0.02 * d)), d - 2)
 
-    # client vocabularies: a zipf-weighted random subset per client —
-    # Gumbel-top-k over log popularity is exactly weighted sampling without
-    # replacement (Plackett–Luce).  Drawn in client blocks so the dense
-    # (block, d) score matrix bounds peak memory at O(block·d), not O(K·d)
-    # (at the paper's real d=20k, a full (10k, 20k) f64 draw is ~1.6 GB).
-    log_pop = np.log(global_pop)
-    vocab = np.empty((K, vocab_size), np.int32)                 # (K, V)
-    block = 2048
-    for k0 in range(0, K, block):
-        scores = log_pop[None, :] + rng.gumbel(size=(min(block, K - k0),
-                                                     d - 2))
-        vocab[k0:k0 + block] = np.argpartition(
-            -scores, vocab_size - 1, axis=1)[:, :vocab_size] + 2
-    # Dirichlet(0.3) mixture over each vocabulary (batched gamma-normalize)
-    mix = rng.standard_gamma(0.3, size=(K, vocab_size))
-    mix /= np.maximum(mix.sum(axis=1, keepdims=True), 1e-300)
+    return VirtualDataset(
+        base_key=jax.random.PRNGKey(seed),
+        full_sizes=sizes.astype(np.int64),
+        client_sizes=train_split_sizes(sizes).astype(np.int32),
+        w_true=jnp.asarray(w_true, jnp.float32),
+        log_pop=jnp.asarray(np.log(global_pop), jnp.float32),
+        global_cdf=jnp.asarray(gcdf, jnp.float32),
+        num_features=d, nnz=nnz, vocab_size=vocab_size,
+        n_own=int(0.8 * nnz),
+    )
 
-    # per-example features: mostly from own vocab, some global
-    n_own = int(0.8 * nnz)
-    # inverse-CDF sampling of every example's own-vocab features in one
-    # searchsorted: client k's CDF lives on the offset interval [k, k+1)
-    cdf = np.cumsum(mix, axis=1)
-    cdf[:, -1] = 1.0
-    flat_cdf = (cdf + np.arange(K)[:, None]).ravel()
-    u = rng.random((n, n_own))
-    pos = np.searchsorted(flat_cdf, client_of[:, None] + u, side="right")
-    # k + u can round up to k+1 in float64 when u -> 1 at large k; clip the
-    # (measure-~0) overflow back into the client's own vocabulary
-    local = np.clip(pos - client_of[:, None].astype(np.int64) * vocab_size,
-                    0, vocab_size - 1)
-    own_feats = vocab[client_of[:, None], local]                 # (n, n_own)
-    glob_feats = rng.choice(np.arange(2, d), size=(n, nnz - n_own),
-                            p=global_pop)
-    feats = np.concatenate([own_feats, glob_feats], axis=1)
 
-    all_idx = np.concatenate(
-        [np.zeros((n, 1), np.int32),                             # bias
-         np.ones((n, 1), np.int32),                              # unknown-word
-         feats.astype(np.int32)], axis=1)
-    all_val = np.ones((n, nnz + 2), np.float32)
-    # dedupe within a row: zero out repeated features (keeps fixed width)
-    srt = np.sort(all_idx, axis=1)
-    dup = np.concatenate([np.zeros((n, 1), bool),
-                          srt[:, 1:] == srt[:, :-1]], axis=1)
-    order = np.argsort(all_idx, axis=1)
-    inv = np.argsort(order, axis=1)
-    all_val *= ~np.take_along_axis(dup, inv, axis=1)
+# --------------------------------------------------------------------- #
+# materialization: generate() through the same sampler, batched
+# --------------------------------------------------------------------- #
 
-    margin = (all_val * w_true[all_idx]).sum(axis=1)
-    client_bias = rng.standard_normal(K) * 1.5                   # non-IID skew
-    p = 1.0 / (1.0 + np.exp(-(0.7 * margin + client_bias[client_of])))
-    all_y = np.where(rng.random(n) < p, 1.0, -1.0).astype(np.float32)
+# fixed batch shapes (padded, sliced after) so repeated small generates —
+# e.g. 200 property-test draws — reuse one compilation per (d, nnz) pool
+_PARAM_BLOCK = 2048
+_ROW_BLOCK = 4096
 
-    # chronological 75/25 split per client (synthetic order = time order).
-    # Every client with n_k >= 2 keeps at least one test example: the
-    # train share is clamped to [1, n_k − 1] (at n_k == 1 the max(1, ·)
-    # floor used to consume the whole client, emitting a zero-test
-    # client).  A client with n_k == 1 still contributes its only example
-    # to train and has zero test examples — there is no way to give it
-    # both; callers that need test coverage everywhere must keep n_min >= 2.
-    tr_sizes = np.maximum(1, (0.75 * sizes).astype(np.int64))
-    tr_sizes = np.where(sizes >= 2, np.minimum(tr_sizes, sizes - 1), tr_sizes)
+
+@functools.partial(jax.jit, static_argnames=("vocab_size",))
+def _param_block(base_key, client_ids, log_pop, *, vocab_size: int):
+    def one(cid):
+        ck = jax.random.fold_in(base_key, cid)
+        vocab, cdf, bias = _client_params(ck, log_pop, vocab_size)
+        return vocab, cdf, bias, jax.random.fold_in(ck, _ROWS_TAG)
+    return jax.vmap(one)(client_ids)
+
+
+@functools.partial(jax.jit, static_argnames=("nnz", "n_own"))
+def _row_block(rows_keys, pos, vocab, cdf, bias, w_true, global_cdf, *,
+               nnz: int, n_own: int):
+    def one(rkb, p, vo, cd, bi):
+        return _row(jax.random.fold_in(rkb, p), vo, cd, bi, w_true,
+                    global_cdf, nnz, n_own)
+    return jax.vmap(one)(rows_keys, pos, vocab, cdf, bias)
+
+
+def generate(cfg, seed: int = 0) -> FederatedDataset:
+    """cfg: repro.configs.gplus_logreg.LogRegConfig (possibly .scaled()).
+
+    Materializes the dataset through the *same* keyed sampler the virtual
+    path uses (:func:`virtual_dataset` / :func:`make_client_batch`), fully
+    vectorized over clients and examples: per-client params run in
+    ``_PARAM_BLOCK`` client batches (the dense (block, d) Gumbel score
+    matrix bounds peak memory at O(block·d), not O(K·d)), per-example rows
+    in fixed ``_ROW_BLOCK`` batches.  Because every draw is keyed by
+    (client, position), the batching is invisible: ``make_client_batch(k)``
+    reproduces row-slice ``k`` bit-for-bit.
+
+    The chronological 75/25 per-client split (:func:`train_split_sizes`)
+    guarantees ≥1 train *and* ≥1 test example for every client with
+    n_k ≥ 2.  A client with n_k == 1 puts its single example in train and
+    has zero test examples.
+    """
+    vds = virtual_dataset(cfg, seed)
+    K, d = vds.num_clients, vds.num_features
+    nnz = vds.nnz
+    sizes = vds.full_sizes
+    n = int(sizes.sum())
+    client_of = np.repeat(np.arange(K, dtype=np.int32), sizes)
+
+    # per-client params, client-blocked (ids padded to a full block; the
+    # extra params are computed and discarded — keys make them harmless)
+    vocabs = np.empty((K, vds.vocab_size), np.int32)
+    cdfs = np.empty((K, vds.vocab_size), np.float32)
+    biases = np.empty((K,), np.float32)
+    rows_keys = np.empty((K, 2), np.uint32)
+    for k0 in range(0, K, _PARAM_BLOCK):
+        ids = np.arange(k0, k0 + _PARAM_BLOCK, dtype=np.uint32)
+        vo, cd, bi, rk = _param_block(vds.base_key, jnp.asarray(ids),
+                                      vds.log_pop,
+                                      vocab_size=vds.vocab_size)
+        take = min(K, k0 + _PARAM_BLOCK) - k0
+        vocabs[k0:k0 + take] = np.asarray(vo)[:take]
+        cdfs[k0:k0 + take] = np.asarray(cd)[:take]
+        biases[k0:k0 + take] = np.asarray(bi)[:take]
+        rows_keys[k0:k0 + take] = np.asarray(rk)[:take]
+
+    # per-example rows, row-blocked at a fixed shape
     starts = np.concatenate([[0], np.cumsum(sizes)[:-1]])
-    pos_in_client = np.arange(n) - starts[client_of]
-    tr_mask = pos_in_client < tr_sizes[client_of]
+    pos = (np.arange(n) - starts[client_of]).astype(np.uint32)
+    all_idx = np.empty((n, nnz + 2), np.int32)
+    all_val = np.empty((n, nnz + 2), np.float32)
+    all_y = np.empty((n,), np.float32)
+    for i0 in range(0, n, _ROW_BLOCK):
+        i1 = min(i0 + _ROW_BLOCK, n)
+        m = i1 - i0
+        cof = client_of[i0:i1]
+        args = [rows_keys[cof], pos[i0:i1], vocabs[cof], cdfs[cof],
+                biases[cof]]
+        if m < _ROW_BLOCK:        # pad to the fixed block shape, slice after
+            args = [np.concatenate(
+                [a, np.repeat(a[-1:], _ROW_BLOCK - m, axis=0)]) for a in args]
+        bi_, bv_, by_ = _row_block(*[jnp.asarray(a) for a in args],
+                                   vds.w_true, vds.global_cdf,
+                                   nnz=nnz, n_own=vds.n_own)
+        all_idx[i0:i1] = np.asarray(bi_)[:m]
+        all_val[i0:i1] = np.asarray(bv_)[:m]
+        all_y[i0:i1] = np.asarray(by_)[:m]
+
+    # chronological 75/25 split per client (synthetic order = time order),
+    # via the shared train_split_sizes rule (train capped at n_k − 1)
+    tr_sizes = vds.client_sizes.astype(np.int64)
+    tr_mask = pos < tr_sizes[client_of]
     te_mask = ~tr_mask
     return FederatedDataset(
         idx=all_idx[tr_mask], val=all_val[tr_mask], y=all_y[tr_mask],
-        client_of=client_of[tr_mask], client_sizes=tr_sizes.astype(np.int32),
+        client_of=client_of[tr_mask], client_sizes=vds.client_sizes,
         num_features=d,
         test_idx=all_idx[te_mask], test_val=all_val[te_mask],
         test_y=all_y[te_mask], test_client_of=client_of[te_mask],

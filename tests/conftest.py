@@ -35,3 +35,20 @@ def small_problem(small_dataset):
     from repro.core import build_problem
 
     return build_problem(small_dataset)
+
+
+@pytest.fixture(scope="session")
+def small_virtual_dataset():
+    """The virtual twin of ``small_dataset`` — same cfg, same seed, so the
+    regenerated rows are bit-for-bit the materialized ones."""
+    from repro.configs import get_logreg_config
+    from repro.data.synthetic import virtual_dataset
+
+    return virtual_dataset(get_logreg_config().scaled(0.002), seed=0)
+
+
+@pytest.fixture(scope="session")
+def small_virtual_problem(small_virtual_dataset):
+    from repro.core import build_virtual_problem
+
+    return build_virtual_problem(small_virtual_dataset)

@@ -41,4 +41,11 @@ python benchmarks/bench_round.py --smoke --paper-k \
 python benchmarks/bench_round.py --smoke --participation-sweep \
     --json "${BENCH_COHORT_JSON:-BENCH_round.cohort.smoke.json}" > /dev/null
 
+# Virtual-data smoke: budget-guarded K=10,000 virtual rounds (gd + fedavg,
+# 2 rounds, 1 repeat) — rows regenerated on demand inside the compiled
+# round, with the live-buffer/RSS memory columns — so the bounded-memory
+# client-axis path is exercised on every CI run.
+python benchmarks/bench_round.py --smoke --virtual \
+    --json "${BENCH_VIRTUAL_JSON:-BENCH_round.virtual.smoke.json}" > /dev/null
+
 exec python -m pytest -x -q "$@"

@@ -23,7 +23,11 @@ Contracts:
    CoCoA+) plumbs ``cohort`` into its compiled round.
 6. ``cohort_capacity`` sizes the static bucket so overflow is a z-sigma
    tail event; at participation=1.0 the knob is a compile-time no-op.
-7. A cohort FedAvg round completes at the paper's K = 10,000 and matches
+7. Over *virtual* data the gather moves client identities and rows
+   regenerate inside the pass: cohort rounds (stateless, dual-state, and
+   the forced-overflow fallback) are bit-identical to materialized cohort
+   rounds on the same key.
+8. A cohort FedAvg round completes at the paper's K = 10,000 and matches
    the masked round (slow-marked).
 """
 import jax
@@ -328,7 +332,86 @@ def test_cohort_capacity_covers_the_draw(small_problem):
 
 
 # --------------------------------------------------------------------- #
-# 7. the paper's K = 10,000, cohort-gathered
+# 7. cohort over virtual data: gather identities, regenerate rows
+# --------------------------------------------------------------------- #
+
+
+@pytest.mark.parametrize("cohort,chunk", [(2, None), (4, 2)])
+def test_cohort_virtual_matches_materialized_cohort(cohort, chunk):
+    """The cohort gather moves VirtualBucket *identities* (client ids, n_k,
+    keys, weights); rows regenerate inside the pass — so the virtual cohort
+    round must be bit-identical to the materialized cohort round on the
+    same key (same draw, same gather, same rows)."""
+    from test_virtual_data import _keyed_data_passes, _pair
+    _, _, pm, pv = _pair()
+    kw = dict(participation=0.4, weighting="nk", client_chunk=chunk)
+    eng_m = RoundEngine(pm, EngineConfig(cohort=cohort, **kw))
+    eng_v = RoundEngine(pv, EngineConfig(virtual_data=True, cohort=cohort,
+                                         **kw))
+    _, chunk_pass = _keyed_data_passes(pm.flat.lam)
+    w = jax.random.uniform(jax.random.PRNGKey(8), (pm.d,)) * 0.1
+    for r in range(2):
+        key = jax.random.PRNGKey(30 + r)
+        np.testing.assert_array_equal(
+            np.asarray(eng_v.round_cohort(w, key, chunk_pass)),
+            np.asarray(eng_m.round_cohort(w, key, chunk_pass)))
+
+
+def test_cohort_virtual_overflow_falls_back_to_masked():
+    """Forced capacity overflow on virtual data: capacity 1 at
+    participation 0.9 sends (nearly) every bucket down the lax.cond
+    fallback, which realizes the *whole* bucket from the virtual layout —
+    still bit-equal to the materialized cohort round, and matching the
+    masked reference to float tolerance (capacity must never change
+    results, virtual or not)."""
+    from test_virtual_data import _keyed_data_passes, _pair
+    _, _, pm, pv = _pair()
+    kw = dict(participation=0.9)
+    eng_m = RoundEngine(pm, EngineConfig(cohort=1, **kw))
+    eng_v = RoundEngine(pv, EngineConfig(virtual_data=True, cohort=1, **kw))
+    eng_ref = RoundEngine(pm, EngineConfig(**kw))
+    client_pass, chunk_pass = _keyed_data_passes(pm.flat.lam)
+    w = jnp.zeros(pm.d)
+    key = jax.random.PRNGKey(12)
+    out_v = eng_v.round_cohort(w, key, chunk_pass)
+    np.testing.assert_array_equal(
+        np.asarray(out_v),
+        np.asarray(eng_m.round_cohort(w, key, chunk_pass)))
+    np.testing.assert_allclose(
+        np.asarray(out_v),
+        np.asarray(eng_ref.round(w, key, client_pass)),
+        rtol=1e-5, atol=1e-5)
+
+
+def test_cohort_virtual_dual_state_matches_materialized():
+    """Dual state on the virtual cohort path: aux blocks gather/scatter
+    materialized while rows regenerate — iterate and every per-client state
+    slot bit-equal to the materialized cohort round."""
+    from test_virtual_data import _keyed_data_passes, _pair
+    _, _, pm, pv = _pair()
+    kw = dict(weighting="sum", participation=0.4, cohort=3)
+    eng_m = RoundEngine(pm, EngineConfig(**kw))
+    eng_v = RoundEngine(pv, EngineConfig(virtual_data=True, **kw))
+    _, chunk_pass = _keyed_data_passes(pm.flat.lam)
+
+    def dual_chunk_pass(w, bi, cb, s_c, keys):
+        deltas = chunk_pass(w, bi, cb, keys)
+        return deltas, s_c + deltas[:, :3]
+
+    states = [jnp.arange(b.num_clients * 3, dtype=jnp.float32)
+              .reshape(b.num_clients, 3) for b in pm.buckets]
+    key = jax.random.PRNGKey(13)
+    w_m, st_m = eng_m.round_cohort_with_state(jnp.zeros(pm.d), states, key,
+                                              dual_chunk_pass)
+    w_v, st_v = eng_v.round_cohort_with_state(jnp.zeros(pv.d), states, key,
+                                              dual_chunk_pass)
+    np.testing.assert_array_equal(np.asarray(w_v), np.asarray(w_m))
+    for a, b in zip(st_v, st_m):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# --------------------------------------------------------------------- #
+# 8. the paper's K = 10,000, cohort-gathered
 # --------------------------------------------------------------------- #
 
 

@@ -18,9 +18,11 @@ except ImportError:          # pragma: no cover - env-dependent
     HAVE_HYPOTHESIS = False
 
 from repro.configs import get_logreg_config
+from repro.configs.gplus_logreg import LogRegConfig
 from repro.core import build_problem
 from repro.core.baselines import majority_baseline_error
-from repro.data.synthetic import _power_law_sizes, generate
+from repro.data.synthetic import (_power_law_sizes, generate,
+                                  train_split_sizes)
 
 
 DS_SCALE, DS_SEED = 0.003, 1
@@ -91,23 +93,40 @@ def test_bucketing_preserves_examples(ds):
             assert (np.asarray(b.val[j, nk:]) == 0).all()
 
 
-def _check_generation_deterministic(seed):
-    cfg = get_logreg_config().scaled(0.0008)
+def _check_generation_deterministic(seed, K=16, d=40, nnz=5, n_span=(2, 8)):
+    """Same (cfg, seed) twice -> the same dataset, bit for bit — across the
+    config axes, not just the PRNG seed.  K/d stay on small values (the
+    generator pads rows/params to fixed blocks, so compiles are shared)."""
+    cfg = LogRegConfig(num_clients=K, num_features=d,
+                       num_examples=4 * K, nnz_per_example=nnz,
+                       min_client_examples=n_span[0],
+                       max_client_examples=n_span[1])
     a = generate(cfg, seed=seed)
     b = generate(cfg, seed=seed)
     assert (a.idx == b.idx).all() and (a.y == b.y).all()
+    assert (a.val == b.val).all()
+    assert (a.test_idx == b.test_idx).all() and (a.test_y == b.test_y).all()
     assert (a.client_sizes == b.client_sizes).all()
 
 
 if HAVE_HYPOTHESIS:
-    @settings(deadline=None, max_examples=5)
-    @given(st.integers(0, 100))
-    def test_generation_deterministic(seed):
-        _check_generation_deterministic(seed)
+    @settings(deadline=None, max_examples=10, derandomize=True)
+    @given(seed=st.integers(0, 2**16),
+           K=st.sampled_from([8, 16]),
+           d=st.sampled_from([40, 57]),
+           nnz=st.sampled_from([3, 5]),
+           n_span=st.sampled_from([(1, 6), (2, 8)]))
+    def test_generation_deterministic(seed, K, d, nnz, n_span):
+        _check_generation_deterministic(seed, K, d, nnz, n_span)
 else:
-    @pytest.mark.parametrize("seed", [0, 31, 100])
-    def test_generation_deterministic(seed):
-        _check_generation_deterministic(seed)
+    @pytest.mark.parametrize("seed,K,d,nnz,n_span", [
+        (0, 16, 40, 5, (2, 8)),
+        (31, 8, 57, 3, (1, 6)),
+        (100, 16, 57, 5, (1, 6)),
+        (2**15, 8, 40, 3, (2, 8)),
+    ])
+    def test_generation_deterministic(seed, K, d, nnz, n_span):
+        _check_generation_deterministic(seed, K, d, nnz, n_span)
 
 
 def test_train_test_split_per_client(ds):
@@ -189,3 +208,28 @@ def test_split_gives_every_multi_example_client_a_test_example():
     assert (tr >= 1).all()
     assert (te[total >= 2] >= 1).all(), "zero-test client with n_k >= 2"
     assert (te[total == 1] == 0).all() and (tr[total == 1] == 1).all()
+
+
+def test_train_split_sizes_rule():
+    """The shared split helper element-by-element against the documented
+    rule: train = max(1, floor(0.75 n)) capped at n − 1 for n >= 2, and a
+    lone example goes to train.  Both generate() and the virtual layout
+    route through this one function, so this is the single place the
+    train/test boundary can regress."""
+    n = np.arange(1, 101)
+    tr = train_split_sizes(n)
+    expect = np.minimum(np.maximum(1, (0.75 * n).astype(np.int64)),
+                        np.maximum(n - 1, 1))
+    np.testing.assert_array_equal(tr, expect)
+    assert tr[0] == 1                      # n=1: train keeps the example
+    assert (tr[1:] <= n[1:] - 1).all()     # n>=2: never starves test
+    assert (tr >= 1).all()
+    assert tr.dtype == np.int64
+
+
+def test_generate_client_sizes_follow_split_rule(ds):
+    """End-to-end pin: the dataset's per-client train sizes ARE
+    train_split_sizes of the full per-client counts."""
+    tr = np.bincount(ds.client_of, minlength=ds.num_clients)
+    te = np.bincount(ds.test_client_of, minlength=ds.num_clients)
+    np.testing.assert_array_equal(ds.client_sizes, train_split_sizes(tr + te))
