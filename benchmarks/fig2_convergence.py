@@ -85,10 +85,29 @@ def main(argv=None):
     ap.add_argument("--json", default=None)
     ap.add_argument("--algo", default="all", choices=("all",) + ALGOS,
                     help="run a single comparison curve instead of all of them")
+    ap.add_argument("--participation-model", default="none",
+                    choices=("none", "bernoulli", "trace"),
+                    help="run every curve under partial participation: "
+                         "'bernoulli' uses --participation as the i.i.d. "
+                         "rate, 'trace' a repro.fleet diurnal availability/"
+                         "straggler trace (seeded from --seed)")
+    ap.add_argument("--participation", type=float, default=0.3,
+                    help="client participation rate for "
+                         "--participation-model=bernoulli")
     args = ap.parse_args(argv)
 
     def want(name):
         return args.algo in ("all", name)
+
+    # extra solver kwargs shared by every curve (merged into make_solver)
+    fleet_kw = {}
+    if args.participation_model == "bernoulli":
+        fleet_kw = {"participation": args.participation}
+    elif args.participation_model == "trace":
+        from repro.fleet import FleetTrace, TraceParticipation
+        trace = FleetTrace(seed=args.seed)
+        fleet_kw = {"participation": trace.max_rate(),
+                    "participation_model": TraceParticipation(trace)}
 
     cfg = get_logreg_config().scaled(args.scale)
     ds = generate(cfg, seed=args.seed)
@@ -137,14 +156,16 @@ def main(argv=None):
         t0 = time.time()
         if c.sweep_param is not None:
             res, best = sweep(
-                lambda v: make_solver(c.solver, problem, **{c.sweep_param: v}),
+                lambda v: make_solver(c.solver, problem,
+                                      **{c.sweep_param: v, **fleet_kw}),
                 c.sweep, rounds=args.rounds, seed=args.seed, eval_fn=eval_w)
             if res is None:
                 print(f"{name}: every candidate in {c.sweep} diverged")
                 continue
             swept = {c.sweep_param: best}
         else:
-            res = Trainer(make_solver(c.solver, problem), rounds=args.rounds,
+            res = Trainer(make_solver(c.solver, problem, **fleet_kw),
+                          rounds=args.rounds,
                           seed=args.seed, eval_fn=eval_w).fit()
             swept = {}
         hist = res.history

@@ -17,6 +17,17 @@ list index ``[0]`` from an int dict key ``[0]`` (so restore silently
 converted int-keyed dicts to lists) and indexed into an empty key list for
 a bare-array pytree (root leaf, keystr ``""`` → IndexError).  v1
 checkpoints still restore through the legacy string parser.
+
+Saves are **atomic**: a save interrupted at any point (SIGKILL mid-write —
+the campaign runner's crash model) leaves the previous checkpoint fully
+restorable.  The payload goes to a step-unique ``arrays-<step>.npz``
+written via a temp file + ``os.replace``; the manifest (which records the
+payload filename in ``arrays_file``) is replaced *last*, so the manifest
+on disk always references a payload that was completely written before
+the manifest became visible.  Superseded payload files are deleted only
+after the new manifest is committed (a crash in between leaves an unused
+extra file, never a broken checkpoint).  Pre-atomic checkpoints (a plain
+``arrays.npz``, no ``arrays_file`` key) still restore.
 """
 from __future__ import annotations
 
@@ -61,6 +72,17 @@ def _encode_key_path(kp) -> List[List[Any]]:
     return out
 
 
+def _replace_file(path: str, write_fn) -> None:
+    """Write via a same-directory temp file, then atomically rename over
+    ``path``.  ``write_fn`` receives an open binary-mode file object."""
+    tmp = path + ".tmp"
+    with open(tmp, "wb") as f:
+        write_fn(f)
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, path)
+
+
 def save(path: str, tree: Any, *, step: int = 0,
          metadata: Optional[Dict] = None) -> None:
     os.makedirs(path, exist_ok=True)
@@ -72,7 +94,12 @@ def save(path: str, tree: Any, *, step: int = 0,
         arr, dtype = _to_numpy(leaf)
         payload[f"leaf_{i}"] = arr
         index.append({"dtype": dtype, "shape": list(arr.shape)})
-    np.savez(os.path.join(path, "arrays.npz"), **payload)
+    # Step-unique payload name: the old manifest keeps referencing the old
+    # payload until the new manifest lands, so a kill at any point leaves a
+    # consistent (manifest, payload) pair on disk.
+    arrays_file = f"arrays-{step:09d}.npz"
+    _replace_file(os.path.join(path, arrays_file),
+                  lambda f: np.savez(f, **payload))
     # structure for reconstruction: keystrs stay for human inspection (and
     # v1 readers); key_paths carry the [kind, key] pairs restore uses
     paths = [jax.tree_util.keystr(kp) for kp, _ in flat_with_path]
@@ -85,13 +112,27 @@ def save(path: str, tree: Any, *, step: int = 0,
         "format_version": 2,
         "paths": paths,
         "key_paths": key_paths,
+        "arrays_file": arrays_file,
     }
-    with open(os.path.join(path, "manifest.json"), "w") as f:
-        json.dump(manifest, f)
     # treedef is reconstructed from an example tree: persist via pickle-free
     # nested-dict rebuild
-    with open(os.path.join(path, "treedef.json"), "w") as f:
-        json.dump({"paths": paths, "key_paths": key_paths}, f)
+    _replace_file(os.path.join(path, "treedef.json"),
+                  lambda f: f.write(json.dumps(
+                      {"paths": paths, "key_paths": key_paths}).encode()))
+    # manifest last — its replacement is the commit point
+    _replace_file(os.path.join(path, "manifest.json"),
+                  lambda f: f.write(json.dumps(manifest).encode()))
+    # best-effort cleanup of superseded payloads (post-commit, so a crash
+    # here only leaves an unused extra file)
+    for name in os.listdir(path):
+        stale = (name == "arrays.npz"
+                 or (name.startswith("arrays-") and name.endswith(".npz")
+                     and name != arrays_file))
+        if stale:
+            try:
+                os.remove(os.path.join(path, name))
+            except OSError:  # pragma: no cover - cleanup is advisory
+                pass
 
 
 # --------------------------------------------------------------------- #
@@ -159,7 +200,8 @@ def _listify(node):
 def restore(path: str) -> Tuple[Any, Dict]:
     with open(os.path.join(path, "manifest.json")) as f:
         manifest = json.load(f)
-    data = np.load(os.path.join(path, "arrays.npz"))
+    data = np.load(os.path.join(path, manifest.get("arrays_file",
+                                                   "arrays.npz")))
     leaves = [_from_numpy(data[f"leaf_{i}"], meta["dtype"])
               for i, meta in enumerate(manifest["leaves"])]
     info = {"step": manifest["step"], "metadata": manifest["metadata"]}

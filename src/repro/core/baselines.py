@@ -59,7 +59,8 @@ class DistributedGD(FederatedSolver):
                  client_chunk: Optional[int] = None,
                  participation: float = 1.0,
                  cohort: Optional[int] = None,
-                 virtual_data: bool = False):
+                 virtual_data: bool = False,
+                 participation_model=None):
         self.problem = problem
         self.stepsize = stepsize
         virtual = virtual_data or problem.virtual is not None
@@ -68,7 +69,8 @@ class DistributedGD(FederatedSolver):
                                                client_chunk=client_chunk,
                                                participation=participation,
                                                cohort=cohort,
-                                               virtual_data=virtual))
+                                               virtual_data=virtual),
+                                  participation_model=participation_model)
         self._passes = [] if virtual else [
             jax.jit(functools.partial(_gd_client_pass, bucket=b,
                                       lam=problem.flat.lam, stepsize=stepsize))
@@ -89,7 +91,8 @@ class DistributedGD(FederatedSolver):
         return {"stepsize": self.stepsize}
 
     def round(self, state: SolverState, key: jax.Array) -> SolverState:
-        return state.replace(w=self._round_fast(state.w, key),
+        return state.replace(w=self._round_fast(state.w, key,
+                                                round_index=state.round),
                              round=state.round + 1)
 
 

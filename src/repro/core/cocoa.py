@@ -32,7 +32,7 @@ tests/_oracles.py and pin these ports round-by-round.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Sequence
+from typing import Any, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -145,6 +145,10 @@ class CoCoAConfig:
     # dual blocks α_k stay materialized — they are the algorithm's own
     # state, not the dataset's.
     virtual_data: bool = False
+    # replace the Bernoulli draw with a repro.fleet participation model
+    # (trace-driven availability/stragglers); `participation` then serves
+    # as the model's upper-bound rate for cohort capacity sizing
+    participation_model: Optional[Any] = None
 
 
 class CoCoAPlus(FederatedSolver):
@@ -190,6 +194,7 @@ class CoCoAPlus(FederatedSolver):
                          client_chunk=cfg.client_chunk,
                          cohort=cfg.cohort,
                          virtual_data=virtual),
+            participation_model=cfg.participation_model,
         )
 
         def cocoa_pass(w, bi, bucket, alpha_b, kb):
@@ -217,7 +222,8 @@ class CoCoAPlus(FederatedSolver):
             round=jnp.asarray(0, jnp.int32))
 
     def round(self, state: SolverState, key: jax.Array) -> SolverState:
-        w, alphas = self._round_fast(state.w, state.aux, key)
+        w, alphas = self._round_fast(state.w, state.aux, key,
+                                     round_index=state.round)
         return SolverState(w=w, aux=alphas, round=state.round + 1)
 
     @property

@@ -33,7 +33,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Optional
+from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
@@ -76,6 +76,10 @@ class DANEConfig:
     # run on a build_virtual_problem layout: rows regenerate on demand
     # inside the round (see EngineConfig.virtual_data; auto-detected)
     virtual_data: bool = False
+    # replace the Bernoulli draw with a repro.fleet participation model
+    # (trace-driven availability/stragglers); `participation` then serves
+    # as the model's upper-bound rate for cohort capacity sizing
+    participation_model: Optional[Any] = None
 
     def __post_init__(self):
         if self.local_solver not in _SOLVERS:
@@ -215,6 +219,7 @@ class DANE(FederatedSolver):
                          client_chunk=cfg.client_chunk,
                          cohort=cfg.cohort,
                          virtual_data=virtual),
+            participation_model=cfg.participation_model,
         )
 
         # Alg. 2 step 1's full gradient is the eager prelude (its own round
@@ -238,7 +243,8 @@ class DANE(FederatedSolver):
                                                 chunk_pass=dane_chunk_pass)
 
     def round(self, state: SolverState, key: jax.Array) -> SolverState:
-        return state.replace(w=self._round_fast(state.w, key),
+        return state.replace(w=self._round_fast(state.w, key,
+                                                round_index=state.round),
                              round=state.round + 1)
 
 

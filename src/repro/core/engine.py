@@ -43,6 +43,17 @@ are drawn **once** (:meth:`RoundEngine.participation_masks`) and shared by
 state freezing and aggregation — one draw, two consumers, bit-identical to
 the historical re-derivation by construction (same ``fold_in`` chain).
 
+The single Bernoulli draw is itself pluggable: a **participation model**
+(``repro.fleet.participation``) handed to the engine replaces the draw
+with arbitrary per-round per-client masks — diurnal availability traces,
+correlated dropout bursts, stragglers — while every consumer downstream
+(weight zeroing, reweighting, dual-state freezing, the cohort gather) is
+unchanged, because they only ever see the mask list.  Round-dependent
+models need the round index, so every round entry point (and the compiled
+closures) accepts ``round_index``; solvers forward ``state.round``, and
+``cfg.participation`` becomes the model's *upper-bound* rate used for
+cohort capacity sizing (the model owns the actual draw).
+
 Because rounds are the scarce resource (§1: "minimizing the number of
 rounds of communication is the principal goal"), the per-round server work
 should be a *constant number of compiled dispatches*, not a Python loop of
@@ -246,9 +257,17 @@ class RoundEngine:
     looks inside the deltas it aggregates."""
 
     def __init__(self, problem: FederatedLogReg, cfg: EngineConfig = EngineConfig(),
-                 *, a_diag: Optional[jax.Array] = None):
+                 *, a_diag: Optional[jax.Array] = None,
+                 participation_model: Optional[Any] = None):
         self.problem = problem
         self.cfg = cfg
+        if participation_model is not None and not hasattr(
+                participation_model, "masks"):
+            raise ValueError(
+                "participation_model must implement "
+                "masks(key, round_index, offsets, sizes) — see "
+                "repro.fleet.participation.ParticipationModel")
+        self.participation_model = participation_model
         if cfg.server_scaling == "diag" and a_diag is None:
             raise ValueError("server_scaling='diag' requires an a_diag")
         layout = getattr(problem, "virtual", None)
@@ -271,6 +290,22 @@ class RoundEngine:
             offsets.append(wi)
             wi += b.num_clients
         self._offsets = tuple(offsets)
+        self._sizes = tuple(b.num_clients for b in problem.buckets)
+
+    def _round_index_arg(self, round_index):
+        """Normalize the round index the masks are drawn for.  ``None`` is
+        the legacy calling convention — fine for the Bernoulli draw and any
+        round-invariant model, an error for round-dependent ones (traces),
+        whose masks are a function of ``(seed, r)`` by contract."""
+        if round_index is None:
+            if (self.participation_model is not None and
+                    getattr(self.participation_model, "needs_round_index",
+                            False)):
+                raise ValueError(
+                    "this engine's participation model is round-dependent; "
+                    "pass round_index (solvers forward state.round)")
+            return jnp.asarray(0, jnp.int32)
+        return jnp.asarray(round_index, jnp.int32)
 
     def _realize(self, bucket):
         """Materialize a virtual bucket's rows through the problem's
@@ -297,15 +332,28 @@ class RoundEngine:
                                    (num_clients,))
                 < self.cfg.participation).astype(jnp.float32)
 
-    def participation_masks(self, key: jax.Array) -> Optional[List[jax.Array]]:
-        """The round's per-bucket Bernoulli masks, drawn **once** from the
-        round key's ``fold_in`` chain — ``None`` under full participation.
+    def participation_masks(self, key: jax.Array,
+                            round_index: Optional[Any] = None
+                            ) -> Optional[List[jax.Array]]:
+        """The round's per-bucket participation masks, drawn **once** from
+        the round key's ``fold_in`` chain — ``None`` under full
+        participation.
 
         This is the single draw both consumers share: state freezing in
         :meth:`round_with_state` and weight zeroing in :meth:`aggregate`
         receive the same mask list instead of each re-deriving the same
         Bernoulli draw per bucket.
+
+        With a ``participation_model`` installed, the draw is delegated to
+        ``model.masks(key, round_index, offsets, sizes)`` — trace-driven
+        availability/straggler masks instead of the i.i.d. Bernoulli, same
+        contract (list of per-bucket float {0,1} vectors, or ``None`` for
+        full participation).
         """
+        if self.participation_model is not None:
+            return self.participation_model.masks(
+                key, self._round_index_arg(round_index), self._offsets,
+                self._sizes)
         if self.cfg.participation >= 1.0:
             return None
         return [self.participation_mask(jax.random.fold_in(key, wi),
@@ -395,22 +443,26 @@ class RoundEngine:
     # -- steps 2-4: one full round ----------------------------------------- #
 
     def round(self, w: jax.Array, key: jax.Array,
-              client_pass: ClientPassFn) -> jax.Array:
+              client_pass: ClientPassFn, *,
+              round_index: Optional[Any] = None) -> jax.Array:
         """Run the client passes over every bucket, then aggregate.
 
         Each bucket's pass receives ``fold_in(key, wi)`` where ``wi`` is the
         bucket's first client index — the same key the round's single
-        participation draw uses for that bucket.
+        participation draw uses for that bucket.  ``round_index`` feeds
+        round-dependent participation models (availability traces); the
+        Bernoulli draw ignores it.
         """
         deltas: List[jax.Array] = []
         for bi, (wi, b) in enumerate(zip(self._offsets, self.problem.buckets)):
             kb = jax.random.fold_in(key, wi)
             deltas.append(client_pass(w, bi, self._realize(b), kb))
         return self.aggregate(w, deltas, key,
-                              masks=self.participation_masks(key))
+                              masks=self.participation_masks(key, round_index))
 
     def round_with_state(self, w: jax.Array, states: Sequence[Any],
-                         key: jax.Array, client_pass: DualClientPassFn
+                         key: jax.Array, client_pass: DualClientPassFn, *,
+                         round_index: Optional[Any] = None
                          ) -> Tuple[jax.Array, List[Any]]:
         """:meth:`round` for algorithms with per-client auxiliary state.
 
@@ -427,7 +479,7 @@ class RoundEngine:
         handed to both state freezing and aggregation, so primal and dual
         views never diverge.
         """
-        masks = self.participation_masks(key)
+        masks = self.participation_masks(key, round_index)
         deltas: List[jax.Array] = []
         new_states: List[Any] = []
         for bi, (wi, b) in enumerate(zip(self._offsets, self.problem.buckets)):
@@ -592,7 +644,8 @@ class RoundEngine:
         return w_next, new_states
 
     def round_streamed(self, w: jax.Array, key: jax.Array,
-                       chunk_pass: ChunkClientPassFn) -> jax.Array:
+                       chunk_pass: ChunkClientPassFn, *,
+                       round_index: Optional[Any] = None) -> jax.Array:
         """:meth:`round` with the client axis streamed in ``client_chunk``
         chunks — the weighted delta sum accumulates chunk-by-chunk and the
         (Kb, d) stacks are never materialized.  Same weighting /
@@ -602,13 +655,15 @@ class RoundEngine:
         """
         if self.cfg.client_chunk is None:
             raise ValueError("round_streamed requires cfg.client_chunk")
-        w_next, _ = self._streamed_round(w, key, chunk_pass, None,
-                                         self.participation_masks(key))
+        w_next, _ = self._streamed_round(
+            w, key, chunk_pass, None,
+            self.participation_masks(key, round_index))
         return w_next
 
     def round_streamed_with_state(self, w: jax.Array, states: Sequence[Any],
                                   key: jax.Array,
-                                  chunk_pass: DualChunkClientPassFn
+                                  chunk_pass: DualChunkClientPassFn, *,
+                                  round_index: Optional[Any] = None
                                   ) -> Tuple[jax.Array, List[Any]]:
         """:meth:`round_with_state`, streamed.  The pass receives chunk-sized
         state slices and the frozen-state masking applies per chunk with the
@@ -618,12 +673,13 @@ class RoundEngine:
             raise ValueError("round_streamed_with_state requires "
                              "cfg.client_chunk")
         return self._streamed_round(w, key, chunk_pass, list(states),
-                                    self.participation_masks(key))
+                                    self.participation_masks(key, round_index))
 
     # -- the virtual round: rows regenerated inside the traced body --------- #
 
     def round_virtual(self, w: jax.Array, key: jax.Array,
-                      chunk_pass: ChunkClientPassFn) -> jax.Array:
+                      chunk_pass: ChunkClientPassFn, *,
+                      round_index: Optional[Any] = None) -> jax.Array:
         """:meth:`round` over on-demand data: each bucket's rows are
         regenerated through the problem's virtual layout inside the round
         body — chunk-by-chunk under ``lax.scan`` when ``client_chunk`` is
@@ -635,13 +691,15 @@ class RoundEngine:
         """
         if not self.cfg.virtual_data:
             raise ValueError("round_virtual requires cfg.virtual_data")
-        w_next, _ = self._streamed_round(w, key, chunk_pass, None,
-                                         self.participation_masks(key))
+        w_next, _ = self._streamed_round(
+            w, key, chunk_pass, None,
+            self.participation_masks(key, round_index))
         return w_next
 
     def round_virtual_with_state(self, w: jax.Array, states: Sequence[Any],
                                  key: jax.Array,
-                                 chunk_pass: DualChunkClientPassFn
+                                 chunk_pass: DualChunkClientPassFn, *,
+                                 round_index: Optional[Any] = None
                                  ) -> Tuple[jax.Array, List[Any]]:
         """:meth:`round_with_state` over on-demand data — aux state still
         lives materialized (it is O(K·m_pad), the algorithm's own memory,
@@ -650,7 +708,7 @@ class RoundEngine:
             raise ValueError("round_virtual_with_state requires "
                              "cfg.virtual_data")
         return self._streamed_round(w, key, chunk_pass, list(states),
-                                    self.participation_masks(key))
+                                    self.participation_masks(key, round_index))
 
     # -- the cohort round: O(participation · K) client passes --------------- #
 
@@ -807,7 +865,8 @@ class RoundEngine:
         return w_next, new_states
 
     def round_cohort(self, w: jax.Array, key: jax.Array,
-                     chunk_pass: ChunkClientPassFn) -> jax.Array:
+                     chunk_pass: ChunkClientPassFn, *,
+                     round_index: Optional[Any] = None) -> jax.Array:
         """:meth:`round` computing only the sampled cohort — same single
         Bernoulli draw, same weighting/reweighting/scaling semantics, same
         per-client key chain; results match the masked reference to float
@@ -815,13 +874,15 @@ class RoundEngine:
         (or cap ≥ Kb) this degrades to the keyed full-bucket pass."""
         if self.cfg.cohort is None:
             raise ValueError("round_cohort requires cfg.cohort")
-        w_next, _ = self._cohort_round(w, key, chunk_pass, None,
-                                       self.participation_masks(key))
+        w_next, _ = self._cohort_round(
+            w, key, chunk_pass, None,
+            self.participation_masks(key, round_index))
         return w_next
 
     def round_cohort_with_state(self, w: jax.Array, states: Sequence[Any],
                                 key: jax.Array,
-                                chunk_pass: DualChunkClientPassFn
+                                chunk_pass: DualChunkClientPassFn, *,
+                                round_index: Optional[Any] = None
                                 ) -> Tuple[jax.Array, List[Any]]:
         """:meth:`round_with_state` computing only the sampled cohort.  Aux
         state is gathered with the cohort and scattered back afterwards;
@@ -834,7 +895,7 @@ class RoundEngine:
         if self.cfg.cohort is None:
             raise ValueError("round_cohort_with_state requires cfg.cohort")
         return self._cohort_round(w, key, chunk_pass, list(states),
-                                  self.participation_masks(key))
+                                  self.participation_masks(key, round_index))
 
     # -- the compiled round: O(1) dispatches per round ---------------------- #
 
@@ -854,8 +915,13 @@ class RoundEngine:
     def _use_cohort(self) -> bool:
         # Static dispatch: the gather only pays off when the draw actually
         # discards clients, so at participation=1.0 the knob is a no-op and
-        # compile falls through to the streamed/materialized body.
-        return self.cfg.cohort is not None and self.cfg.participation < 1.0
+        # compile falls through to the streamed/materialized body.  A
+        # participation model always counts as partial — its masks may drop
+        # clients regardless of cfg.participation (which, with a model, is
+        # the capacity-sizing bound, not the draw).
+        return self.cfg.cohort is not None and (
+            self.cfg.participation < 1.0
+            or self.participation_model is not None)
 
     def compile(self, client_pass: Callable, *,
                 prelude: Optional[Callable] = None,
@@ -902,37 +968,41 @@ class RoundEngine:
             c_pass = self._require_chunk_pass(chunk_pass)
 
             @functools.partial(jax.jit, donate_argnums=donate_args)
-            def _body(w, ctx, key):
+            def _body(w, ctx, key, r):
                 return self.round_cohort(
                     w, key,
-                    lambda w_, bi, cb, ks: c_pass(w_, bi, cb, ks, *ctx))
+                    lambda w_, bi, cb, ks: c_pass(w_, bi, cb, ks, *ctx),
+                    round_index=r)
         elif self.cfg.client_chunk is not None:
             c_pass = self._require_chunk_pass(chunk_pass)
 
             @functools.partial(jax.jit, donate_argnums=donate_args)
-            def _body(w, ctx, key):
+            def _body(w, ctx, key, r):
                 return self.round_streamed(
                     w, key,
-                    lambda w_, bi, cb, ks: c_pass(w_, bi, cb, ks, *ctx))
+                    lambda w_, bi, cb, ks: c_pass(w_, bi, cb, ks, *ctx),
+                    round_index=r)
         elif self.cfg.virtual_data:
             c_pass = self._require_chunk_pass(chunk_pass)
 
             @functools.partial(jax.jit, donate_argnums=donate_args)
-            def _body(w, ctx, key):
+            def _body(w, ctx, key, r):
                 return self.round_virtual(
                     w, key,
-                    lambda w_, bi, cb, ks: c_pass(w_, bi, cb, ks, *ctx))
+                    lambda w_, bi, cb, ks: c_pass(w_, bi, cb, ks, *ctx),
+                    round_index=r)
         else:
 
             @functools.partial(jax.jit, donate_argnums=donate_args)
-            def _body(w, ctx, key):
+            def _body(w, ctx, key, r):
                 return self.round(
                     w, key,
-                    lambda w_, bi, b, kb: client_pass(w_, bi, b, kb, *ctx))
+                    lambda w_, bi, b, kb: client_pass(w_, bi, b, kb, *ctx),
+                    round_index=r)
 
-        def compiled_round(w, key):
+        def compiled_round(w, key, round_index=None):
             ctx = tuple(prelude(w)) if prelude is not None else ()
-            return _body(w, ctx, key)
+            return _body(w, ctx, key, self._round_index_arg(round_index))
 
         return compiled_round
 
@@ -950,18 +1020,20 @@ class RoundEngine:
         if self.cfg.virtual_data:
             c_pass = self._require_chunk_pass(chunk_pass)
 
-            def reference_round(w, key):
+            def reference_round(w, key, round_index=None):
                 ctx = tuple(prelude(w)) if prelude is not None else ()
                 return self.round_virtual(
                     w, key,
-                    lambda w_, bi, cb, ks: c_pass(w_, bi, cb, ks, *ctx))
+                    lambda w_, bi, cb, ks: c_pass(w_, bi, cb, ks, *ctx),
+                    round_index=round_index)
 
             return reference_round
 
-        def reference_round(w, key):
+        def reference_round(w, key, round_index=None):
             ctx = tuple(prelude(w)) if prelude is not None else ()
             return self.round(
-                w, key, lambda w_, bi, b, kb: client_pass(w_, bi, b, kb, *ctx))
+                w, key, lambda w_, bi, b, kb: client_pass(w_, bi, b, kb, *ctx),
+                round_index=round_index)
 
         return reference_round
 
@@ -986,45 +1058,50 @@ class RoundEngine:
             c_pass = self._require_chunk_pass(chunk_pass)
 
             @functools.partial(jax.jit, donate_argnums=donate_args)
-            def _body(w, states, ctx, key):
+            def _body(w, states, ctx, key, r):
                 w2, new_states = self.round_cohort_with_state(
                     w, list(states), key,
                     lambda w_, bi, cb, s_c, ks: c_pass(w_, bi, cb, s_c, ks,
-                                                       *ctx))
+                                                       *ctx),
+                    round_index=r)
                 return w2, tuple(new_states)
         elif self.cfg.client_chunk is not None:
             c_pass = self._require_chunk_pass(chunk_pass)
 
             @functools.partial(jax.jit, donate_argnums=donate_args)
-            def _body(w, states, ctx, key):
+            def _body(w, states, ctx, key, r):
                 w2, new_states = self.round_streamed_with_state(
                     w, list(states), key,
                     lambda w_, bi, cb, s_c, ks: c_pass(w_, bi, cb, s_c, ks,
-                                                       *ctx))
+                                                       *ctx),
+                    round_index=r)
                 return w2, tuple(new_states)
         elif self.cfg.virtual_data:
             c_pass = self._require_chunk_pass(chunk_pass)
 
             @functools.partial(jax.jit, donate_argnums=donate_args)
-            def _body(w, states, ctx, key):
+            def _body(w, states, ctx, key, r):
                 w2, new_states = self.round_virtual_with_state(
                     w, list(states), key,
                     lambda w_, bi, cb, s_c, ks: c_pass(w_, bi, cb, s_c, ks,
-                                                       *ctx))
+                                                       *ctx),
+                    round_index=r)
                 return w2, tuple(new_states)
         else:
 
             @functools.partial(jax.jit, donate_argnums=donate_args)
-            def _body(w, states, ctx, key):
+            def _body(w, states, ctx, key, r):
                 w2, new_states = self.round_with_state(
                     w, list(states), key,
                     lambda w_, bi, b, s_b, kb: dual_pass(w_, bi, b, s_b, kb,
-                                                         *ctx))
+                                                         *ctx),
+                    round_index=r)
                 return w2, tuple(new_states)
 
-        def compiled_round(w, states, key):
+        def compiled_round(w, states, key, round_index=None):
             ctx = tuple(prelude(w)) if prelude is not None else ()
-            return _body(w, tuple(states), ctx, key)
+            return _body(w, tuple(states), ctx, key,
+                         self._round_index_arg(round_index))
 
         return compiled_round
 
@@ -1037,21 +1114,23 @@ class RoundEngine:
         if self.cfg.virtual_data:
             c_pass = self._require_chunk_pass(chunk_pass)
 
-            def reference_round(w, states, key):
+            def reference_round(w, states, key, round_index=None):
                 ctx = tuple(prelude(w)) if prelude is not None else ()
                 w2, new_states = self.round_virtual_with_state(
                     w, list(states), key,
                     lambda w_, bi, cb, s_c, ks: c_pass(w_, bi, cb, s_c, ks,
-                                                       *ctx))
+                                                       *ctx),
+                    round_index=round_index)
                 return w2, tuple(new_states)
 
             return reference_round
 
-        def reference_round(w, states, key):
+        def reference_round(w, states, key, round_index=None):
             ctx = tuple(prelude(w)) if prelude is not None else ()
             w2, new_states = self.round_with_state(
                 w, list(states), key,
-                lambda w_, bi, b, s_b, kb: dual_pass(w_, bi, b, s_b, kb, *ctx))
+                lambda w_, bi, b, s_b, kb: dual_pass(w_, bi, b, s_b, kb, *ctx),
+                round_index=round_index)
             return w2, tuple(new_states)
 
         return reference_round

@@ -26,7 +26,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Optional
+from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
@@ -56,6 +56,10 @@ class FedAvgConfig:
     # run on a build_virtual_problem layout: rows regenerate on demand
     # inside the round (see EngineConfig.virtual_data; auto-detected)
     virtual_data: bool = False
+    # replace the Bernoulli draw with a repro.fleet participation model
+    # (trace-driven availability/stragglers); `participation` then serves
+    # as the model's upper-bound rate for cohort capacity sizing
+    participation_model: Optional[Any] = None
 
 
 def _local_sgd_pass(w0, bucket: ClientBucket, lam, cfg: FedAvgConfig,
@@ -131,6 +135,7 @@ class FedAvg(FederatedSolver):
                 cohort=cfg.cohort,
                 virtual_data=virtual,
             ),
+            participation_model=cfg.participation_model,
         )
 
         def fedavg_pass(w, bi, bucket, kb):
@@ -146,7 +151,8 @@ class FedAvg(FederatedSolver):
                                                 chunk_pass=fedavg_chunk_pass)
 
     def round(self, state: SolverState, key: jax.Array) -> SolverState:
-        return state.replace(w=self._round_fast(state.w, key),
+        return state.replace(w=self._round_fast(state.w, key,
+                                                round_index=state.round),
                              round=state.round + 1)
 
 

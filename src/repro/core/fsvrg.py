@@ -21,7 +21,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Optional
+from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
@@ -62,6 +62,10 @@ class FSVRGConfig:
     # inside the round (see EngineConfig.virtual_data).  Auto-detected from
     # the problem, so passing a virtual problem is enough.
     virtual_data: bool = False
+    # replace the Bernoulli draw with a repro.fleet participation model
+    # (trace-driven availability/stragglers); `participation` then serves
+    # as the model's upper-bound rate for cohort capacity sizing
+    participation_model: Optional[Any] = None
 
 
 def _client_pass(w0, full_grad, bucket: ClientBucket, lam, phi, cfg: FSVRGConfig, key):
@@ -156,6 +160,7 @@ class FSVRG(FederatedSolver):
                 virtual_data=virtual,
             ),
             a_diag=self.a_diag,
+            participation_model=cfg.participation_model,
         )
         # The full gradient is the round's own communication (Alg. 4 line 3),
         # so it is the eager prelude; everything after it is one compiled
@@ -175,7 +180,8 @@ class FSVRG(FederatedSolver):
                                                 chunk_pass=fsvrg_chunk_pass)
 
     def round(self, state: SolverState, key: jax.Array) -> SolverState:
-        return state.replace(w=self._round_fast(state.w, key),
+        return state.replace(w=self._round_fast(state.w, key,
+                                                round_index=state.round),
                              round=state.round + 1)
 
 

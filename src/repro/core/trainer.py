@@ -7,8 +7,11 @@ schedule, and stepsize sweep per algorithm (~30 lines each in
   * **Key schedule** — round r uses ``fold_in(PRNGKey(seed), r)`` with r the
     *absolute* round index from ``state.round``, so a restored checkpoint
     resumes the exact same key sequence it would have seen uninterrupted.
-  * **Eval / history** — ``eval_fn(w) -> dict`` of scalars, recorded every
-    round as Python floats; ``callback(state, r)`` for side effects.
+  * **Eval / history** — ``eval_fn(w) -> dict`` of scalars, recorded as
+    Python floats every ``eval_every`` rounds (default every round; the
+    final round is always evaluated, so ``history[-1]`` keeps meaning
+    "final objective" for :func:`sweep` at any cadence);
+    ``callback(state, r)`` for side effects.
   * **Scan fast path** — with ``scan=True`` the whole loop runs as one
     ``jit(lax.scan)`` over rounds.  Valid whenever the solver state is a
     pure pytree and ``round`` is traceable (every solver in this repo) and
@@ -74,6 +77,7 @@ class Trainer:
                  eval_fn: Optional[EvalFn] = None,
                  callback: Optional[Callable[[SolverState, int], None]] = None,
                  scan: bool = False,
+                 eval_every: int = 1,
                  checkpoint_dir: Optional[str] = None,
                  checkpoint_every: int = 0):
         if scan and callback is not None:
@@ -85,14 +89,22 @@ class Trainer:
                              "state is still saved to checkpoint_dir)")
         if checkpoint_every and not checkpoint_dir:
             raise ValueError("checkpoint_every requires a checkpoint_dir")
+        if int(eval_every) < 1:
+            raise ValueError("eval_every must be >= 1")
         self.solver = solver
         self.rounds = int(rounds)
         self.seed = int(seed)
         self.eval_fn = eval_fn
         self.callback = callback
         self.scan = scan
+        self.eval_every = int(eval_every)
         self.checkpoint_dir = checkpoint_dir
         self.checkpoint_every = int(checkpoint_every)
+
+    def _is_eval_round(self, r: int) -> bool:
+        """Rounds whose metrics land in history: every ``eval_every``-th
+        round plus, unconditionally, the final one."""
+        return (r + 1) % self.eval_every == 0 or r == self.rounds - 1
 
     # -- checkpointing ----------------------------------------------------- #
 
@@ -140,7 +152,7 @@ class Trainer:
         saved_at = -1
         for r in range(start, self.rounds):
             state = self.solver.round(state, jax.random.fold_in(base, r))
-            if self.eval_fn is not None:
+            if self.eval_fn is not None and self._is_eval_round(r):
                 history.append({k: float(v)
                                 for k, v in self.eval_fn(state.w).items()})
             if self.callback is not None:
@@ -158,18 +170,37 @@ class Trainer:
         base = jax.random.PRNGKey(self.seed)
         rs = jnp.arange(start, self.rounds)
         keys = jax.vmap(lambda r: jax.random.fold_in(base, r))(rs)
+        sparse_eval = self.eval_fn is not None and self.eval_every != 1
+        if sparse_eval:
+            # eval_fn runs under lax.cond on eval rounds only; off rounds
+            # emit same-shaped placeholders that are discarded below
+            shapes = jax.eval_shape(self.eval_fn, state.w)
 
-        def body(s, key):
+            def maybe_eval(w, r):
+                pred = ((r + 1) % self.eval_every == 0) | (r == self.rounds - 1)
+                return jax.lax.cond(
+                    pred, self.eval_fn,
+                    lambda _: jax.tree.map(
+                        lambda s: jnp.zeros(s.shape, s.dtype), shapes), w)
+
+        def body(s, rk):
+            r, key = rk
             s = self.solver.round(s, key)
-            metrics = self.eval_fn(s.w) if self.eval_fn is not None else {}
+            if sparse_eval:
+                metrics = maybe_eval(s.w, r)
+            else:
+                metrics = self.eval_fn(s.w) if self.eval_fn is not None else {}
             return s, metrics
 
         final, stacked = jax.jit(
-            lambda s, ks: jax.lax.scan(body, s, ks))(state, keys)
-        history = [
-            {k: float(v[i]) for k, v in stacked.items()}
-            for i in range(self.rounds - start)
-        ] if self.eval_fn is not None else []
+            lambda s, xs: jax.lax.scan(body, s, xs))(state, (rs, keys))
+        if self.eval_fn is None:
+            history: List[Dict[str, float]] = []
+        else:
+            recorded = [i for i, r in enumerate(range(start, self.rounds))
+                        if self._is_eval_round(r)]
+            history = [{k: float(v[i]) for k, v in stacked.items()}
+                       for i in recorded]
         if self.checkpoint_dir:
             self.save(final)
         return FitResult(state=final, history=history, solver=self.solver)

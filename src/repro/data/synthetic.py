@@ -391,7 +391,15 @@ def generate(cfg, seed: int = 0) -> FederatedDataset:
     """cfg: repro.configs.gplus_logreg.LogRegConfig (possibly .scaled()).
 
     Materializes the dataset through the *same* keyed sampler the virtual
-    path uses (:func:`virtual_dataset` / :func:`make_client_batch`), fully
+    path uses (:func:`virtual_dataset` / :func:`make_client_batch`) —
+    ``generate(cfg, seed)`` is exactly
+    ``materialize_dataset(virtual_dataset(cfg, seed))``.
+    """
+    return materialize_dataset(virtual_dataset(cfg, seed))
+
+
+def materialize_dataset(vds: VirtualDataset) -> FederatedDataset:
+    """Materialize every client's rows from a virtual spec, fully
     vectorized over clients and examples: per-client params run in
     ``_PARAM_BLOCK`` client batches (the dense (block, d) Gumbel score
     matrix bounds peak memory at O(block·d), not O(K·d)), per-example rows
@@ -403,8 +411,11 @@ def generate(cfg, seed: int = 0) -> FederatedDataset:
     guarantees ≥1 train *and* ≥1 test example for every client with
     n_k ≥ 2.  A client with n_k == 1 puts its single example in train and
     has zero test examples.
+
+    Taking the spec (rather than a cfg) is what makes distribution drift a
+    data-layer feature: :func:`drifted_dataset` perturbs the spec and this
+    function materializes the drifted epoch through the same sampler.
     """
-    vds = virtual_dataset(cfg, seed)
     K, d = vds.num_clients, vds.num_features
     nnz = vds.nnz
     sizes = vds.full_sizes
@@ -462,3 +473,50 @@ def generate(cfg, seed: int = 0) -> FederatedDataset:
         test_idx=all_idx[te_mask], test_val=all_val[te_mask],
         test_y=all_y[te_mask], test_client_of=client_of[te_mask],
     )
+
+
+# --------------------------------------------------------------------- #
+# distribution drift: epoch-indexed perturbations of the virtual spec
+# --------------------------------------------------------------------- #
+
+# folded off base_key to root drift resampling; chain depth keeps it
+# disjoint from per-client keys (those are fold_in(base, k) — one level)
+_DRIFT_TAG = 0xD41F7
+
+
+def drifted_dataset(vds: VirtualDataset, epoch: int, *,
+                    w_true_scale: float = 1.0,
+                    resample_clients: bool = False) -> VirtualDataset:
+    """Epoch ``epoch``'s view of the fleet's data distribution.
+
+    Two drift modes, composable, both pure functions of
+    ``(vds, epoch)`` so any epoch's data regenerates bit-for-bit in
+    isolation (the campaign's resume contract):
+
+      * ``w_true_scale`` — smooth concept drift: the ground-truth weights
+        scale by ``w_true_scale**epoch``, so label noise grows (scale < 1,
+        the signal washes out) or sharpens (scale > 1) across epochs while
+        every client keeps its vocabulary and feature marginals.
+      * ``resample_clients`` — abrupt distribution shift: the base key is
+        re-rooted through the drift chain, redrawing every client's
+        vocabulary / mixture / bias (fresh conditional distributions, same
+        sizes, same w_true).
+
+    ``epoch=0`` is the identity — the returned spec *is* ``vds``, so
+    campaigns without drift pay nothing.  Client count, per-client sizes,
+    and therefore every engine shape are invariant under drift: solvers
+    keep their compiled rounds' shapes, only the regenerated rows change.
+    """
+    if epoch < 0:
+        raise ValueError("epoch must be >= 0")
+    if epoch == 0:
+        return vds
+    out = vds
+    if w_true_scale != 1.0:
+        out = dataclasses.replace(
+            out, w_true=vds.w_true * jnp.float32(w_true_scale) ** epoch)
+    if resample_clients:
+        out = dataclasses.replace(
+            out, base_key=jax.random.fold_in(
+                jax.random.fold_in(vds.base_key, _DRIFT_TAG), epoch))
+    return out

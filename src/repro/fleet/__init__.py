@@ -1,0 +1,42 @@
+"""Fleet simulation: what the engine's Bernoulli draw abstracts away.
+
+The paper's setting (§1.2) is a fleet of phones that participate only
+when charging and on wifi — availability is diurnal and correlated, slow
+devices miss the reporting deadline, and client distributions drift.
+This package simulates that fleet *deterministically*:
+
+  traces.py        — bit-stable availability/straggler mask generators:
+                     any round's fleet state is a pure function of
+                     ``(trace.seed, round)``, invariant to how the engine
+                     batches clients (chunk / cohort / bucket)
+  participation.py — the :class:`ParticipationModel` protocol plugging
+                     those traces into :class:`repro.core.RoundEngine`
+                     in place of its i.i.d. Bernoulli draw
+  metrics.py       — structured JSONL round telemetry (drawn vs realized
+                     cohort, stragglers, objective, wall/RSS)
+  campaign.py      — the checkpointed, kill-resumable campaign runner
+                     over the Fig.-2 solver grid (see
+                     ``benchmarks/campaign.py``)
+"""
+from repro.fleet.campaign import (CampaignInterrupted, CampaignSpec,
+                                  run_campaign, run_cell)
+from repro.fleet.metrics import (TIMING_KEYS, EventLog, RoundEvent,
+                                 deterministic_view, peak_rss_mb,
+                                 summarize_events)
+from repro.fleet.participation import (BernoulliParticipation,
+                                       FixedParticipation,
+                                       ParticipationModel,
+                                       TraceParticipation)
+from repro.fleet.traces import (FleetMasks, FleetTrace, availability_mask,
+                                availability_rate, fleet_masks,
+                                straggler_flags)
+
+__all__ = [
+    "CampaignInterrupted", "CampaignSpec", "run_campaign", "run_cell",
+    "TIMING_KEYS", "EventLog", "RoundEvent", "deterministic_view",
+    "peak_rss_mb", "summarize_events",
+    "BernoulliParticipation", "FixedParticipation", "ParticipationModel",
+    "TraceParticipation",
+    "FleetMasks", "FleetTrace", "availability_mask", "availability_rate",
+    "fleet_masks", "straggler_flags",
+]

@@ -1,0 +1,275 @@
+"""Resumable fleet campaigns: the Fig.-2 grid under a simulated fleet.
+
+A campaign runs a set of registry solvers ("cells") on one dataset for a
+fixed round budget, each under a participation model (trace-driven
+availability/stragglers, plain Bernoulli, or full participation), and
+emits one JSONL :class:`~repro.fleet.metrics.RoundEvent` per (cell,
+round).  Everything about a campaign is engineered to be *resumable*:
+
+  * each cell checkpoints through :mod:`repro.checkpoint` (atomic
+    manifest-last saves) every ``checkpoint_every`` rounds;
+  * the Trainer's absolute-round key schedule and the trace's
+    ``(seed, round)``-pure masks make any round's computation independent
+    of where the process last died;
+  * on restart, a cell restores its newest checkpoint, the event log
+    drops the rounds about to re-run (:meth:`EventLog.truncate`), and the
+    re-emitted events are byte-identical (modulo ``TIMING_KEYS``) to what
+    an uninterrupted run would have written.
+
+That is the acceptance property: ``kill -9`` at any instant, re-invoke,
+and the final iterates and the deterministic view of the event stream
+match the uninterrupted run bit-for-bit.
+
+Distribution drift (§1.2's non-stationary clients) is modeled as epoch
+segments: every ``drift_every`` rounds the dataset is rebuilt via
+:func:`repro.data.synthetic.drifted_dataset` (same shapes, shifted
+ground truth and/or resampled client data) and the solver is
+reconstructed on the new problem with the carried-over state — the
+epoch is a pure function of the absolute round, so resume lands in the
+correct segment automatically.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.fleet.metrics import EventLog, RoundEvent, peak_rss_mb, summarize_events
+from repro.fleet.participation import BernoulliParticipation, TraceParticipation
+from repro.fleet.traces import FleetTrace
+
+
+class CampaignInterrupted(Exception):
+    """Raised by the ``stop_after`` hook to simulate a mid-campaign crash
+    (no final checkpoint, possibly a torn event tail) — the resume path's
+    test double for a real ``kill -9``."""
+
+    def __init__(self, rounds_done: int):
+        super().__init__(f"campaign stopped after {rounds_done} rounds")
+        self.rounds_done = rounds_done
+
+
+@dataclasses.dataclass(frozen=True)
+class CampaignSpec:
+    """One campaign = (dataset, fleet, grid, budget) — everything a resumed
+    invocation needs to recompute exactly the same run."""
+
+    algos: Tuple[str, ...] = ("gd", "fedavg")
+    rounds: int = 30
+    seed: int = 0
+    #: None -> the paper-K dataset (K=10,000 clients, CI-shrunk d/n_k);
+    #: a float runs get_logreg_config().scaled(scale) instead
+    scale: Optional[float] = None
+    #: "trace" | "bernoulli" | "full"
+    model: str = "trace"
+    #: Bernoulli rate, or ignored for "trace"/"full"
+    participation: float = 0.3
+    trace: FleetTrace = dataclasses.field(default_factory=FleetTrace)
+    cohort: Optional[int] = None
+    client_chunk: Optional[int] = None
+    eval_every: int = 1
+    checkpoint_every: int = 5
+    #: rounds per drift epoch; 0 disables drift
+    drift_every: int = 0
+    drift_w_scale: float = 1.0
+    drift_resample: bool = False
+    #: per-algo solver overrides, e.g. {"fedavg": {"stepsize": 0.3}}
+    overrides: Dict[str, Dict] = dataclasses.field(default_factory=dict)
+
+    def __post_init__(self):
+        if self.model not in ("trace", "bernoulli", "full"):
+            raise ValueError("model must be 'trace', 'bernoulli', or 'full'")
+        if self.rounds < 1:
+            raise ValueError("rounds must be >= 1")
+
+    def participation_model(self):
+        """(model_or_None, capacity_rate) for the engine: the model owns
+        the draw, the rate bounds the cohort capacity."""
+        if self.model == "trace":
+            return TraceParticipation(self.trace), self.trace.max_rate()
+        if self.model == "bernoulli" and self.participation < 1.0:
+            return BernoulliParticipation(self.participation), self.participation
+        return None, 1.0
+
+    def to_jsonable(self) -> Dict:
+        return dataclasses.asdict(self)
+
+
+def _epoch_of(spec: CampaignSpec, r: int) -> int:
+    return r // spec.drift_every if spec.drift_every > 0 else 0
+
+
+def _segment_end(spec: CampaignSpec, r: int) -> int:
+    if spec.drift_every <= 0:
+        return spec.rounds
+    return min(((r // spec.drift_every) + 1) * spec.drift_every, spec.rounds)
+
+
+def _build_epoch(spec: CampaignSpec, epoch: int):
+    """(problem, test_problem) for a drift epoch — a pure function of
+    (spec, epoch), which is what makes resume-into-a-segment exact."""
+    from repro.configs import get_logreg_config
+    from repro.configs.gplus_logreg import PAPER_K_CONFIG
+    from repro.core import build_problem, build_test_problem
+    from repro.data.synthetic import (drifted_dataset, materialize_dataset,
+                                      virtual_dataset)
+
+    cfg = (PAPER_K_CONFIG if spec.scale is None
+           else get_logreg_config().scaled(spec.scale))
+    vds = virtual_dataset(cfg, seed=spec.seed)
+    if spec.drift_every > 0:
+        vds = drifted_dataset(vds, epoch, w_true_scale=spec.drift_w_scale,
+                              resample_clients=spec.drift_resample)
+    ds = materialize_dataset(vds)
+    return build_problem(ds), build_test_problem(ds)
+
+
+def _make_solver_for(spec: CampaignSpec, algo: str, problem):
+    from repro.core import make_solver
+    model, rate = spec.participation_model()
+    kw = dict(participation=rate, participation_model=model,
+              client_chunk=spec.client_chunk, cohort=spec.cohort)
+    kw.update(spec.overrides.get(algo, {}))
+    return make_solver(algo, problem, **kw)
+
+
+def _count_fn(model, offsets, sizes):
+    """jitted (key, r) -> (drawn, realized, stragglers) int32 counts,
+    recomputing exactly the masks the engine drew for that round — the
+    single source of randomness is shared, not duplicated."""
+    total = int(sum(sizes))
+    if model is None:
+        return lambda key, r: (total, total, 0)
+
+    @jax.jit
+    def counts(key, r):
+        comp = model.mask_components(key, jnp.asarray(r, jnp.int32),
+                                     offsets, sizes)
+        if comp is None:
+            t = jnp.int32(total)
+            return t, t, jnp.int32(0)
+        avail, returned = comp
+        drawn = sum(m.sum() for m in avail)
+        realized = sum(m.sum() for m in returned)
+        return (drawn.astype(jnp.int32), realized.astype(jnp.int32),
+                (drawn - realized).astype(jnp.int32))
+
+    def run(key, r):
+        d, re, s = counts(key, r)
+        return int(d), int(re), int(s)
+
+    return run
+
+
+def run_cell(spec: CampaignSpec, algo: str, out_dir: str, log: EventLog,
+             budget: Optional[Dict] = None, verbose: bool = True) -> Dict:
+    """Run (or resume) one campaign cell to its round budget.
+
+    ``budget`` is the cross-cell ``stop_after`` countdown:
+    ``{"left": n}`` decrements per completed round and raises
+    :class:`CampaignInterrupted` at zero.
+    Returns ``{"w": final iterate, "round": rounds}``.
+    """
+    from repro.core import Trainer
+
+    ckpt_dir = os.path.join(out_dir, "cells", algo)
+    state = None
+    if os.path.exists(os.path.join(ckpt_dir, "manifest.json")):
+        state = Trainer.restore(ckpt_dir)
+        if verbose:
+            print(f"[{algo}] resuming from round {int(state.round)}")
+    start = 0 if state is None else int(state.round)
+    # the rounds >= start are about to re-run and re-emit
+    log.truncate(algo, start)
+
+    model, _ = spec.participation_model()
+    base = jax.random.PRNGKey(spec.seed)
+    r = start
+    while r < spec.rounds:
+        epoch = _epoch_of(spec, r)
+        seg_end = _segment_end(spec, r)
+        problem, test = _build_epoch(spec, epoch)
+        solver = _make_solver_for(spec, algo, problem)
+        if state is None:
+            state = solver.init(jnp.zeros(problem.d))
+        counts = _count_fn(model, solver.engine._offsets,
+                           solver.engine._sizes)
+        loss = jax.jit(problem.flat.loss)
+        err = jax.jit(test.error_rate)
+        t_mark = [time.perf_counter()]
+
+        def callback(st, rr, counts=counts, loss=loss, err=err,
+                     t_mark=t_mark):
+            drawn, realized, stragglers = counts(
+                jax.random.fold_in(base, rr), rr)
+            is_eval = ((rr + 1) % spec.eval_every == 0
+                       or rr == spec.rounds - 1)
+            f_v = float(loss(st.w)) if is_eval else None
+            e_v = float(err(st.w)) if is_eval else None
+            now = time.perf_counter()
+            log.append(RoundEvent(
+                cell=algo, round=rr, drawn=drawn, realized=realized,
+                stragglers=stragglers, f=f_v, err=e_v,
+                wall_s=now - t_mark[0], peak_rss_mb=peak_rss_mb()))
+            t_mark[0] = now
+            if verbose and (is_eval or stragglers):
+                msg = f"[{algo}] r{rr}: drawn={drawn} realized={realized}"
+                if f_v is not None:
+                    msg += f" f={f_v:.5f} err={e_v:.4f}"
+                print(msg)
+            if budget is not None:
+                budget["left"] -= 1
+                if budget["left"] <= 0:
+                    raise CampaignInterrupted(rr + 1)
+
+        trainer = Trainer(solver, rounds=seg_end, seed=spec.seed,
+                          callback=callback, checkpoint_dir=ckpt_dir,
+                          checkpoint_every=spec.checkpoint_every)
+        res = trainer.fit(state=state)
+        state = res.state
+        r = seg_end
+    return {"w": state.w, "round": int(state.round)}
+
+
+def run_campaign(spec: CampaignSpec, out_dir: str,
+                 stop_after: Optional[int] = None,
+                 verbose: bool = True) -> Dict:
+    """Run (or resume) every cell of a campaign; write ``events.jsonl``
+    and, on completion, an atomic ``summary.json``.
+
+    ``stop_after`` aborts the invocation after that many rounds *of this
+    invocation* (simulated crash); the return value then carries
+    ``{"interrupted": True}`` and a re-invocation without ``stop_after``
+    resumes and completes.
+    """
+    os.makedirs(out_dir, exist_ok=True)
+    log = EventLog(os.path.join(out_dir, "events.jsonl"))
+    budget = {"left": stop_after} if stop_after is not None else None
+    finals = {}
+    try:
+        for algo in spec.algos:
+            finals[algo] = run_cell(spec, algo, out_dir, log,
+                                    budget=budget, verbose=verbose)
+    except CampaignInterrupted as e:
+        if verbose:
+            print(f"campaign interrupted after {e.rounds_done} rounds "
+                  f"(this invocation)")
+        return {"interrupted": True, "rounds_done": e.rounds_done}
+
+    cells = summarize_events(log.load())
+    summary = {"spec": spec.to_jsonable(), "cells": cells,
+               "events": os.path.basename(log.path)}
+    path = os.path.join(out_dir, "summary.json")
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(summary, f, indent=1, sort_keys=True)
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, path)
+    summary["finals"] = finals
+    return summary

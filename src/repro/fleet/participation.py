@@ -1,0 +1,142 @@
+"""Participation models — the engine's sampling step as a pluggable draw.
+
+:class:`~repro.core.engine.RoundEngine` historically owned one sampling
+rule: an i.i.d. Bernoulli(``cfg.participation``) per client per round.
+A participation model generalizes the rule while leaving every consumer
+of its output untouched — weight zeroing, unbiased reweighting,
+dual-state freezing, and the cohort gather all operate on the mask list
+the model returns, exactly as they did on the Bernoulli draw.
+
+Contract (:class:`ParticipationModel`):
+
+  * ``masks(key, round_index, offsets, sizes)`` returns the round's
+    per-bucket float {0,1} mask list (1.0 = this client's delta enters the
+    aggregate), or ``None`` for full participation.  ``key`` is the round
+    key (the same one the client passes receive), ``round_index`` the
+    absolute round, ``offsets``/``sizes`` the engine's per-bucket first
+    client index and client count — a client's *global* index is
+    ``offset + position``, which is what trace draws fold in, so masks are
+    invariant to how the engine batches clients (chunk, cohort, bucket).
+  * ``mask_components(...)`` additionally splits the draw into
+    ``(available, returned)`` mask lists for telemetry — drawn vs realized
+    cohort, straggler counts — without a second source of randomness.
+  * ``needs_round_index`` declares the model round-dependent: the engine
+    then refuses mask requests that don't carry the round (solvers always
+    forward ``state.round``; only legacy ``(w, key)`` call sites lack it).
+
+When a model is installed, ``EngineConfig.participation`` stops being the
+draw and becomes the model's **upper-bound rate** for cohort capacity
+sizing (set it to ``trace.max_rate()`` for traces) — the model owns the
+actual sampling.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.fleet.traces import FleetTrace, fleet_masks
+
+MaskList = List[jax.Array]
+
+
+class ParticipationModel:
+    """Protocol base — subclasses override :meth:`masks` (and optionally
+    :meth:`mask_components`, when "sampled" and "returned" differ)."""
+
+    #: round-dependent models set this so the engine rejects legacy
+    #: round-less mask requests instead of silently drawing round 0
+    needs_round_index: bool = False
+
+    def masks(self, key: jax.Array, round_index: jax.Array,
+              offsets: Sequence[int], sizes: Sequence[int]
+              ) -> Optional[MaskList]:
+        raise NotImplementedError
+
+    def mask_components(self, key: jax.Array, round_index: jax.Array,
+                        offsets: Sequence[int], sizes: Sequence[int]
+                        ) -> Optional[Tuple[MaskList, MaskList]]:
+        """(available, returned) mask lists — identical for models without
+        stragglers, where every sampled client reports."""
+        m = self.masks(key, round_index, offsets, sizes)
+        return None if m is None else (m, m)
+
+
+@dataclasses.dataclass(frozen=True)
+class BernoulliParticipation(ParticipationModel):
+    """The engine's historical i.i.d. draw as a model — bit-identical to
+    ``RoundEngine.participation_mask`` by construction (same ``fold_in``
+    chain, same 997 tag, same comparison), pinned by
+    ``tests/test_fleet.py``.  Exists so campaign configs can treat
+    "plain Bernoulli" and "trace-driven" as two values of one knob."""
+
+    participation: float = 1.0
+
+    def __post_init__(self):
+        if not 0.0 < self.participation <= 1.0:
+            raise ValueError("participation must be in (0, 1]")
+
+    def masks(self, key, round_index, offsets, sizes):
+        if self.participation >= 1.0:
+            return None
+        return [
+            (jax.random.uniform(
+                jax.random.fold_in(jax.random.fold_in(key, wi), 997), (kb,))
+             < self.participation).astype(jnp.float32)
+            for wi, kb in zip(offsets, sizes)]
+
+
+@dataclasses.dataclass(frozen=True)
+class TraceParticipation(ParticipationModel):
+    """Trace-driven availability + stragglers.
+
+    The mask handed to the engine is the trace's ``returned`` mask
+    (available AND reported): dropout-after-compute folded into the single
+    draw, so weight zeroing, dual-state freezing, and the cohort gather
+    all see one consistent client set — a straggler's delta is zeroed
+    *and* its dual state frozen, exactly like a never-sampled client,
+    which is the semantics of a delta that never arrived.  Unlike the
+    Bernoulli model the draw ignores ``key`` entirely: the fleet's state
+    is a pure function of ``(trace.seed, r)``, independent of the solver
+    seed, so re-running a round under a different solver seed faces the
+    same fleet.
+    """
+
+    trace: FleetTrace = dataclasses.field(default_factory=FleetTrace)
+    needs_round_index = True
+
+    def _bucket_ids(self, wi: int, kb: int) -> jax.Array:
+        return jnp.uint32(wi) + jnp.arange(kb, dtype=jnp.uint32)
+
+    def masks(self, key, round_index, offsets, sizes):
+        return [
+            fleet_masks(self.trace, round_index,
+                        self._bucket_ids(wi, kb)).returned
+            for wi, kb in zip(offsets, sizes)]
+
+    def mask_components(self, key, round_index, offsets, sizes):
+        avail: MaskList = []
+        returned: MaskList = []
+        for wi, kb in zip(offsets, sizes):
+            fm = fleet_masks(self.trace, round_index,
+                             self._bucket_ids(wi, kb))
+            avail.append(fm.available)
+            returned.append(fm.returned)
+        return avail, returned
+
+
+@dataclasses.dataclass(frozen=True)
+class FixedParticipation(ParticipationModel):
+    """Replay a fixed mask list every round — the test harness's tool for
+    proving mask-consumer identities (e.g. "a straggler behaves exactly
+    like a never-sampled client": run a trace model, capture its returned
+    masks, replay them here, and the rounds must agree bit-for-bit)."""
+
+    fixed: Tuple[jax.Array, ...]
+
+    def masks(self, key, round_index, offsets, sizes):
+        if len(self.fixed) != len(sizes):
+            raise ValueError("fixed mask list does not match bucket count")
+        return list(self.fixed)

@@ -1,0 +1,184 @@
+"""Deterministic fleet availability traces — who is reachable, round by round.
+
+The paper's deployment (§1.2) is a fleet of phones that participate only
+when charging and on wi-fi: availability is *diurnal* (a device is online
+at roughly the same local time every day), *correlated* (a network event
+takes a cohort of devices out together), and *unreliable mid-round* (a
+sampled device may compute its update and still fail to return it — a
+straggler).  This module generates all three as pure functions of
+``(trace, r, client_ids)`` with no state carried between rounds, so any
+round's fleet can be reproduced bit-for-bit in isolation — the property
+the campaign runner's kill-and-resume contract stands on.
+
+Seeding contract (the PR-7 rules, applied to the fleet):
+
+  * every draw comes from the trace's own key chain
+    ``fold_in(fold_in(PRNGKey(trace.seed), TAG), ...)`` — disjoint from the
+    solver/data chains, so adding a trace never perturbs client updates;
+  * per-client quantities fold in the *global client index*, never a batch
+    position — a mask regenerated for one client, a chunk, a gathered
+    cohort, or the whole fleet is the same bits (the chunk/cohort
+    invariance the engine paths rely on);
+  * only batch-shape-stable primitives (``uniform``, elementwise math) —
+    no ``normal`` (erfinv) or rejection sampling.
+
+The availability *rate* of client k at round r is
+
+    p_k(r) = clip(base + amplitude * sin(2π(r/period + phase_k)), 0, 1)
+
+with ``phase_k`` a per-client uniform phase (each device has its own
+"time zone"); a round-level burst event (probability ``burst_prob``)
+forces a random ``burst_frac`` of clients to rate 0 for that round.  The
+realized availability mask draws one uniform per (r, k) against p_k(r).
+Stragglers are an *independent* per-(r, k) Bernoulli(``straggler_rate``)
+over the available clients: an available straggler is sampled into the
+round but never returns its delta.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+# tags folded off PRNGKey(trace.seed) — one sub-chain per draw family
+_PHASE_TAG = 0      # per-client diurnal phase (round-invariant)
+_AVAIL_TAG = 1      # per-(r, k) availability uniform
+_BURST_TAG = 2      # per-round burst indicator
+_BURST_HIT_TAG = 3  # per-(r, k) burst membership
+_STRAGGLER_TAG = 4  # per-(r, k) straggler indicator
+
+
+@dataclasses.dataclass(frozen=True)
+class FleetTrace:
+    """A deterministic availability/straggler process for a whole fleet.
+
+    ``seed`` roots the trace's own key chain; everything else shapes the
+    rate process.  ``base``/``amplitude``/``period`` give each client a
+    sinusoidal diurnal rate with its own phase; ``burst_prob`` rounds
+    suffer a correlated dropout hitting ``burst_frac`` of clients;
+    available clients straggle (compute but never report) i.i.d. with
+    ``straggler_rate``.
+    """
+
+    seed: int = 0
+    base: float = 0.4          # mean availability rate
+    amplitude: float = 0.25    # diurnal swing around base
+    period: float = 24.0       # rounds per diurnal cycle
+    burst_prob: float = 0.05   # P[a round has a correlated dropout burst]
+    burst_frac: float = 0.3    # fraction of clients a burst takes out
+    straggler_rate: float = 0.02  # P[an available client never reports]
+
+    def __post_init__(self):
+        if not 0.0 < self.base <= 1.0:
+            raise ValueError("base must be in (0, 1]")
+        if self.amplitude < 0.0:
+            raise ValueError("amplitude must be >= 0")
+        if self.base - self.amplitude <= 0.0:
+            raise ValueError("base - amplitude must stay positive, or whole "
+                             "diurnal troughs have an empty cohort")
+        if self.period <= 0.0:
+            raise ValueError("period must be positive")
+        if not 0.0 <= self.burst_prob <= 1.0:
+            raise ValueError("burst_prob must be in [0, 1]")
+        if not 0.0 <= self.burst_frac <= 1.0:
+            raise ValueError("burst_frac must be in [0, 1]")
+        if not 0.0 <= self.straggler_rate < 1.0:
+            raise ValueError("straggler_rate must be in [0, 1)")
+
+    def max_rate(self) -> float:
+        """An upper bound on any client's availability rate in any round —
+        the value to hand ``EngineConfig.participation`` for cohort
+        capacity sizing (the binomial at this rate dominates the trace's
+        heterogeneous draw)."""
+        return min(1.0, self.base + self.amplitude)
+
+    def _key(self):
+        return jax.random.PRNGKey(self.seed)
+
+
+class FleetMasks(NamedTuple):
+    """One round's fleet state over a set of clients (float {0,1} vectors):
+    ``available`` — sampled into the round; ``returned`` — available AND
+    not a straggler (the clients whose deltas actually arrive)."""
+
+    available: jax.Array
+    returned: jax.Array
+
+
+def _per_client_uniform(key: jax.Array, client_ids: jax.Array) -> jax.Array:
+    """One uniform per client, folded in by *global* id — regeneration of
+    any subset, in any batch shape, yields the same bits (the same idiom
+    as the data layer's per-client row chain)."""
+    return jax.vmap(
+        lambda c: jax.random.uniform(jax.random.fold_in(key, c)))(client_ids)
+
+
+def availability_rate(trace: FleetTrace, r: jax.Array,
+                      client_ids: jax.Array) -> jax.Array:
+    """p_k(r) — each client's availability probability this round, after
+    the diurnal curve and any round-level burst."""
+    r = jnp.asarray(r, jnp.int32)
+    client_ids = jnp.asarray(client_ids, jnp.uint32)
+    base_key = trace._key()
+    phase = _per_client_uniform(jax.random.fold_in(base_key, _PHASE_TAG),
+                                client_ids)
+    t = r.astype(jnp.float32) / jnp.float32(trace.period)
+    rate = trace.base + trace.amplitude * jnp.sin(
+        2.0 * math.pi * (t + phase))
+    rate = jnp.clip(rate, 0.0, 1.0)
+    if trace.burst_prob > 0.0 and trace.burst_frac > 0.0:
+        rk = jax.random.fold_in(jax.random.fold_in(base_key, _BURST_TAG), r)
+        burst = jax.random.uniform(rk) < trace.burst_prob
+        hit = _per_client_uniform(
+            jax.random.fold_in(jax.random.fold_in(base_key, _BURST_HIT_TAG),
+                               r),
+            client_ids) < trace.burst_frac
+        rate = jnp.where(burst & hit, 0.0, rate)
+    return rate
+
+
+def availability_mask(trace: FleetTrace, r: jax.Array,
+                      client_ids: jax.Array) -> jax.Array:
+    """1.0 where client k is sampled into round r."""
+    r = jnp.asarray(r, jnp.int32)
+    client_ids = jnp.asarray(client_ids, jnp.uint32)
+    u = _per_client_uniform(
+        jax.random.fold_in(jax.random.fold_in(trace._key(), _AVAIL_TAG), r),
+        client_ids)
+    return (u < availability_rate(trace, r, client_ids)).astype(jnp.float32)
+
+
+def straggler_flags(trace: FleetTrace, r: jax.Array,
+                    client_ids: jax.Array) -> jax.Array:
+    """1.0 where client k *would* straggle this round if sampled —
+    independent of the availability draw (separate tag chain)."""
+    r = jnp.asarray(r, jnp.int32)
+    client_ids = jnp.asarray(client_ids, jnp.uint32)
+    if trace.straggler_rate <= 0.0:
+        return jnp.zeros(client_ids.shape, jnp.float32)
+    u = _per_client_uniform(
+        jax.random.fold_in(jax.random.fold_in(trace._key(), _STRAGGLER_TAG),
+                           r),
+        client_ids)
+    return (u < trace.straggler_rate).astype(jnp.float32)
+
+
+def fleet_masks(trace: FleetTrace, r: jax.Array,
+                client_ids: jax.Array) -> FleetMasks:
+    """The round's (available, returned) masks over ``client_ids``.
+
+    ``returned = available * (1 - straggler)`` is the dropout-after-compute
+    composition: a straggler is a *sampled* client whose delta is zeroed
+    after its pass — and since a zero-weight delta contributes exactly
+    nothing to the aggregate, handing the engine the ``returned`` mask is
+    bit-identical to running the straggler's pass and discarding it (the
+    cohort path exploits this to skip the doomed compute outright).
+    """
+    r = jnp.asarray(r, jnp.int32)
+    client_ids = jnp.asarray(client_ids, jnp.uint32)
+    avail = availability_mask(trace, r, client_ids)
+    returned = avail * (1.0 - straggler_flags(trace, r, client_ids))
+    return FleetMasks(available=avail, returned=returned)

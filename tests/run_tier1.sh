@@ -48,4 +48,12 @@ python benchmarks/bench_round.py --smoke --participation-sweep \
 python benchmarks/bench_round.py --smoke --virtual \
     --json "${BENCH_VIRTUAL_JSON:-BENCH_round.virtual.smoke.json}" > /dev/null
 
+# Campaign smoke: budget-guarded fleet campaign (2 cells x 3 rounds, tiny
+# scale) with a FORCED mid-run crash + resume — exits nonzero unless the
+# resumed run's final iterates and event stream are bit-identical to the
+# uninterrupted one, so the kill-resume contract is verified on every CI
+# run.  Scratch paths only (runs/ is gitignored).
+python benchmarks/campaign.py --smoke \
+    --out "${CAMPAIGN_SMOKE_DIR:-runs/campaign_smoke}" > /dev/null
+
 exec python -m pytest -x -q "$@"

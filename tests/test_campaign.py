@@ -1,0 +1,219 @@
+"""The campaign runner's crash-survival contract (repro.fleet.campaign)
+and the atomic checkpoint writes it stands on.
+
+Contracts:
+
+1. Atomic saves — a crash *during* ``checkpoint.save`` (payload write or
+   manifest write) leaves the previous checkpoint fully restorable; the
+   manifest is the commit point and is written last.
+2. EventLog — resume truncation drops exactly the re-running rounds of
+   one cell; a torn trailing line (mid-write kill) is discarded on load.
+3. Campaign resume — an interrupted + resumed campaign produces
+   bit-identical final iterates and deterministic event views vs an
+   uninterrupted run, including across a drift-epoch boundary.
+"""
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro import checkpoint
+from repro.checkpoint import checkpoint as ckpt_mod
+from repro.fleet import (CampaignSpec, EventLog, FleetTrace, RoundEvent,
+                         deterministic_view, run_campaign, summarize_events)
+
+
+# --------------------------------------------------------------------- #
+# 1. atomic checkpoint saves
+# --------------------------------------------------------------------- #
+
+
+def _tree(v):
+    return {"w": np.arange(4, dtype=np.float32) * v,
+            "round": np.int32(v)}
+
+
+def test_checkpoint_interrupted_payload_write_keeps_previous(tmp_path,
+                                                             monkeypatch):
+    d = str(tmp_path / "ck")
+    checkpoint.save(d, _tree(1), step=1)
+
+    def boom(*a, **k):
+        raise OSError("disk full")
+
+    monkeypatch.setattr(ckpt_mod.np, "savez", boom)
+    with pytest.raises(OSError):
+        checkpoint.save(d, _tree(2), step=2)
+    monkeypatch.undo()
+    tree, info = checkpoint.restore(d)
+    assert info["step"] == 1
+    np.testing.assert_array_equal(tree["w"], _tree(1)["w"])
+
+
+def test_checkpoint_interrupted_before_manifest_keeps_previous(tmp_path,
+                                                               monkeypatch):
+    """Kill between the payload write and the manifest replace: the new
+    arrays file exists on disk but the manifest — the commit point —
+    still names the old one, and restore returns step 1."""
+    d = str(tmp_path / "ck")
+    checkpoint.save(d, _tree(1), step=1)
+    real_replace = os.replace
+
+    def replace_except_manifest(src, dst):
+        if os.path.basename(dst) == "manifest.json":
+            raise OSError("killed before commit")
+        return real_replace(src, dst)
+
+    monkeypatch.setattr(ckpt_mod.os, "replace", replace_except_manifest)
+    with pytest.raises(OSError):
+        checkpoint.save(d, _tree(2), step=2)
+    monkeypatch.undo()
+    tree, info = checkpoint.restore(d)
+    assert info["step"] == 1
+    np.testing.assert_array_equal(tree["w"], _tree(1)["w"])
+
+
+def test_checkpoint_completed_save_cleans_stale_payloads(tmp_path):
+    d = str(tmp_path / "ck")
+    checkpoint.save(d, _tree(1), step=1)
+    checkpoint.save(d, _tree(2), step=2)
+    payloads = [f for f in os.listdir(d) if f.endswith(".npz")]
+    assert payloads == ["arrays-000000002.npz"]
+    tree, info = checkpoint.restore(d)
+    assert info["step"] == 2
+    np.testing.assert_array_equal(tree["w"], _tree(2)["w"])
+
+
+def test_checkpoint_restores_legacy_arrays_npz(tmp_path):
+    """Pre-atomic checkpoints (plain arrays.npz, no arrays_file key in the
+    manifest) must still restore."""
+    d = str(tmp_path / "ck")
+    checkpoint.save(d, _tree(3), step=3)
+    with open(os.path.join(d, "manifest.json")) as f:
+        manifest = json.load(f)
+    os.rename(os.path.join(d, manifest.pop("arrays_file")),
+              os.path.join(d, "arrays.npz"))
+    with open(os.path.join(d, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    tree, info = checkpoint.restore(d)
+    assert info["step"] == 3
+    np.testing.assert_array_equal(tree["w"], _tree(3)["w"])
+
+
+# --------------------------------------------------------------------- #
+# 2. the event log
+# --------------------------------------------------------------------- #
+
+
+def _ev(cell, r, f=None):
+    return RoundEvent(cell=cell, round=r, drawn=10, realized=9,
+                      stragglers=1, f=f, wall_s=0.5)
+
+
+def test_eventlog_truncate_drops_only_rerun_rounds(tmp_path):
+    log = EventLog(str(tmp_path / "ev.jsonl"))
+    for r in range(4):
+        log.append(_ev("a", r))
+    log.append(_ev("b", 0))
+    log.truncate("a", 2)
+    events = log.load()
+    assert [(e["cell"], e["round"]) for e in events] == [
+        ("a", 0), ("a", 1), ("b", 0)]
+
+
+def test_eventlog_drops_torn_tail(tmp_path):
+    log = EventLog(str(tmp_path / "ev.jsonl"))
+    log.append(_ev("a", 0))
+    log.append(_ev("a", 1))
+    with open(log.path, "a") as f:
+        f.write('{"cell": "a", "round": 2, "drawn"')   # killed mid-write
+    assert [e["round"] for e in log.load()] == [0, 1]
+    log.truncate("a", 1)   # the rewrite also discards the torn tail
+    assert [e["round"] for e in log.load()] == [0]
+
+
+def test_deterministic_view_strips_timing_only():
+    e = json.loads(_ev("a", 1, f=0.5).to_json())
+    v = deterministic_view(e)
+    assert "wall_s" not in v and "peak_rss_mb" not in v
+    assert v["f"] == 0.5 and v["round"] == 1
+
+
+def test_summarize_events_rollup():
+    events = [json.loads(_ev("a", r, f=(1.0 - 0.1 * r) if r % 2 else None)
+                         .to_json()) for r in range(4)]
+    s = summarize_events(events)["a"]
+    assert s["rounds"] == 4 and s["straggler_total"] == 4
+    assert [p["round"] for p in s["convergence"]] == [1, 3]
+    assert s["final_f"] == pytest.approx(0.7)
+
+
+# --------------------------------------------------------------------- #
+# 3. campaign resume bit-identity
+# --------------------------------------------------------------------- #
+
+SPEC = CampaignSpec(
+    algos=("gd", "fedavg"), rounds=3, seed=0, scale=0.002, model="trace",
+    trace=FleetTrace(seed=5, base=0.5, amplitude=0.3, period=7.0,
+                     burst_prob=0.3, burst_frac=0.5, straggler_rate=0.25),
+    eval_every=2, checkpoint_every=1)
+
+
+def _run_pair(spec, tmp_path, stop_after):
+    d_ref = str(tmp_path / "ref")
+    d_run = str(tmp_path / "run")
+    s_ref = run_campaign(spec, d_ref, verbose=False)
+    r = run_campaign(spec, d_run, stop_after=stop_after, verbose=False)
+    assert r.get("interrupted")
+    s_run = run_campaign(spec, d_run, verbose=False)
+    ev_ref = [deterministic_view(e)
+              for e in EventLog(os.path.join(d_ref, "events.jsonl")).load()]
+    ev_run = [deterministic_view(e)
+              for e in EventLog(os.path.join(d_run, "events.jsonl")).load()]
+    return s_ref, s_run, ev_ref, ev_run
+
+
+@pytest.mark.slow
+def test_campaign_interrupt_resume_bit_identical(tmp_path):
+    """Crash after the first cell plus one round of the second: the resume
+    must skip the completed cell, land mid-cell on the other, and the
+    final iterates and event stream must match the uninterrupted run."""
+    s_ref, s_run, ev_ref, ev_run = _run_pair(SPEC, tmp_path,
+                                             stop_after=SPEC.rounds + 1)
+    assert ev_ref == ev_run
+    assert len(ev_ref) == len(SPEC.algos) * SPEC.rounds
+    for a in SPEC.algos:
+        np.testing.assert_array_equal(
+            np.asarray(s_ref["finals"][a]["w"]),
+            np.asarray(s_run["finals"][a]["w"]))
+
+
+@pytest.mark.slow
+def test_campaign_resume_across_drift_epoch(tmp_path):
+    """The interruption lands exactly on a drift-epoch boundary; resume
+    must rebuild the correct epoch's dataset from the absolute round."""
+    spec = CampaignSpec(
+        algos=("gd",), rounds=4, seed=0, scale=0.002, model="trace",
+        trace=SPEC.trace, drift_every=2, drift_w_scale=0.8,
+        drift_resample=True, eval_every=4, checkpoint_every=1)
+    s_ref, s_run, ev_ref, ev_run = _run_pair(spec, tmp_path, stop_after=2)
+    assert ev_ref == ev_run
+    np.testing.assert_array_equal(np.asarray(s_ref["finals"]["gd"]["w"]),
+                                  np.asarray(s_run["finals"]["gd"]["w"]))
+
+
+@pytest.mark.slow
+def test_campaign_summary_written_and_events_counted(tmp_path):
+    d = str(tmp_path / "c")
+    spec = CampaignSpec(algos=("gd",), rounds=2, seed=0, scale=0.002,
+                        model="bernoulli", participation=0.5,
+                        eval_every=1, checkpoint_every=1)
+    run_campaign(spec, d, verbose=False)
+    with open(os.path.join(d, "summary.json")) as f:
+        summary = json.load(f)
+    cell = summary["cells"]["gd"]
+    assert cell["rounds"] == 2
+    assert cell["straggler_total"] == 0          # bernoulli: no stragglers
+    assert len(cell["convergence"]) == 2
+    assert summary["spec"]["model"] == "bernoulli"

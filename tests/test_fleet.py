@@ -1,0 +1,340 @@
+"""The fleet simulation layer (repro.fleet): traces + participation models.
+
+Contracts:
+
+1. Trace determinism — any round's masks are a pure function of
+   ``(trace.seed, round, client_ids)``: bit-identical across
+   regeneration, under jit, and invariant to how the client axis is
+   batched (a slice of the fleet's mask == the mask of the slice), which
+   is what makes chunk/cohort rounds see the same fleet.
+2. BernoulliParticipation is a bit-exact pin of the engine's historical
+   draw — installing it changes nothing, down to the last bit.
+3. Trace-driven rounds: plain vs streamed (chunk) vs cohort parity under
+   a round-dependent model; round-dependent models reject mask requests
+   without a round index.
+4. Dropout-after-compute — a straggler (available but not returned)
+   is indistinguishable from a never-sampled client: replaying the
+   trace's ``returned`` mask through FixedParticipation reproduces the
+   trace round bit-for-bit, and dual-state freezing covers stragglers.
+5. Solver plumbing: registry solvers accept ``participation_model`` and
+   thread ``state.round`` into the compiled round (no retrace per round).
+6. Distribution drift (repro.data.synthetic.drifted_dataset): epoch 0 is
+   the identity, epochs are deterministic, shapes are drift-invariant.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import Trainer, make_solver
+from repro.core.engine import EngineConfig, RoundEngine
+from repro.fleet import (BernoulliParticipation, FixedParticipation,
+                         FleetTrace, TraceParticipation, availability_rate,
+                         fleet_masks)
+
+TRACE = FleetTrace(seed=5, base=0.5, amplitude=0.3, period=7.0,
+                   burst_prob=0.3, burst_frac=0.5, straggler_rate=0.25)
+
+
+def _keyed_deltas(w, bucket, keys):
+    def one(n_k, ck):
+        return ((jax.random.uniform(ck, w.shape) - 0.5)
+                * (1.0 + 0.1 * n_k.astype(jnp.float32)))
+    return jax.vmap(one)(bucket.n_k, keys)
+
+
+def _passes():
+    def client_pass(w, bi, b, kb):
+        return _keyed_deltas(w, b, jax.random.split(kb, b.num_clients))
+
+    def chunk_pass(w, bi, cb, keys):
+        return _keyed_deltas(w, cb, keys)
+
+    return client_pass, chunk_pass
+
+
+# --------------------------------------------------------------------- #
+# 1. trace determinism
+# --------------------------------------------------------------------- #
+
+
+def test_fleet_masks_bit_identical_across_regeneration():
+    ids = jnp.arange(64, dtype=jnp.uint32)
+    for r in (0, 3, 11):
+        a = fleet_masks(TRACE, r, ids)
+        b = fleet_masks(TRACE, r, ids)
+        c = jax.jit(lambda rr: fleet_masks(TRACE, rr, ids))(jnp.int32(r))
+        np.testing.assert_array_equal(np.asarray(a.available),
+                                      np.asarray(b.available))
+        np.testing.assert_array_equal(np.asarray(a.returned),
+                                      np.asarray(b.returned))
+        np.testing.assert_array_equal(np.asarray(a.available),
+                                      np.asarray(c.available))
+        np.testing.assert_array_equal(np.asarray(a.returned),
+                                      np.asarray(c.returned))
+
+
+def test_fleet_masks_batch_shape_invariant():
+    """The mask of a client depends only on its global id — computing the
+    fleet whole or in arbitrary slices gives the same bits (the property
+    chunk/cohort rounds rely on)."""
+    K = 50
+    ids = jnp.arange(K, dtype=jnp.uint32)
+    whole = fleet_masks(TRACE, 4, ids)
+    for lo, hi in ((0, 7), (7, 30), (30, 50), (13, 14)):
+        part = fleet_masks(TRACE, 4, ids[lo:hi])
+        np.testing.assert_array_equal(np.asarray(whole.available)[lo:hi],
+                                      np.asarray(part.available))
+        np.testing.assert_array_equal(np.asarray(whole.returned)[lo:hi],
+                                      np.asarray(part.returned))
+
+
+def test_availability_rate_bounds_and_diurnal_variation():
+    ids = jnp.arange(200, dtype=jnp.uint32)
+    rates = np.stack([np.asarray(availability_rate(TRACE, r, ids))
+                      for r in range(14)])
+    assert (rates >= 0.0).all() and (rates <= 1.0).all()
+    # the sinusoid must actually move the per-client rate across rounds
+    assert rates.std(axis=0).max() > 0.05
+
+
+def test_returned_is_subset_of_available():
+    ids = jnp.arange(300, dtype=jnp.uint32)
+    m = fleet_masks(TRACE, 2, ids)
+    av, ret = np.asarray(m.available), np.asarray(m.returned)
+    assert ((ret == 1) <= (av == 1)).all()
+    assert (av - ret).sum() > 0  # straggler_rate=0.25: someone straggled
+    quiet = dataclasses.replace(TRACE, straggler_rate=0.0)
+    m0 = fleet_masks(quiet, 2, ids)
+    np.testing.assert_array_equal(np.asarray(m0.available),
+                                  np.asarray(m0.returned))
+
+
+def test_trace_validation():
+    with pytest.raises(ValueError):
+        FleetTrace(base=0.0)
+    with pytest.raises(ValueError):
+        FleetTrace(base=0.3, amplitude=0.4)   # rate floor <= 0
+    with pytest.raises(ValueError):
+        FleetTrace(straggler_rate=1.0)
+
+
+# --------------------------------------------------------------------- #
+# 2. BernoulliParticipation pins the engine draw
+# --------------------------------------------------------------------- #
+
+
+def test_bernoulli_model_bit_identical_to_engine_draw(small_problem):
+    prob = small_problem
+    p = 0.4
+    eng = RoundEngine(prob, EngineConfig(participation=p))
+    eng_m = RoundEngine(prob, EngineConfig(participation=p),
+                        participation_model=BernoulliParticipation(p))
+    client_pass, _ = _passes()
+    w = jnp.zeros(prob.d)
+    for r in range(3):
+        key = jax.random.PRNGKey(30 + r)
+        for a, b in zip(eng.participation_masks(key),
+                        eng_m.participation_masks(key)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        np.testing.assert_array_equal(
+            np.asarray(eng.round(w, key, client_pass)),
+            np.asarray(eng_m.round(w, key, client_pass)))
+
+
+# --------------------------------------------------------------------- #
+# 3. trace-driven rounds across engine paths
+# --------------------------------------------------------------------- #
+
+
+def test_round_dependent_model_requires_round_index(small_problem):
+    eng = RoundEngine(small_problem, EngineConfig(participation=0.8),
+                      participation_model=TraceParticipation(TRACE))
+    client_pass, _ = _passes()
+    with pytest.raises(ValueError, match="round"):
+        eng.round(jnp.zeros(small_problem.d), jax.random.PRNGKey(0),
+                  client_pass)
+
+
+@pytest.mark.parametrize("r", [0, 5])
+def test_trace_round_chunk_and_cohort_parity(small_problem, r):
+    """One fleet, three engine paths: the plain masked round, the streamed
+    (client_chunk) round, and the gathered cohort round all see the same
+    trace masks — outputs agree to the same float tolerance as the
+    Bernoulli paths (chunked/cohort accumulation reorders the sum)."""
+    prob = small_problem
+    model = TraceParticipation(TRACE)
+    cap = TRACE.max_rate()
+    kw = dict(participation=cap)
+    eng = RoundEngine(prob, EngineConfig(**kw), participation_model=model)
+    eng_ch = RoundEngine(prob, EngineConfig(client_chunk=3, **kw),
+                         participation_model=model)
+    eng_co = RoundEngine(prob, EngineConfig(cohort=6, **kw),
+                         participation_model=model)
+    client_pass, chunk_pass = _passes()
+    w = jax.random.normal(jax.random.PRNGKey(1), (prob.d,)) * 0.1
+    key = jax.random.PRNGKey(40 + r)
+    out = eng.round(w, key, client_pass, round_index=r)
+    out_ch = eng_ch.round_streamed(w, key, chunk_pass, round_index=r)
+    out_co = eng_co.round_cohort(w, key, chunk_pass, round_index=r)
+    np.testing.assert_allclose(np.asarray(out_ch), np.asarray(out),
+                               rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(out_co), np.asarray(out),
+                               rtol=1e-5, atol=1e-6)
+
+
+# --------------------------------------------------------------------- #
+# 4. dropout-after-compute semantics
+# --------------------------------------------------------------------- #
+
+
+def test_straggler_equals_removed_delta(small_problem):
+    """The trace round must equal a round whose participant set is exactly
+    the returned clients — a straggler's computed-but-dropped delta leaves
+    no trace in the aggregate (zero weight ≡ removed), and differs from
+    the availability-only round whenever someone straggled."""
+    prob = small_problem
+    model = TraceParticipation(TRACE)
+    r = 2
+    key = jax.random.PRNGKey(50)
+    offsets = tuple(int(w) for w in np.cumsum(
+        [0] + [b.num_clients for b in prob.buckets])[:-1])
+    sizes = tuple(b.num_clients for b in prob.buckets)
+    avail, returned = model.mask_components(key, jnp.int32(r), offsets, sizes)
+    assert sum(float((a - b).sum()) for a, b in zip(avail, returned)) > 0
+
+    kw = dict(participation=TRACE.max_rate())
+    client_pass, _ = _passes()
+    w = jnp.zeros(prob.d)
+    eng_tr = RoundEngine(prob, EngineConfig(**kw), participation_model=model)
+    eng_ret = RoundEngine(prob, EngineConfig(**kw),
+                          participation_model=FixedParticipation(
+                              tuple(returned)))
+    eng_av = RoundEngine(prob, EngineConfig(**kw),
+                         participation_model=FixedParticipation(tuple(avail)))
+    out_tr = eng_tr.round(w, key, client_pass, round_index=r)
+    out_ret = eng_ret.round(w, key, client_pass, round_index=r)
+    out_av = eng_av.round(w, key, client_pass, round_index=r)
+    np.testing.assert_array_equal(np.asarray(out_tr), np.asarray(out_ret))
+    assert (np.asarray(out_tr) != np.asarray(out_av)).any()
+
+
+def test_straggler_state_frozen(small_problem):
+    """Dual-state freezing covers stragglers: every client whose delta
+    did not return — never-available AND available-but-straggling — keeps
+    its state bit-for-bit."""
+    prob = small_problem
+    model = TraceParticipation(TRACE)
+    eng = RoundEngine(prob, EngineConfig(weighting="sum",
+                                         participation=TRACE.max_rate()),
+                      participation_model=model)
+
+    def dual_pass(w, bi, b, s_b, kb):
+        deltas = _keyed_deltas(w, b, jax.random.split(kb, b.num_clients))
+        return deltas, s_b + deltas[:, :3]
+
+    states = [jnp.ones((b.num_clients, 3)) for b in prob.buckets]
+    r, key = 2, jax.random.PRNGKey(50)
+    offsets = tuple(int(w) for w in np.cumsum(
+        [0] + [b.num_clients for b in prob.buckets])[:-1])
+    sizes = tuple(b.num_clients for b in prob.buckets)
+    _, returned = model.mask_components(key, jnp.int32(r), offsets, sizes)
+    _, new_states = eng.round_with_state(jnp.zeros(prob.d), states, key,
+                                         dual_pass, round_index=r)
+    changed_any = False
+    for ret, s_old, s_new in zip(returned, states, new_states):
+        gone = np.asarray(ret) <= 0
+        np.testing.assert_array_equal(np.asarray(s_new)[gone],
+                                      np.asarray(s_old)[gone])
+        changed_any |= bool(
+            (np.asarray(s_new)[~gone] != np.asarray(s_old)[~gone]).any())
+    assert changed_any  # someone returned and their state moved
+
+
+# --------------------------------------------------------------------- #
+# 5. solver plumbing
+# --------------------------------------------------------------------- #
+
+
+@pytest.mark.parametrize("name", ["gd", "fedavg", "fsvrg", "cocoa", "dane"])
+def test_solvers_accept_trace_model(small_problem, name):
+    """Every Fig.-2 solver runs under a trace model through the Trainer
+    (which feeds state.round into the compiled round), and two identical
+    fits are bit-identical."""
+    model = TraceParticipation(TRACE)
+    kw = dict(participation=TRACE.max_rate(), participation_model=model)
+
+    def fit():
+        solver = make_solver(name, small_problem, **kw)
+        return Trainer(solver, rounds=3, seed=0).fit()
+
+    w1, w2 = fit().w, fit().w
+    assert np.isfinite(np.asarray(w1)).all()
+    np.testing.assert_array_equal(np.asarray(w1), np.asarray(w2))
+
+
+def test_trace_model_ignores_solver_seed(small_problem):
+    """The fleet is the fleet: masks are a function of (trace.seed, r),
+    not of the solver's round key."""
+    model = TraceParticipation(TRACE)
+    eng = RoundEngine(small_problem,
+                      EngineConfig(participation=TRACE.max_rate()),
+                      participation_model=model)
+    m1 = eng.participation_masks(jax.random.PRNGKey(0), round_index=4)
+    m2 = eng.participation_masks(jax.random.PRNGKey(999), round_index=4)
+    for a, b in zip(m1, m2):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# --------------------------------------------------------------------- #
+# 6. distribution drift
+# --------------------------------------------------------------------- #
+
+
+def test_drift_epoch_zero_is_identity(small_virtual_dataset):
+    from repro.data.synthetic import drifted_dataset
+
+    vds = small_virtual_dataset
+    assert drifted_dataset(vds, 0, w_true_scale=0.5,
+                           resample_clients=True) is vds
+
+
+def test_drift_deterministic_and_shape_invariant(small_virtual_dataset):
+    from repro.data.synthetic import drifted_dataset, materialize_dataset
+
+    vds = small_virtual_dataset
+    d1 = materialize_dataset(drifted_dataset(vds, 2, w_true_scale=0.8,
+                                             resample_clients=True))
+    d2 = materialize_dataset(drifted_dataset(vds, 2, w_true_scale=0.8,
+                                             resample_clients=True))
+    base = materialize_dataset(vds)
+    np.testing.assert_array_equal(d1.y, d2.y)
+    np.testing.assert_array_equal(np.asarray(d1.val), np.asarray(d2.val))
+    # same shapes and client partition, different data
+    assert d1.y.shape == base.y.shape and d1.idx.shape == base.idx.shape
+    np.testing.assert_array_equal(d1.client_sizes, base.client_sizes)
+    assert (d1.y != base.y).any() or (np.asarray(d1.idx)
+                                      != np.asarray(base.idx)).any()
+
+
+def test_drift_epochs_differ(small_virtual_dataset):
+    from repro.data.synthetic import drifted_dataset, materialize_dataset
+
+    vds = small_virtual_dataset
+    d1 = materialize_dataset(drifted_dataset(vds, 1, resample_clients=True))
+    d2 = materialize_dataset(drifted_dataset(vds, 2, resample_clients=True))
+    assert (d1.y != d2.y).any() or (np.asarray(d1.idx)
+                                    != np.asarray(d2.idx)).any()
+
+
+def test_drift_w_scale_only_relabels(small_virtual_dataset):
+    """Concept drift (w_true rescale) moves labels, not features."""
+    from repro.data.synthetic import drifted_dataset, materialize_dataset
+
+    vds = small_virtual_dataset
+    base = materialize_dataset(vds)
+    dr = materialize_dataset(drifted_dataset(vds, 3, w_true_scale=0.5))
+    np.testing.assert_array_equal(np.asarray(base.idx), np.asarray(dr.idx))
+    np.testing.assert_array_equal(np.asarray(base.val), np.asarray(dr.val))

@@ -272,3 +272,72 @@ def test_sweep_picks_best_final_objective(tiny_problem):
     }
     assert best == min(finals, key=finals.get)
     assert res.history[-1]["f"] == finals[best]
+
+
+# --------------------------------------------------------------------- #
+# eval cadence (eval_every)
+# --------------------------------------------------------------------- #
+
+
+def test_eval_every_records_subset_of_dense_history(tiny_problem):
+    """eval_every=k keeps exactly the rounds (r+1) % k == 0 plus the final
+    round, with values identical to the every-round history's entries."""
+    prob = tiny_problem
+    ev = _eval(prob)
+    dense = Trainer(make_solver("gd", prob), rounds=7, seed=0,
+                    eval_fn=ev).fit()
+    sparse = Trainer(make_solver("gd", prob), rounds=7, seed=0,
+                     eval_fn=ev, eval_every=3).fit()
+    # rounds 2, 5 (cadence) + 6 (final)
+    assert len(sparse.history) == 3
+    expect = [dense.history[2], dense.history[5], dense.history[6]]
+    for rec, rec_ref in zip(sparse.history, expect):
+        assert rec == rec_ref
+    np.testing.assert_array_equal(np.asarray(sparse.w), np.asarray(dense.w))
+
+
+def test_eval_every_final_round_always_recorded(tiny_problem):
+    """A cadence that never divides the budget still records the final
+    round — history[-1] keeps meaning 'final objective' (the sweep
+    contract)."""
+    prob = tiny_problem
+    res = Trainer(make_solver("gd", prob), rounds=4, seed=0,
+                  eval_fn=_eval(prob), eval_every=10).fit()
+    assert len(res.history) == 1
+    ref = Trainer(make_solver("gd", prob), rounds=4, seed=0,
+                  eval_fn=_eval(prob)).fit()
+    assert res.history[0] == ref.history[-1]
+
+
+@pytest.mark.parametrize("eval_every", [2, 5])
+def test_eval_every_scan_matches_loop(tiny_problem, eval_every):
+    prob = tiny_problem
+    ev = _eval(prob)
+    loop = Trainer(make_solver("gd", prob), rounds=6, seed=0,
+                   eval_fn=ev, eval_every=eval_every).fit()
+    scan = Trainer(make_solver("gd", prob), rounds=6, seed=0,
+                   eval_fn=ev, eval_every=eval_every, scan=True).fit()
+    assert len(scan.history) == len(loop.history)
+    for rec, rec_ref in zip(scan.history, loop.history):
+        np.testing.assert_allclose(rec["f"], rec_ref["f"],
+                                   rtol=1e-5, atol=1e-8)
+    np.testing.assert_allclose(np.asarray(scan.w), np.asarray(loop.w),
+                               rtol=1e-5, atol=1e-8)
+
+
+def test_eval_every_validation(tiny_problem):
+    with pytest.raises(ValueError):
+        Trainer(make_solver("gd", tiny_problem), rounds=2, eval_every=0)
+
+
+def test_eval_every_sweep_still_picks_best(tiny_problem):
+    """The sweep keys off history[-1], which eval_every preserves."""
+    prob = tiny_problem
+    ev = _eval(prob)
+    res_d, best_d = sweep(lambda h: make_solver("gd", prob, stepsize=h),
+                          (0.5, 2.0), rounds=3, seed=0, eval_fn=ev)
+    res_s, best_s = sweep(lambda h: make_solver("gd", prob, stepsize=h),
+                          (0.5, 2.0), rounds=3, seed=0, eval_fn=ev,
+                          eval_every=2)
+    assert best_s == best_d
+    assert res_s.history[-1] == res_d.history[-1]
