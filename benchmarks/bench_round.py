@@ -117,6 +117,14 @@ SWEEP_PARTICIPATIONS = (1.0, 0.3, 0.1)
 SWEEP_PATHS = ("masked_chunked", "cohort_chunked")
 SWEEP_ALGO = "fedavg"
 
+#: the aggregator-guard overhead family at the paper-scale config: the
+#: streamed round with and without the per-client clip guard, and the plain
+#: round with and without coordinate-wise trimmed-mean (order stats need the
+#: full delta stacks, so they have no streamed variant to compare)
+GUARD_ALGO = "fedavg"
+GUARD_PATHS = ("chunked_none", "chunked_clip",
+               "plain_none", "plain_trimmed_mean")
+
 #: the virtual-data client-axis sweep (ascending, so each K's numbers land
 #: before the next, bigger one runs); gd+fedavg up to 10⁵, gd only at 10⁶
 VIRTUAL_KS = (10_000, 100_000, 1_000_000)
@@ -194,6 +202,20 @@ def _sweep_closures(algo: str, prob, chunk: int, participation: float):
     }, cap
 
 
+def _guard_closures(algo: str, prob, chunk: int):
+    """Guard-vs-none compiled round closures: the robust-aggregation cost
+    is the *difference* within each (chunked, plain) pair."""
+    return {
+        "chunked_none": make_solver(algo, prob,
+                                    client_chunk=chunk)._round_fast,
+        "chunked_clip": make_solver(algo, prob, client_chunk=chunk,
+                                    aggregator_guard="clip")._round_fast,
+        "plain_none": make_solver(algo, prob)._round_fast,
+        "plain_trimmed_mean": make_solver(
+            algo, prob, aggregator_guard="trimmed_mean")._round_fast,
+    }
+
+
 def _time_rounds(closures, w0, rounds: int, repeats: int):
     """Per-round wall-clock samples per path (blocking each round).
 
@@ -257,6 +279,11 @@ def main(argv=None):
                          "run ONLY it at reduced budget")
     ap.add_argument("--sweep-participations",
                     default=",".join(str(p) for p in SWEEP_PARTICIPATIONS))
+    ap.add_argument("--guard-overhead", action="store_true",
+                    help="append the aggregator-guard overhead family at "
+                         "the paper-k config (guard vs none, streamed clip "
+                         "and plain trimmed-mean); with --smoke, run ONLY "
+                         "it at reduced budget")
     ap.add_argument("--virtual", action="store_true",
                     help="append the virtual-data client-axis sweep "
                          "(K up to 10^6, rows regenerated on demand); with "
@@ -269,7 +296,7 @@ def main(argv=None):
 
     if args.smoke:
         scales = [] if (args.paper_k or args.participation_sweep
-                        or args.virtual) else [0.001]
+                        or args.virtual or args.guard_overhead) else [0.001]
         algos = ["gd", "fedavg"]
         rounds, repeats = 2, 1
         pk_algos = ["gd", "fedavg"]
@@ -285,7 +312,7 @@ def main(argv=None):
         virtual_ks = sorted(int(k) for k in args.virtual_ks.split(",") if k)
 
     results = {
-        "schema": 4,
+        "schema": 5,
         "smoke": bool(args.smoke),
         "backend": jax.default_backend(),
         "jax_version": jax.__version__,
@@ -365,7 +392,7 @@ def main(argv=None):
               .format(**results["largest"]))
 
     pk_prob = None
-    if args.paper_k or args.participation_sweep:
+    if args.paper_k or args.participation_sweep or args.guard_overhead:
         pk_cfg = get_paper_k_config()
         ds = generate(pk_cfg, seed=args.seed)
         pk_prob = build_problem(ds, max_bucket_rows=PAPER_K_BUCKET_ROWS)
@@ -463,6 +490,48 @@ def main(argv=None):
               "cohort-vs-masked "
               "{per_participation_paired_speedup_cohort_vs_masked}"
               .format(**summary))
+
+    if args.guard_overhead:
+        prob = pk_prob
+        entry = {
+            "scale": "paper-k-guard-overhead",
+            "clients": int(ds.num_clients),
+            "features": int(ds.num_features),
+            "buckets": len(prob.buckets),
+            "client_chunk": args.paper_chunk,
+            "max_bucket_rows": PAPER_K_BUCKET_ROWS,
+            "algo": GUARD_ALGO,
+            "paths": list(GUARD_PATHS),
+        }
+        closures = _guard_closures(GUARD_ALGO, prob, args.paper_chunk)
+        w0 = jax.numpy.zeros(prob.d)
+        all_samples = _time_rounds(closures, w0, rounds, repeats)
+        for path in GUARD_PATHS:
+            entry[path] = _stats(all_samples[path])
+            print(f"guard,{GUARD_ALGO},{path},{entry[path]['median_s']:.5f},"
+                  f"{entry[path]['mean_s']:.5f},{entry[path]['min_s']:.5f}")
+        # paired per-round ratios within each (guard, none) pair — ambient
+        # load cancels, leaving the guard's own arithmetic
+        entry["paired_overhead_clip_vs_none"] = statistics.median(
+            c / n for c, n in zip(all_samples["chunked_clip"],
+                                  all_samples["chunked_none"]))
+        entry["paired_overhead_trimmed_vs_none"] = statistics.median(
+            t / n for t, n in zip(all_samples["plain_trimmed_mean"],
+                                  all_samples["plain_none"]))
+        results["configs"].append(entry)
+        results["guard_overhead"] = {
+            "algo": GUARD_ALGO,
+            "clients": entry["clients"],
+            "client_chunk": entry["client_chunk"],
+            "paired_overhead_clip_vs_none":
+                entry["paired_overhead_clip_vs_none"],
+            "paired_overhead_trimmed_vs_none":
+                entry["paired_overhead_trimmed_vs_none"],
+        }
+        print("# guard overhead ({algo}, K={clients}): clip-vs-none "
+              "{paired_overhead_clip_vs_none:.3f}x, trimmed-mean-vs-none "
+              "{paired_overhead_trimmed_vs_none:.3f}x"
+              .format(**results["guard_overhead"]))
 
     if args.virtual:
         entry = {

@@ -35,8 +35,19 @@ import sys
 
 import numpy as np
 
-from repro.fleet import (CampaignSpec, EventLog, FleetTrace,
+from repro.fleet import (CampaignSpec, DeltaFaults, EventLog, FleetTrace,
                          deterministic_view, run_campaign)
+
+
+def _faults_from_args(args):
+    """``--faults nan=0.01,sign=0.05,start=10,stop=12`` -> DeltaFaults
+    (rate knobs by kind, plus the firing window / seed / magnitudes)."""
+    if not args.faults:
+        return None
+    try:
+        return DeltaFaults.from_spec(args.faults)
+    except ValueError as e:
+        raise SystemExit(f"--faults: {e}")
 
 
 def _spec_from_args(args) -> CampaignSpec:
@@ -52,7 +63,10 @@ def _spec_from_args(args) -> CampaignSpec:
         cohort=args.cohort, client_chunk=args.client_chunk,
         eval_every=args.eval_every, checkpoint_every=args.checkpoint_every,
         drift_every=args.drift_every, drift_w_scale=args.drift_w_scale,
-        drift_resample=args.drift_resample)
+        drift_resample=args.drift_resample,
+        faults=_faults_from_args(args), guard=args.guard,
+        guard_clip_norm=args.guard_clip_norm, guard_trim=args.guard_trim,
+        max_rollbacks=args.max_rollbacks)
 
 
 def _final_arrays(out_dir: str, algos) -> dict:
@@ -136,6 +150,20 @@ def main(argv=None):
     ap.add_argument("--drift-every", type=int, default=0)
     ap.add_argument("--drift-w-scale", type=float, default=1.0)
     ap.add_argument("--drift-resample", action="store_true")
+    # fault injection + guard-rails
+    ap.add_argument("--faults", default=None,
+                    help="delta-corruption spec, e.g. "
+                         "'nan=0.01,start=10,stop=12' "
+                         "(knobs: nan/sign/scale/replay rates, "
+                         "scale-factor, window, start/stop rounds, seed)")
+    ap.add_argument("--guard", default="none",
+                    choices=("none", "rollback", "clip", "trimmed_mean",
+                             "median"),
+                    help="divergence guard-rail; clip/trimmed_mean/median "
+                         "also install the engine aggregator guard")
+    ap.add_argument("--guard-clip-norm", type=float, default=None)
+    ap.add_argument("--guard-trim", type=float, default=0.1)
+    ap.add_argument("--max-rollbacks", type=int, default=3)
     # modes
     ap.add_argument("--stop-after", type=int, default=None,
                     help="abort this invocation after N rounds (crash "
@@ -146,6 +174,11 @@ def main(argv=None):
     ap.add_argument("--smoke", action="store_true",
                     help="budget-guarded CI mode: tiny scale, 2 cells x 3 "
                          "rounds, forced mid-run resume + verification")
+    ap.add_argument("--fault-smoke", action="store_true",
+                    help="budget-guarded CI mode: tiny NaN-poisoned "
+                         "campaign under the rollback rail; exit 1 unless "
+                         ">= 1 rollback is recorded and the final iterate "
+                         "converged")
     ap.add_argument("--json", default=None,
                     help="also write the summary (+ verification result) here")
     args = ap.parse_args(argv)
@@ -156,7 +189,34 @@ def main(argv=None):
         args.scale = 0.004
         args.eval_every = 2
         args.checkpoint_every = 1
+    if args.fault_smoke:
+        # one cell, a NaN-poisoning burst mid-run, rollback rail armed:
+        # the guard must quarantine the poisoned round and still converge
+        args.algos = "gd"
+        args.rounds = 8
+        args.scale = 0.004
+        args.model = "full"
+        args.checkpoint_every = 2
+        args.faults = args.faults or "nan=0.4,seed=1,start=3,stop=4"
+        if args.guard == "none":
+            args.guard = "rollback"
     spec = _spec_from_args(args)
+
+    if args.fault_smoke:
+        shutil.rmtree(args.out, ignore_errors=True)
+        summary = run_campaign(spec, args.out, verbose=False)
+        cell = summary["cells"][spec.algos[0]]
+        final_f = cell.get("final_f")
+        ok = (cell["rollbacks"] >= 1 and final_f is not None
+              and np.isfinite(final_f))
+        print(f"fault-smoke: rollbacks={cell['rollbacks']} "
+              f"faults={cell['faults_injected_total']} "
+              f"final_f={final_f} -> {'PASS' if ok else 'FAIL'}")
+        if args.json:
+            with open(args.json, "w") as f:
+                json.dump({k: v for k, v in summary.items()
+                           if k != "finals"}, f, indent=1, sort_keys=True)
+        return 0 if ok else 1
 
     verified = None
     if args.smoke or args.verify_resume:
@@ -176,13 +236,18 @@ def main(argv=None):
         return 0
 
     for algo, cell in summary["cells"].items():
-        print(f"{algo:7s}: rounds={cell['rounds']} "
-              f"realized/drawn={cell['realized_mean']:.1f}/"
-              f"{cell['drawn_mean']:.1f} "
-              f"stragglers={cell['straggler_total']} "
-              f"final_f={cell.get('final_f', float('nan')):.5f} "
-              f"final_err={cell.get('final_err', float('nan')):.4f} "
-              f"[{cell['wall_total_s']:.0f}s]")
+        line = (f"{algo:7s}: rounds={cell['rounds']} "
+                f"realized/drawn={cell['realized_mean']:.1f}/"
+                f"{cell['drawn_mean']:.1f} "
+                f"stragglers={cell['straggler_total']} ")
+        if cell.get("faults_injected_total") or cell.get("rollbacks"):
+            line += (f"faults={cell['faults_injected_total']} "
+                     f"rejected={cell['clients_rejected_total']} "
+                     f"rollbacks={cell['rollbacks']} ")
+        line += (f"final_f={cell.get('final_f', float('nan')):.5f} "
+                 f"final_err={cell.get('final_err', float('nan')):.4f} "
+                 f"[{cell['wall_total_s']:.0f}s]")
+        print(line)
     if verified is not None:
         print(f"resume verification: {'PASS' if verified else 'FAIL'}")
 

@@ -94,6 +94,19 @@ def main(argv=None):
     ap.add_argument("--participation", type=float, default=0.3,
                     help="client participation rate for "
                          "--participation-model=bernoulli")
+    ap.add_argument("--fault-model", default=None,
+                    help="inject deterministic delta corruptions into every "
+                         "curve, e.g. 'nan=0.01,sign=0.05,start=3' (knobs: "
+                         "nan/sign/scale/replay rates, scale-factor, window, "
+                         "start/stop rounds, seed) — repro.fleet.DeltaFaults; "
+                         "unguarded NaN-poisoned candidates diverge and lose "
+                         "their sweeps, so pair with --aggregator-guard")
+    ap.add_argument("--aggregator-guard", default="none",
+                    choices=("none", "clip", "trimmed_mean", "median"),
+                    help="robust-aggregation guard installed in every "
+                         "curve's engine (trimmed_mean/median reject the "
+                         "cocoa curve: order-stat guards don't compose with "
+                         "its sum-weighted dual aggregation)")
     args = ap.parse_args(argv)
 
     def want(name):
@@ -108,6 +121,11 @@ def main(argv=None):
         trace = FleetTrace(seed=args.seed)
         fleet_kw = {"participation": trace.max_rate(),
                     "participation_model": TraceParticipation(trace)}
+    if args.fault_model:
+        from repro.fleet import DeltaFaults
+        fleet_kw["fault_model"] = DeltaFaults.from_spec(args.fault_model)
+    if args.aggregator_guard != "none":
+        fleet_kw["aggregator_guard"] = args.aggregator_guard
 
     cfg = get_logreg_config().scaled(args.scale)
     ds = generate(cfg, seed=args.seed)

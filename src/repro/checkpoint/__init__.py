@@ -1,3 +1,3 @@
-from repro.checkpoint.checkpoint import restore, save
+from repro.checkpoint.checkpoint import ChecksumError, restore, save
 
-__all__ = ["restore", "save"]
+__all__ = ["ChecksumError", "restore", "save"]

@@ -28,16 +28,30 @@ the manifest became visible.  Superseded payload files are deleted only
 after the new manifest is committed (a crash in between leaves an unused
 extra file, never a broken checkpoint).  Pre-atomic checkpoints (a plain
 ``arrays.npz``, no ``arrays_file`` key) still restore.
+
+Manifest format v3 adds ``payload_crc32``: the CRC-32 of the complete npz
+payload bytes, computed at save time and verified on restore — a torn or
+bit-rotted ``arrays-<step>.npz`` (the failure the atomic-rename protocol
+cannot see, e.g. filesystem corruption after the commit) raises a clear
+``ChecksumError`` instead of restoring garbage iterates.  v1/v2 manifests
+have no checksum and restore exactly as before.
 """
 from __future__ import annotations
 
+import io
 import json
 import os
+import zlib
 from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+
+class ChecksumError(RuntimeError):
+    """The payload on disk does not match the checksum its manifest
+    recorded at save time."""
 
 
 def _to_numpy(leaf) -> Tuple[np.ndarray, str]:
@@ -98,8 +112,14 @@ def save(path: str, tree: Any, *, step: int = 0,
     # payload until the new manifest lands, so a kill at any point leaves a
     # consistent (manifest, payload) pair on disk.
     arrays_file = f"arrays-{step:09d}.npz"
+    # serialize once to memory so the manifest can record the checksum of
+    # exactly the bytes that hit disk
+    blob = io.BytesIO()
+    np.savez(blob, **payload)
+    payload_bytes = blob.getvalue()
+    payload_crc32 = zlib.crc32(payload_bytes)
     _replace_file(os.path.join(path, arrays_file),
-                  lambda f: np.savez(f, **payload))
+                  lambda f: f.write(payload_bytes))
     # structure for reconstruction: keystrs stay for human inspection (and
     # v1 readers); key_paths carry the [kind, key] pairs restore uses
     paths = [jax.tree_util.keystr(kp) for kp, _ in flat_with_path]
@@ -109,10 +129,11 @@ def save(path: str, tree: Any, *, step: int = 0,
         "step": step,
         "metadata": metadata or {},
         "leaves": index,
-        "format_version": 2,
+        "format_version": 3,
         "paths": paths,
         "key_paths": key_paths,
         "arrays_file": arrays_file,
+        "payload_crc32": payload_crc32,
     }
     # treedef is reconstructed from an example tree: persist via pickle-free
     # nested-dict rebuild
@@ -200,8 +221,23 @@ def _listify(node):
 def restore(path: str) -> Tuple[Any, Dict]:
     with open(os.path.join(path, "manifest.json")) as f:
         manifest = json.load(f)
-    data = np.load(os.path.join(path, manifest.get("arrays_file",
-                                                   "arrays.npz")))
+    arrays_path = os.path.join(path, manifest.get("arrays_file",
+                                                  "arrays.npz"))
+    expected_crc = manifest.get("payload_crc32")
+    if expected_crc is not None:
+        with open(arrays_path, "rb") as f:
+            payload_bytes = f.read()
+        actual_crc = zlib.crc32(payload_bytes)
+        if actual_crc != expected_crc:
+            raise ChecksumError(
+                f"checkpoint payload {arrays_path} is corrupt: "
+                f"crc32 {actual_crc:#010x} != manifest's "
+                f"{expected_crc:#010x} — the file was torn or bit-rotted "
+                "after the atomic commit")
+        data = np.load(io.BytesIO(payload_bytes))
+    else:
+        # v1/v2 manifest: no checksum was recorded; load as before
+        data = np.load(arrays_path)
     leaves = [_from_numpy(data[f"leaf_{i}"], meta["dtype"])
               for i, meta in enumerate(manifest["leaves"])]
     info = {"step": manifest["step"], "metadata": manifest["metadata"]}

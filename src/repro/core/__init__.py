@@ -29,7 +29,8 @@ from repro.core.problem import (ClientBucket, FederatedLogReg, LogRegProblem,
 from repro.core.engine import EngineConfig, RoundEngine, cohort_capacity
 from repro.core.solver import FederatedSolver, SolverState
 from repro.core.registry import available, get_spec, make_solver, register
-from repro.core.trainer import FitResult, Trainer, sweep
+from repro.core.trainer import (FitResult, NonFiniteIterateError, Trainer,
+                                sweep)
 from repro.core.fsvrg import FSVRG, FSVRGConfig, naive_fsvrg_round
 from repro.core.fedavg import FedAvg, FedAvgConfig
 from repro.core.dane import DANE, DANEConfig, DANERidge, dane_svrg_round
@@ -44,7 +45,7 @@ __all__ = [
     "RoundEngine", "cohort_capacity",
     "FederatedSolver", "SolverState",
     "available", "get_spec", "make_solver", "register",
-    "FitResult", "Trainer", "sweep",
+    "FitResult", "NonFiniteIterateError", "Trainer", "sweep",
     "FSVRG", "FSVRGConfig", "naive_fsvrg_round", "FedAvg", "FedAvgConfig",
     "DANE", "DANEConfig", "DANERidge", "dane_svrg_round",
     "CoCoAConfig", "CoCoAPlus", "DualMethod", "PrimalMethod", "DistributedGD",

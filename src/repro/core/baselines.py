@@ -60,7 +60,11 @@ class DistributedGD(FederatedSolver):
                  participation: float = 1.0,
                  cohort: Optional[int] = None,
                  virtual_data: bool = False,
-                 participation_model=None):
+                 participation_model=None,
+                 fault_model=None,
+                 aggregator_guard: Optional[str] = None,
+                 guard_clip_norm: Optional[float] = None,
+                 guard_trim: float = 0.1):
         self.problem = problem
         self.stepsize = stepsize
         virtual = virtual_data or problem.virtual is not None
@@ -69,8 +73,12 @@ class DistributedGD(FederatedSolver):
                                                client_chunk=client_chunk,
                                                participation=participation,
                                                cohort=cohort,
-                                               virtual_data=virtual),
-                                  participation_model=participation_model)
+                                               virtual_data=virtual,
+                                               aggregator_guard=aggregator_guard,
+                                               guard_clip_norm=guard_clip_norm,
+                                               guard_trim=guard_trim),
+                                  participation_model=participation_model,
+                                  fault_model=fault_model)
         self._passes = [] if virtual else [
             jax.jit(functools.partial(_gd_client_pass, bucket=b,
                                       lam=problem.flat.lam, stepsize=stepsize))

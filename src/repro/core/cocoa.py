@@ -149,6 +149,16 @@ class CoCoAConfig:
     # (trace-driven availability/stragglers); `participation` then serves
     # as the model's upper-bound rate for cohort capacity sizing
     participation_model: Optional[Any] = None
+    # corrupt returned deltas through a repro.fleet.faults fault model
+    # (corruption hits the wire — the primal contribution — never the
+    # dual blocks, which stay whatever the honest pass computed)
+    fault_model: Optional[Any] = None
+    # robust server aggregation.  Dual methods aggregate with
+    # weighting="sum", so only "clip" composes (order-statistic guards
+    # would break the w = (1/λn)Xα invariant and are a config error).
+    aggregator_guard: Optional[str] = None
+    guard_clip_norm: Optional[float] = None
+    guard_trim: float = 0.1
 
 
 class CoCoAPlus(FederatedSolver):
@@ -193,8 +203,12 @@ class CoCoAPlus(FederatedSolver):
                          aggregator=cfg.aggregator,
                          client_chunk=cfg.client_chunk,
                          cohort=cfg.cohort,
-                         virtual_data=virtual),
+                         virtual_data=virtual,
+                         aggregator_guard=cfg.aggregator_guard,
+                         guard_clip_norm=cfg.guard_clip_norm,
+                         guard_trim=cfg.guard_trim),
             participation_model=cfg.participation_model,
+            fault_model=cfg.fault_model,
         )
 
         def cocoa_pass(w, bi, bucket, alpha_b, kb):

@@ -80,6 +80,13 @@ class DANEConfig:
     # (trace-driven availability/stragglers); `participation` then serves
     # as the model's upper-bound rate for cohort capacity sizing
     participation_model: Optional[Any] = None
+    # corrupt returned deltas through a repro.fleet.faults fault model
+    fault_model: Optional[Any] = None
+    # robust server aggregation: None | "clip" | "trimmed_mean" | "median"
+    # (see EngineConfig.aggregator_guard for the composition rules)
+    aggregator_guard: Optional[str] = None
+    guard_clip_norm: Optional[float] = None
+    guard_trim: float = 0.1
 
     def __post_init__(self):
         if self.local_solver not in _SOLVERS:
@@ -218,8 +225,12 @@ class DANE(FederatedSolver):
                          aggregator=cfg.aggregator,
                          client_chunk=cfg.client_chunk,
                          cohort=cfg.cohort,
-                         virtual_data=virtual),
+                         virtual_data=virtual,
+                         aggregator_guard=cfg.aggregator_guard,
+                         guard_clip_norm=cfg.guard_clip_norm,
+                         guard_trim=cfg.guard_trim),
             participation_model=cfg.participation_model,
+            fault_model=cfg.fault_model,
         )
 
         # Alg. 2 step 1's full gradient is the eager prelude (its own round

@@ -115,6 +115,21 @@ bucket at a time.  The per-client seeding contract
 rows bit-for-bit equal to the materialized dataset's, so virtual rounds
 match materialized rounds exactly per client and to float tolerance on
 iterates (the usual summation-order calibration).
+
+Unreliable devices don't just disappear (the participation layer) — they
+also send garbage.  A **fault model** (``repro.fleet.faults``) handed to
+the engine corrupts each round path's deltas between the client pass and
+aggregation, as a pure function of ``(seed, round_index, client_id)`` —
+the wire, not the client: dual state is whatever the honest pass computed.
+``EngineConfig.aggregator_guard`` is the server's defense: ``"clip"``
+(per-client non-finite rejection + norm capping, folded into every path
+including the streamed chunk entries) or coordinate-wise
+``"trimmed_mean"`` / ``"median"`` over the materialized delta stacks
+(``kernels/robust_aggregate``, plain and cohort paths only — the config
+rejects combinations whose stacks are never materialized).  With
+``fault_model=None`` and ``aggregator_guard=None`` every path is
+bit-for-bit the pre-fault engine (no extra scan inputs, no extra traced
+ops) — the parity the pin tests hold.
 """
 from __future__ import annotations
 
@@ -152,6 +167,8 @@ DualChunkClientPassFn = Callable[
 _WEIGHTINGS = ("nk", "uniform", "sum")
 _SCALINGS = ("none", "diag")
 _AGGREGATORS = ("dense", "pallas")
+_GUARDS = ("clip", "trimmed_mean", "median")
+_ORDER_STAT_GUARDS = ("trimmed_mean", "median")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -187,6 +204,28 @@ class EngineConfig:
     # the traced body through problem.virtual — one chunk (or one gathered
     # cohort) at a time, so peak data memory is independent of K.
     virtual_data: bool = False
+    # None -> trust every returned delta bit-for-bit (the historical path).
+    # "clip" -> per-client robustness folded into every round path: a client
+    # whose delta has any non-finite coordinate is rejected (delta zeroed —
+    # it counts as "returned no update" while keeping its weight in the
+    # realized mass, so the reweight scalar is unchanged), and
+    # guard_clip_norm caps each surviving delta's L2 norm.  Both are
+    # per-client scalars, so they fold into the streamed fused_accumulate
+    # chunk entries at O(chunk·d).  "trimmed_mean" / "median" ->
+    # coordinate-wise order statistics over the valid (participating,
+    # all-finite) clients via kernels/robust_aggregate — a bounded fraction
+    # of adversarial deltas cannot move the aggregate arbitrarily.  Order
+    # statistics need the materialized (K, d) stacks, so these are rejected
+    # with client_chunk / virtual_data (the streamed body only ever holds
+    # one chunk and a running sum — a sort cannot be folded chunk-by-chunk)
+    # and with weighting="sum" (dual iterates must track the frozen dual
+    # blocks through the exact plain sum); they are unweighted by
+    # construction and skip participation reweighting.
+    aggregator_guard: Optional[str] = None
+    # L2 norm cap per client delta; requires aggregator_guard="clip".
+    guard_clip_norm: Optional[float] = None
+    # per-side trim fraction for aggregator_guard="trimmed_mean".
+    guard_trim: float = 0.1
 
     @staticmethod
     def _check_optional_count(value, name: str):
@@ -210,6 +249,43 @@ class EngineConfig:
         self._check_optional_count(self.cohort, "cohort")
         if not isinstance(self.virtual_data, bool):
             raise ValueError("virtual_data must be a bool")
+        if (self.aggregator_guard is not None
+                and self.aggregator_guard not in _GUARDS):
+            raise ValueError(f"aggregator_guard must be one of {_GUARDS} "
+                             "or None")
+        if self.aggregator_guard in _ORDER_STAT_GUARDS:
+            if self.client_chunk is not None:
+                raise ValueError(
+                    f"aggregator_guard='{self.aggregator_guard}' needs the "
+                    "materialized (K, d) delta stacks; the streamed path "
+                    "(client_chunk) only ever holds one chunk and a running "
+                    "sum, and order statistics cannot be folded "
+                    "chunk-by-chunk — use the plain or cohort path, or "
+                    "aggregator_guard='clip'")
+            if self.virtual_data:
+                raise ValueError(
+                    f"aggregator_guard='{self.aggregator_guard}' is not "
+                    "available with virtual_data (virtual rounds never "
+                    "materialize the full delta stacks) — use "
+                    "aggregator_guard='clip'")
+            if self.weighting == "sum":
+                raise ValueError(
+                    "order-statistic guards replace the weighted sum with "
+                    "an unweighted coordinate-wise statistic; "
+                    "weighting='sum' (dual methods tracking frozen dual "
+                    "blocks) requires the exact plain sum — use "
+                    "aggregator_guard='clip'")
+        if not 0.0 <= self.guard_trim < 0.5:
+            raise ValueError("guard_trim must be in [0, 0.5)")
+        if self.guard_clip_norm is not None:
+            if (isinstance(self.guard_clip_norm, bool)
+                    or not isinstance(self.guard_clip_norm, (int, float))
+                    or self.guard_clip_norm <= 0):
+                raise ValueError(
+                    "guard_clip_norm must be a positive number or None")
+            if self.aggregator_guard != "clip":
+                raise ValueError(
+                    "guard_clip_norm requires aggregator_guard='clip'")
 
 
 @functools.partial(jax.jit, static_argnames=("scaled",))
@@ -258,7 +334,8 @@ class RoundEngine:
 
     def __init__(self, problem: FederatedLogReg, cfg: EngineConfig = EngineConfig(),
                  *, a_diag: Optional[jax.Array] = None,
-                 participation_model: Optional[Any] = None):
+                 participation_model: Optional[Any] = None,
+                 fault_model: Optional[Any] = None):
         self.problem = problem
         self.cfg = cfg
         if participation_model is not None and not hasattr(
@@ -268,6 +345,12 @@ class RoundEngine:
                 "masks(key, round_index, offsets, sizes) — see "
                 "repro.fleet.participation.ParticipationModel")
         self.participation_model = participation_model
+        if fault_model is not None and not hasattr(fault_model, "apply"):
+            raise ValueError(
+                "fault_model must implement "
+                "apply(deltas, round_index, client_ids) — see "
+                "repro.fleet.faults.FaultModel")
+        self.fault_model = fault_model
         if cfg.server_scaling == "diag" and a_diag is None:
             raise ValueError("server_scaling='diag' requires an a_diag")
         layout = getattr(problem, "virtual", None)
@@ -304,6 +387,12 @@ class RoundEngine:
                 raise ValueError(
                     "this engine's participation model is round-dependent; "
                     "pass round_index (solvers forward state.round)")
+            if (self.fault_model is not None and
+                    getattr(self.fault_model, "needs_round_index", True)):
+                raise ValueError(
+                    "this engine has a fault model; fault draws are a "
+                    "function of the round by contract — pass round_index "
+                    "(solvers forward state.round)")
             return jnp.asarray(0, jnp.int32)
         return jnp.asarray(round_index, jnp.int32)
 
@@ -315,6 +404,71 @@ class RoundEngine:
         if self._virtual is not None and isinstance(bucket, VirtualBucket):
             return self._virtual.realize(bucket)
         return bucket
+
+    # -- fault injection & per-client guard ------------------------------- #
+
+    def _bucket_ids(self, wi: int, num_clients: int) -> jax.Array:
+        """Global client ids for the bucket whose first client is ``wi`` —
+        the identity the fault model's draws fold in, so the same clients
+        are corrupted identically on every round path."""
+        return jnp.uint32(wi) + jnp.arange(num_clients, dtype=jnp.uint32)
+
+    def _fault_round(self, round_index) -> Optional[jax.Array]:
+        """The round index fault draws are a function of — ``None`` (and
+        zero traced overhead) when no fault model is installed."""
+        if self.fault_model is None:
+            return None
+        return self._round_index_arg(round_index)
+
+    def _faulted(self, deltas, r, ids, live):
+        """Corrupt the *returned* clients' deltas through the fault model.
+
+        ``live`` (weights or a {0,1} mask; ``None`` = everyone) restricts
+        corruption to clients actually in the round: a client that never
+        reports cannot deliver a corrupted delta — and a NaN planted on a
+        zero-weight row would still poison the weighted sum (0·NaN = NaN),
+        so the ``jnp.where`` *selects* the honest delta instead of relying
+        on the weight to cancel it."""
+        if self.fault_model is None:
+            return deltas
+        bad = self.fault_model.apply(deltas, r, ids)
+        if live is None:
+            return bad
+        keep = live.reshape((-1,) + (1,) * (deltas.ndim - 1)) > 0
+        return jnp.where(keep, bad, deltas)
+
+    def _order_stat(self) -> bool:
+        return self.cfg.aggregator_guard in _ORDER_STAT_GUARDS
+
+    def _guard_clip(self, deltas):
+        """The "clip" guard: reject (zero) any client delta with a
+        non-finite coordinate, then cap the survivors' L2 norms.  Both are
+        per-client transforms of a delta block of any leading shape, which
+        is what lets them fold into the streamed chunk entries."""
+        if self.cfg.aggregator_guard != "clip":
+            return deltas
+        finite = jnp.isfinite(deltas).all(axis=-1, keepdims=True)
+        safe = jnp.where(finite, deltas, jnp.zeros_like(deltas))
+        cn = self.cfg.guard_clip_norm
+        if cn is not None:
+            nrm = jnp.sqrt((safe.astype(jnp.float32) ** 2).sum(
+                axis=-1, keepdims=True))
+            fac = jnp.minimum(1.0, cn / jnp.maximum(nrm, 1e-30))
+            safe = safe * fac.astype(safe.dtype)
+        return safe
+
+    def _robust_apply(self, w, deltas_all, valid):
+        """Order-statistic server update over the stacked (K, d) deltas:
+        rows that are invalid (non-participants) or carry any non-finite
+        coordinate are excluded, and the kernel's coordinate-wise trimmed
+        mean / median of the rest updates the iterate."""
+        finite = jnp.isfinite(deltas_all).all(axis=1)
+        valid = valid & finite
+        a = (self.a_diag if self.cfg.server_scaling == "diag"
+             else jnp.ones_like(w))
+        return _kernel("robust_aggregate")(
+            w, deltas_all, valid, a, self.cfg.guard_trim,
+            self.cfg.aggregator_guard).astype(w.dtype)
 
     # -- step 3: sampling & weighting ------------------------------------- #
 
@@ -399,6 +553,13 @@ class RoundEngine:
         pallas = cfg.aggregator == "pallas"
         if masks is None:
             masks = self.participation_masks(key)
+        if self._order_stat():
+            deltas_all = jnp.concatenate(list(deltas_by_bucket), axis=0)
+            if masks is not None:
+                valid = jnp.concatenate(list(masks)) > 0
+            else:
+                valid = jnp.ones((deltas_all.shape[0],), bool)
+            return self._robust_apply(w, deltas_all, valid)
         reweight = self._reweightable(masks)
         agg = jnp.zeros_like(w)
         stacked: List[jax.Array] = []
@@ -408,6 +569,7 @@ class RoundEngine:
         for i, (wi, b, deltas) in enumerate(zip(self._offsets,
                                                 self.problem.buckets,
                                                 deltas_by_bucket)):
+            deltas = self._guard_clip(deltas)
             wts = self.bucket_weights(wi, b.num_clients)
             if masks is not None:
                 sel = masks[i]
@@ -450,15 +612,23 @@ class RoundEngine:
         Each bucket's pass receives ``fold_in(key, wi)`` where ``wi`` is the
         bucket's first client index — the same key the round's single
         participation draw uses for that bucket.  ``round_index`` feeds
-        round-dependent participation models (availability traces); the
-        Bernoulli draw ignores it.
+        round-dependent participation models (availability traces) and the
+        fault model's draws; the Bernoulli draw ignores it.
+
+        With a fault model installed, each bucket's deltas are corrupted
+        between the pass and aggregation — the wire, not the client.
         """
+        masks = self.participation_masks(key, round_index)
+        r = self._fault_round(round_index)
         deltas: List[jax.Array] = []
         for bi, (wi, b) in enumerate(zip(self._offsets, self.problem.buckets)):
             kb = jax.random.fold_in(key, wi)
-            deltas.append(client_pass(w, bi, self._realize(b), kb))
-        return self.aggregate(w, deltas, key,
-                              masks=self.participation_masks(key, round_index))
+            d_b = client_pass(w, bi, self._realize(b), kb)
+            if self.fault_model is not None:
+                d_b = self._faulted(d_b, r, self._bucket_ids(wi, b.num_clients),
+                                    masks[bi] if masks is not None else None)
+            deltas.append(d_b)
+        return self.aggregate(w, deltas, key, masks=masks)
 
     def round_with_state(self, w: jax.Array, states: Sequence[Any],
                          key: jax.Array, client_pass: DualClientPassFn, *,
@@ -480,11 +650,17 @@ class RoundEngine:
         views never diverge.
         """
         masks = self.participation_masks(key, round_index)
+        r = self._fault_round(round_index)
         deltas: List[jax.Array] = []
         new_states: List[Any] = []
         for bi, (wi, b) in enumerate(zip(self._offsets, self.problem.buckets)):
             kb = jax.random.fold_in(key, wi)
             d_b, s_b = client_pass(w, bi, self._realize(b), states[bi], kb)
+            if self.fault_model is not None:
+                # the wire, not the client: the delta is corrupted, the
+                # client's own aux state is whatever its pass computed
+                d_b = self._faulted(d_b, r, self._bucket_ids(wi, b.num_clients),
+                                    masks[bi] if masks is not None else None)
             if masks is not None:
                 sel = masks[bi]
                 s_b = jax.tree_util.tree_map(
@@ -513,7 +689,8 @@ class RoundEngine:
             [x, jnp.zeros((pad,) + x.shape[1:], x.dtype)], axis=0)
 
     def _stream_bucket(self, w, bi: int, bucket: ClientBucket, kb, wts,
-                       chunk_pass, state_b=None, sel=None, keys=None):
+                       chunk_pass, state_b=None, sel=None, keys=None,
+                       ids=None, r=None):
         """Run one bucket's client pass chunk-by-chunk, returning the
         bucket's weighted delta **sum** (a (d,) vector) and — for dual-state
         passes — the updated bucket state.
@@ -572,6 +749,13 @@ class RoundEngine:
             xs["state"] = jax.tree_util.tree_map(chunked, state_b)
         if sel is not None:
             xs["sel"] = chunked(sel)
+        if self.fault_model is not None:
+            # the chunk's global client ids ride through the scan so fault
+            # draws see the same identities as every other round path; the
+            # xs entry only exists under a fault model, so fault-free scans
+            # keep their historical structure (and bits) exactly.  Pad ids
+            # are 0 but pad weights are 0, so _faulted leaves them honest.
+            xs["ids"] = chunked(jnp.asarray(ids, jnp.uint32))
         fused = self.cfg.aggregator == "pallas"
         m_pad = bucket.m_pad
 
@@ -591,6 +775,11 @@ class RoundEngine:
                             x["sel"].reshape((chunk,) + (1,) * (new.ndim - 1))
                             > 0, new, old),
                         s_new, x["state"])
+            if self.fault_model is not None:
+                # live = the chunk's (already sel-zeroed) weights: only
+                # clients actually contributing to the sum can be faulted
+                deltas = self._faulted(deltas, r, x["ids"], x["wts"])
+            deltas = self._guard_clip(deltas)
             if fused:
                 # the kernel's init/acc split with an identity epilogue
                 acc = _kernel("fused_accumulate")(acc, deltas, x["wts"])
@@ -605,12 +794,14 @@ class RoundEngine:
             lambda a: a.reshape((nch * chunk,) + a.shape[2:])[:Kb], s_stack)
         return acc, new_state
 
-    def _streamed_round(self, w, key, chunk_pass, states, masks):
+    def _streamed_round(self, w, key, chunk_pass, states, masks, *,
+                        round_index=None):
         # The keyed-chunk-pass round body: per-bucket work goes through
         # _masked_bucket, which streams when cfg.client_chunk is set and
         # otherwise runs the direct keyed pass over the (realized) bucket —
         # so this one body serves round_streamed AND round_virtual.
         cfg = self.cfg
+        r = self._fault_round(round_index)
         reweight = self._reweightable(masks)
         acc = jnp.zeros_like(w)
         total_mass = jnp.zeros(())
@@ -628,7 +819,9 @@ class RoundEngine:
             acc_b, s_b = self._masked_bucket(
                 w, bi, b, kb, self.client_keys(kb, b.num_clients), wts, sel,
                 chunk_pass,
-                state_b=states[bi] if states is not None else None)
+                state_b=states[bi] if states is not None else None,
+                ids=(self._bucket_ids(wi, b.num_clients)
+                     if self.fault_model is not None else None), r=r)
             acc = acc + acc_b
             if new_states is not None:
                 new_states.append(s_b)
@@ -657,7 +850,8 @@ class RoundEngine:
             raise ValueError("round_streamed requires cfg.client_chunk")
         w_next, _ = self._streamed_round(
             w, key, chunk_pass, None,
-            self.participation_masks(key, round_index))
+            self.participation_masks(key, round_index),
+            round_index=round_index)
         return w_next
 
     def round_streamed_with_state(self, w: jax.Array, states: Sequence[Any],
@@ -673,7 +867,8 @@ class RoundEngine:
             raise ValueError("round_streamed_with_state requires "
                              "cfg.client_chunk")
         return self._streamed_round(w, key, chunk_pass, list(states),
-                                    self.participation_masks(key, round_index))
+                                    self.participation_masks(key, round_index),
+                                    round_index=round_index)
 
     # -- the virtual round: rows regenerated inside the traced body --------- #
 
@@ -693,7 +888,8 @@ class RoundEngine:
             raise ValueError("round_virtual requires cfg.virtual_data")
         w_next, _ = self._streamed_round(
             w, key, chunk_pass, None,
-            self.participation_masks(key, round_index))
+            self.participation_masks(key, round_index),
+            round_index=round_index)
         return w_next
 
     def round_virtual_with_state(self, w: jax.Array, states: Sequence[Any],
@@ -708,7 +904,8 @@ class RoundEngine:
             raise ValueError("round_virtual_with_state requires "
                              "cfg.virtual_data")
         return self._streamed_round(w, key, chunk_pass, list(states),
-                                    self.participation_masks(key, round_index))
+                                    self.participation_masks(key, round_index),
+                                    round_index=round_index)
 
     # -- the cohort round: O(participation · K) client passes --------------- #
 
@@ -721,7 +918,7 @@ class RoundEngine:
         return (wts[:, None] * deltas).sum(axis=0)
 
     def _masked_bucket(self, w, bi: int, bucket: ClientBucket, kb, keys,
-                       wtsz, sel, chunk_pass, state_b=None):
+                       wtsz, sel, chunk_pass, state_b=None, ids=None, r=None):
         """The masked reference body over the *keyed* chunk-pass contract:
         every client's pass runs, zero-weighted non-participants drop out of
         the sum, and dual state freezes where ``sel`` is 0.  This is both
@@ -730,7 +927,8 @@ class RoundEngine:
         aggregation recipe."""
         if self.cfg.client_chunk is not None:
             return self._stream_bucket(w, bi, bucket, kb, wtsz, chunk_pass,
-                                       state_b=state_b, sel=sel, keys=keys)
+                                       state_b=state_b, sel=sel, keys=keys,
+                                       ids=ids, r=r)
         bucket = self._realize(bucket)
         if state_b is None:
             deltas = chunk_pass(w, bi, bucket, keys)
@@ -743,10 +941,13 @@ class RoundEngine:
                         sel.reshape((bucket.num_clients,)
                                     + (1,) * (new.ndim - 1)) > 0, new, old),
                     s_new, state_b)
+        if self.fault_model is not None:
+            deltas = self._faulted(deltas, r, ids, wtsz)
+        deltas = self._guard_clip(deltas)
         return self._bucket_accumulate(w, deltas, wtsz), s_new
 
     def _cohort_bucket(self, w, bi: int, bucket: ClientBucket, kb, wts, sel,
-                       chunk_pass, state_b=None):
+                       chunk_pass, state_b=None, ids=None, r=None):
         """One bucket's contribution with only the sampled clients computed.
 
         The round's Bernoulli draw ``sel`` is turned into a gather: the
@@ -776,7 +977,8 @@ class RoundEngine:
         if sel is None or cap >= Kb:
             # nothing to gain from gathering — run the masked reference body
             return self._masked_bucket(w, bi, bucket, kb, keys, wtsz, sel,
-                                       chunk_pass, state_b=state_b)
+                                       chunk_pass, state_b=state_b,
+                                       ids=ids, r=r)
         count = jnp.count_nonzero(sel > 0)
 
         def cohort_branch(_):
@@ -795,21 +997,31 @@ class RoundEngine:
                                         jnp.where(valid, bucket.n_k[gidx], 0))
             g_keys = keys[gidx]
             g_wts = jnp.where(valid, wtsz[gidx], 0.0)
+            # gathered global ids: fault draws fold in the client's original
+            # identity, so the cohort corrupts exactly the clients the
+            # masked path would (pad rows alias ids[0] but carry weight 0,
+            # so _faulted leaves them honest)
+            g_ids = ids[gidx] if self.fault_model is not None else None
             g_state = None if state_b is None else jax.tree_util.tree_map(
                 lambda a: a[gidx], state_b)
             if self.cfg.client_chunk is not None:
                 acc_b, s_new = self._stream_bucket(
                     w, bi, g_bucket, kb, g_wts, chunk_pass,
-                    state_b=g_state, sel=None, keys=g_keys)
+                    state_b=g_state, sel=None, keys=g_keys, ids=g_ids, r=r)
             elif state_b is None:
-                acc_b = self._bucket_accumulate(
-                    w, chunk_pass(w, bi, self._realize(g_bucket), g_keys),
-                    g_wts)
+                deltas = chunk_pass(w, bi, self._realize(g_bucket), g_keys)
+                if self.fault_model is not None:
+                    deltas = self._faulted(deltas, r, g_ids, g_wts)
+                acc_b = self._bucket_accumulate(w, self._guard_clip(deltas),
+                                                g_wts)
                 s_new = None
             else:
                 deltas, s_new = chunk_pass(w, bi, self._realize(g_bucket),
                                            g_state, g_keys)
-                acc_b = self._bucket_accumulate(w, deltas, g_wts)
+                if self.fault_model is not None:
+                    deltas = self._faulted(deltas, r, g_ids, g_wts)
+                acc_b = self._bucket_accumulate(w, self._guard_clip(deltas),
+                                                g_wts)
             if state_b is None:
                 return acc_b, None
             # scatter updated slices back to their original client slots;
@@ -824,17 +1036,23 @@ class RoundEngine:
 
         def masked_branch(_):
             return self._masked_bucket(w, bi, bucket, kb, keys, wtsz, sel,
-                                       chunk_pass, state_b=state_b)
+                                       chunk_pass, state_b=state_b,
+                                       ids=ids, r=r)
 
         return jax.lax.cond(count <= cap, cohort_branch, masked_branch, None)
 
-    def _cohort_round(self, w, key, chunk_pass, states, masks):
+    def _cohort_round(self, w, key, chunk_pass, states, masks, *,
+                      round_index=None):
         """The cohort twin of :meth:`_streamed_round`: the same full-vector
         mass reductions (the reweighting contract never sees the gather —
         expected/realized mass come from the *complete* weight and mask
         vectors), with each bucket's delta sum produced by
         :meth:`_cohort_bucket` over only the sampled clients."""
+        if self._order_stat():
+            return self._cohort_round_robust(w, key, chunk_pass, states,
+                                             masks, round_index=round_index)
         cfg = self.cfg
+        r = self._fault_round(round_index)
         reweight = self._reweightable(masks)
         acc = jnp.zeros_like(w)
         total_mass = jnp.zeros(())
@@ -849,7 +1067,9 @@ class RoundEngine:
                 expected_mass = expected_mass + wts.sum()
             acc_b, s_b = self._cohort_bucket(
                 w, bi, b, kb, wts, sel, chunk_pass,
-                state_b=states[bi] if states is not None else None)
+                state_b=states[bi] if states is not None else None,
+                ids=(self._bucket_ids(wi, b.num_clients)
+                     if self.fault_model is not None else None), r=r)
             acc = acc + acc_b
             if new_states is not None:
                 new_states.append(s_b)
@@ -864,6 +1084,100 @@ class RoundEngine:
             w_next = self._finish_dense(w, acc, scale)
         return w_next, new_states
 
+    def _cohort_round_robust(self, w, key, chunk_pass, states, masks, *,
+                             round_index=None):
+        """The cohort body under an order-statistic guard: instead of each
+        bucket folding into a weighted (d,) sum, every bucket contributes
+        its (cap, d) gathered delta stack plus a validity flag per row, and
+        one :meth:`_robust_apply` call takes the coordinate-wise trimmed
+        mean / median across all buckets' valid rows.
+
+        Two deliberate departures from :meth:`_cohort_bucket`:
+
+        * **No ``lax.cond`` overflow fallback.**  The fallback's masked
+          branch produces a (Kb, d) stack while the cohort branch produces
+          (cap, d) — ``lax.cond`` requires equal shapes, so it cannot
+          exist here.  A draw overflowing the z=6-sized capacity (odds
+          ~1e-9 per bucket-round — :func:`cohort_capacity`) instead drops
+          the participants beyond ``cap`` from the round: they are treated
+          exactly like non-participants (state frozen, excluded from the
+          statistic), a graceful degradation rather than a wrong answer.
+        * **No mass reductions.**  Order statistics are unweighted and
+          need no participation reweighting (the statistic is location-,
+          not mass-based).
+        """
+        r = self._fault_round(round_index)
+        stacks: List[jax.Array] = []
+        valids: List[jax.Array] = []
+        new_states: Optional[List[Any]] = [] if states is not None else None
+        for bi, (wi, b) in enumerate(zip(self._offsets, self.problem.buckets)):
+            kb = jax.random.fold_in(key, wi)
+            Kb = b.num_clients
+            keys = self.client_keys(kb, Kb)
+            sel = masks[bi] if masks is not None else None
+            ids = (self._bucket_ids(wi, Kb)
+                   if self.fault_model is not None else None)
+            state_b = states[bi] if states is not None else None
+            cap = min(self.cfg.cohort, Kb,
+                      cohort_capacity(self.cfg.participation, Kb)
+                      if self.cfg.participation < 1.0 else Kb)
+            if sel is None or cap >= Kb:
+                # degenerate case: the full keyed pass, whole-bucket stack
+                bucket = self._realize(b)
+                if state_b is None:
+                    deltas = chunk_pass(w, bi, bucket, keys)
+                    s_new = None
+                else:
+                    deltas, s_new = chunk_pass(w, bi, bucket, state_b, keys)
+                    if sel is not None:
+                        s_new = jax.tree_util.tree_map(
+                            lambda new, old: jnp.where(
+                                sel.reshape((Kb,) + (1,) * (new.ndim - 1))
+                                > 0, new, old),
+                            s_new, state_b)
+                if self.fault_model is not None:
+                    deltas = self._faulted(deltas, r, ids, sel)
+                stacks.append(deltas)
+                valids.append(sel > 0 if sel is not None
+                              else jnp.ones((Kb,), bool))
+                if new_states is not None:
+                    new_states.append(s_new)
+                continue
+            count = jnp.count_nonzero(sel > 0)
+            gidx = jnp.nonzero(sel > 0, size=cap, fill_value=0)[0]
+            gvalid = jnp.arange(cap) < count
+            if self._virtual is not None and isinstance(b, VirtualBucket):
+                g_bucket = VirtualBucket(
+                    b.client_ids[gidx],
+                    jnp.where(gvalid, b.n_k[gidx], 0), b.m_pad)
+            else:
+                g_bucket = ClientBucket(b.idx[gidx], b.val[gidx],
+                                        b.y[gidx],
+                                        jnp.where(gvalid, b.n_k[gidx], 0))
+            g_keys = keys[gidx]
+            g_ids = ids[gidx] if ids is not None else None
+            if state_b is None:
+                deltas = chunk_pass(w, bi, self._realize(g_bucket), g_keys)
+                s_new = None
+            else:
+                g_state = jax.tree_util.tree_map(lambda a: a[gidx], state_b)
+                deltas, s_new = chunk_pass(w, bi, self._realize(g_bucket),
+                                           g_state, g_keys)
+            if self.fault_model is not None:
+                deltas = self._faulted(deltas, r, g_ids,
+                                       gvalid.astype(jnp.float32))
+            stacks.append(deltas)
+            valids.append(gvalid)
+            if new_states is not None:
+                scatter_idx = jnp.where(gvalid, gidx, Kb)
+                new_states.append(jax.tree_util.tree_map(
+                    lambda old, new: old.at[scatter_idx].set(new,
+                                                             mode="drop"),
+                    state_b, s_new))
+        w_next = self._robust_apply(w, jnp.concatenate(stacks, axis=0),
+                                    jnp.concatenate(valids))
+        return w_next, new_states
+
     def round_cohort(self, w: jax.Array, key: jax.Array,
                      chunk_pass: ChunkClientPassFn, *,
                      round_index: Optional[Any] = None) -> jax.Array:
@@ -876,7 +1190,8 @@ class RoundEngine:
             raise ValueError("round_cohort requires cfg.cohort")
         w_next, _ = self._cohort_round(
             w, key, chunk_pass, None,
-            self.participation_masks(key, round_index))
+            self.participation_masks(key, round_index),
+            round_index=round_index)
         return w_next
 
     def round_cohort_with_state(self, w: jax.Array, states: Sequence[Any],
@@ -895,7 +1210,8 @@ class RoundEngine:
         if self.cfg.cohort is None:
             raise ValueError("round_cohort_with_state requires cfg.cohort")
         return self._cohort_round(w, key, chunk_pass, list(states),
-                                  self.participation_masks(key, round_index))
+                                  self.participation_masks(key, round_index),
+                                  round_index=round_index)
 
     # -- the compiled round: O(1) dispatches per round ---------------------- #
 

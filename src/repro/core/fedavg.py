@@ -60,6 +60,14 @@ class FedAvgConfig:
     # (trace-driven availability/stragglers); `participation` then serves
     # as the model's upper-bound rate for cohort capacity sizing
     participation_model: Optional[Any] = None
+    # corrupt returned deltas through a repro.fleet.faults fault model
+    # (NaN poisoning, sign flips, scaling attacks, stale replay)
+    fault_model: Optional[Any] = None
+    # robust server aggregation: None | "clip" | "trimmed_mean" | "median"
+    # (see EngineConfig.aggregator_guard for the composition rules)
+    aggregator_guard: Optional[str] = None
+    guard_clip_norm: Optional[float] = None
+    guard_trim: float = 0.1
 
 
 def _local_sgd_pass(w0, bucket: ClientBucket, lam, cfg: FedAvgConfig,
@@ -134,8 +142,12 @@ class FedAvg(FederatedSolver):
                 client_chunk=cfg.client_chunk,
                 cohort=cfg.cohort,
                 virtual_data=virtual,
+                aggregator_guard=cfg.aggregator_guard,
+                guard_clip_norm=cfg.guard_clip_norm,
+                guard_trim=cfg.guard_trim,
             ),
             participation_model=cfg.participation_model,
+            fault_model=cfg.fault_model,
         )
 
         def fedavg_pass(w, bi, bucket, kb):

@@ -66,6 +66,13 @@ class FSVRGConfig:
     # (trace-driven availability/stragglers); `participation` then serves
     # as the model's upper-bound rate for cohort capacity sizing
     participation_model: Optional[Any] = None
+    # corrupt returned deltas through a repro.fleet.faults fault model
+    fault_model: Optional[Any] = None
+    # robust server aggregation: None | "clip" | "trimmed_mean" | "median"
+    # (see EngineConfig.aggregator_guard for the composition rules)
+    aggregator_guard: Optional[str] = None
+    guard_clip_norm: Optional[float] = None
+    guard_trim: float = 0.1
 
 
 def _client_pass(w0, full_grad, bucket: ClientBucket, lam, phi, cfg: FSVRGConfig, key):
@@ -158,9 +165,13 @@ class FSVRG(FederatedSolver):
                 client_chunk=cfg.client_chunk,
                 cohort=cfg.cohort,
                 virtual_data=virtual,
+                aggregator_guard=cfg.aggregator_guard,
+                guard_clip_norm=cfg.guard_clip_norm,
+                guard_trim=cfg.guard_trim,
             ),
             a_diag=self.a_diag,
             participation_model=cfg.participation_model,
+            fault_model=cfg.fault_model,
         )
         # The full gradient is the round's own communication (Alg. 4 line 3),
         # so it is the eager prelude; everything after it is one compiled

@@ -43,6 +43,21 @@ from repro.core.solver import FederatedSolver, SolverState
 EvalFn = Callable[[jax.Array], Dict[str, Any]]
 
 
+class NonFiniteIterateError(RuntimeError):
+    """The iterate went NaN/Inf mid-run.  Carries which solver and which
+    round, so a campaign guard-rail can quarantine exactly that round
+    instead of letting the poison silently propagate to the final
+    checkpoint."""
+
+    def __init__(self, solver_name: str, round_index: int):
+        super().__init__(
+            f"non-finite iterate after round {round_index} of solver "
+            f"'{solver_name}' — a diverging stepsize or an unguarded "
+            "fault-injected delta (see EngineConfig.aggregator_guard)")
+        self.solver_name = solver_name
+        self.round_index = int(round_index)
+
+
 @dataclasses.dataclass
 class FitResult:
     """What a training run produced: final state + per-round eval history
@@ -79,7 +94,8 @@ class Trainer:
                  scan: bool = False,
                  eval_every: int = 1,
                  checkpoint_dir: Optional[str] = None,
-                 checkpoint_every: int = 0):
+                 checkpoint_every: int = 0,
+                 fail_fast: bool = True):
         if scan and callback is not None:
             raise ValueError("scan=True runs the loop inside jit; Python "
                              "callbacks need the eager path")
@@ -100,6 +116,15 @@ class Trainer:
         self.eval_every = int(eval_every)
         self.checkpoint_dir = checkpoint_dir
         self.checkpoint_every = int(checkpoint_every)
+        # raise NonFiniteIterateError the round the iterate goes NaN/Inf
+        # instead of silently training on garbage.  sweep() turns this off:
+        # its divergent stepsize candidates are expected and discarded.
+        # The scan path checks the final iterate only (the loop is one jit).
+        self.fail_fast = bool(fail_fast)
+
+    def _check_finite(self, state: SolverState, r: int) -> None:
+        if self.fail_fast and not bool(jnp.isfinite(state.w).all()):
+            raise NonFiniteIterateError(self.solver.name, r)
 
     def _is_eval_round(self, r: int) -> bool:
         """Rounds whose metrics land in history: every ``eval_every``-th
@@ -152,6 +177,7 @@ class Trainer:
         saved_at = -1
         for r in range(start, self.rounds):
             state = self.solver.round(state, jax.random.fold_in(base, r))
+            self._check_finite(state, r)
             if self.eval_fn is not None and self._is_eval_round(r):
                 history.append({k: float(v)
                                 for k, v in self.eval_fn(state.w).items()})
@@ -194,6 +220,7 @@ class Trainer:
 
         final, stacked = jax.jit(
             lambda s, xs: jax.lax.scan(body, s, xs))(state, (rs, keys))
+        self._check_finite(final, self.rounds - 1)
         if self.eval_fn is None:
             history: List[Dict[str, float]] = []
         else:
@@ -219,6 +246,9 @@ def sweep(build_solver: Callable[[Any], FederatedSolver],
     """
     best_res, best_v, best_f = None, None, np.inf
     for v in candidates:
+        # fail_fast off: a divergent candidate is part of the protocol —
+        # it just loses the sweep — unless the caller opts back in
+        trainer_kw.setdefault("fail_fast", False)
         res = Trainer(build_solver(v), rounds=rounds, seed=seed,
                       eval_fn=eval_fn, **trainer_kw).fit()
         if not res.history:        # degenerate budget (rounds <= start)

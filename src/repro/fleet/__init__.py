@@ -12,14 +12,20 @@ This package simulates that fleet *deterministically*:
   participation.py — the :class:`ParticipationModel` protocol plugging
                      those traces into :class:`repro.core.RoundEngine`
                      in place of its i.i.d. Bernoulli draw
+  faults.py        — the :class:`FaultModel` twin for *what clients
+                     send*: deterministic delta corruptions (NaN
+                     poisoning, sign flips, scaling attacks, stale
+                     replay) injected between the client pass and
+                     aggregation
   metrics.py       — structured JSONL round telemetry (drawn vs realized
                      cohort, stragglers, objective, wall/RSS)
   campaign.py      — the checkpointed, kill-resumable campaign runner
                      over the Fig.-2 solver grid (see
                      ``benchmarks/campaign.py``)
 """
-from repro.fleet.campaign import (CampaignInterrupted, CampaignSpec,
-                                  run_campaign, run_cell)
+from repro.fleet.campaign import (CampaignDiverged, CampaignInterrupted,
+                                  CampaignSpec, run_campaign, run_cell)
+from repro.fleet.faults import DeltaFaults, FaultModel, fault_counts
 from repro.fleet.metrics import (TIMING_KEYS, EventLog, RoundEvent,
                                  deterministic_view, peak_rss_mb,
                                  summarize_events)
@@ -32,7 +38,9 @@ from repro.fleet.traces import (FleetMasks, FleetTrace, availability_mask,
                                 straggler_flags)
 
 __all__ = [
-    "CampaignInterrupted", "CampaignSpec", "run_campaign", "run_cell",
+    "CampaignDiverged", "CampaignInterrupted", "CampaignSpec",
+    "run_campaign", "run_cell",
+    "DeltaFaults", "FaultModel", "fault_counts",
     "TIMING_KEYS", "EventLog", "RoundEvent", "deterministic_view",
     "peak_rss_mb", "summarize_events",
     "BernoulliParticipation", "FixedParticipation", "ParticipationModel",

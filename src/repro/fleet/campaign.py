@@ -27,6 +27,30 @@ ground truth and/or resampled client data) and the solver is
 reconstructed on the new problem with the carried-over state — the
 epoch is a pure function of the absolute round, so resume lands in the
 correct segment automatically.
+
+**Divergence guard-rail** (``spec.guard != "none"``): a round that leaves
+the iterate non-finite (:class:`~repro.core.trainer.NonFiniteIterateError`
+from the Trainer's fail-fast check) or exploding
+(``||w|| > explode_norm``, checked before the event is logged) triggers a
+*rollback* — the cell restores its last atomic checkpoint, the offending
+round is recorded in the cell's ``guard.json`` quarantine set (atomic
+write, so the decision survives a kill), the event log drops the rounds
+about to re-run, and the re-run *skips* the quarantined round (the round
+counter advances, the iterate and per-client state are untouched — as if
+every client was dropped that round).  Quarantined rounds emit their
+event with ``rollbacks=1``.  More than ``max_rollbacks`` consecutive
+rollbacks without completing a segment raises :class:`CampaignDiverged`.
+Because the fault draws, the divergence they cause, and the persisted
+quarantine set are all pure functions of (spec, round), kill-resume
+bit-identity holds *across* rollbacks: an interrupted+resumed campaign
+and an uninterrupted one quarantine the same rounds and emit the same
+deterministic event stream.
+
+Guard spellings: ``"rollback"`` arms the rail alone; ``"clip"``,
+``"trimmed_mean"``, ``"median"`` additionally install the matching
+:attr:`~repro.core.engine.EngineConfig.aggregator_guard` in every cell's
+engine (robust aggregation usually prevents the divergence the rail would
+otherwise have to repair).
 """
 from __future__ import annotations
 
@@ -34,14 +58,34 @@ import dataclasses
 import json
 import os
 import time
-from typing import Dict, Optional, Tuple
+from typing import Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
+from repro.fleet.faults import FaultModel, fault_counts
 from repro.fleet.metrics import EventLog, RoundEvent, peak_rss_mb, summarize_events
 from repro.fleet.participation import BernoulliParticipation, TraceParticipation
 from repro.fleet.traces import FleetTrace
+
+#: guard spellings that install an engine-level aggregator guard
+_ENGINE_GUARDS = ("clip", "trimmed_mean", "median")
+_GUARD_CHOICES = ("none", "rollback") + _ENGINE_GUARDS
+
+
+class CampaignDiverged(RuntimeError):
+    """The guard-rail gave up: more than ``max_rollbacks`` consecutive
+    rollbacks without completing a segment — quarantining rounds is not
+    restoring progress, so the campaign aborts instead of spinning."""
+
+    def __init__(self, cell: str, round_index: int, rollbacks: int):
+        super().__init__(
+            f"cell '{cell}' keeps diverging (round {round_index}, "
+            f"{rollbacks} rollbacks so far) — quarantine is not restoring "
+            "progress; raise max_rollbacks or install an aggregator guard")
+        self.cell = cell
+        self.round_index = int(round_index)
+        self.rollbacks = int(rollbacks)
 
 
 class CampaignInterrupted(Exception):
@@ -80,12 +124,35 @@ class CampaignSpec:
     drift_resample: bool = False
     #: per-algo solver overrides, e.g. {"fedavg": {"stepsize": 0.3}}
     overrides: Dict[str, Dict] = dataclasses.field(default_factory=dict)
+    #: fault model corrupting client deltas (None = honest fleet)
+    faults: Optional[FaultModel] = None
+    #: "none" | "rollback" | "clip" | "trimmed_mean" | "median" — anything
+    #: but "none" arms the divergence rollback rail; the last three also
+    #: install the matching EngineConfig.aggregator_guard in every cell
+    guard: str = "none"
+    guard_clip_norm: Optional[float] = None
+    guard_trim: float = 0.1
+    #: consecutive rollbacks tolerated before CampaignDiverged
+    max_rollbacks: int = 3
+    #: finite-but-exploding iterate threshold for the rail
+    explode_norm: float = 1e8
 
     def __post_init__(self):
         if self.model not in ("trace", "bernoulli", "full"):
             raise ValueError("model must be 'trace', 'bernoulli', or 'full'")
         if self.rounds < 1:
             raise ValueError("rounds must be >= 1")
+        if self.guard not in _GUARD_CHOICES:
+            raise ValueError(f"guard must be one of {_GUARD_CHOICES}")
+        if self.max_rollbacks < 1:
+            raise ValueError("max_rollbacks must be >= 1")
+        if self.explode_norm <= 0:
+            raise ValueError("explode_norm must be > 0")
+
+    def engine_guard(self) -> Optional[str]:
+        """The EngineConfig.aggregator_guard this spec installs (None for
+        "none"/"rollback" — the rail without robust aggregation)."""
+        return self.guard if self.guard in _ENGINE_GUARDS else None
 
     def participation_model(self):
         """(model_or_None, capacity_rate) for the engine: the model owns
@@ -134,36 +201,97 @@ def _make_solver_for(spec: CampaignSpec, algo: str, problem):
     model, rate = spec.participation_model()
     kw = dict(participation=rate, participation_model=model,
               client_chunk=spec.client_chunk, cohort=spec.cohort)
+    if spec.faults is not None:
+        kw["fault_model"] = spec.faults
+    eg = spec.engine_guard()
+    if eg is not None:
+        kw["aggregator_guard"] = eg
+        if eg == "clip":
+            if spec.guard_clip_norm is not None:
+                kw["guard_clip_norm"] = spec.guard_clip_norm
+        else:
+            kw["guard_trim"] = spec.guard_trim
     kw.update(spec.overrides.get(algo, {}))
     return make_solver(algo, problem, **kw)
 
 
-def _count_fn(model, offsets, sizes):
-    """jitted (key, r) -> (drawn, realized, stragglers) int32 counts,
-    recomputing exactly the masks the engine drew for that round — the
-    single source of randomness is shared, not duplicated."""
+def _count_fn(model, fmodel, offsets, sizes):
+    """jitted (key, r) -> (drawn, realized, stragglers, faults_injected,
+    poisoned) int32 counts, recomputing exactly the masks the engine drew
+    and the fault kinds it injected for that round — the single source of
+    randomness is shared, not duplicated."""
     total = int(sum(sizes))
-    if model is None:
-        return lambda key, r: (total, total, 0)
+    if model is None and fmodel is None:
+        return lambda key, r: (total, total, 0, 0, 0)
+    # global client ids per bucket, concatenated in bucket order — the same
+    # ids RoundEngine._bucket_ids assigns, so kinds() sees the engine's view
+    all_ids = (jnp.concatenate(
+        [jnp.uint32(o) + jnp.arange(int(s), dtype=jnp.uint32)
+         for o, s in zip(offsets, sizes)]) if fmodel is not None else None)
 
     @jax.jit
     def counts(key, r):
-        comp = model.mask_components(key, jnp.asarray(r, jnp.int32),
-                                     offsets, sizes)
+        r32 = jnp.asarray(r, jnp.int32)
+        comp = (model.mask_components(key, r32, offsets, sizes)
+                if model is not None else None)
         if comp is None:
-            t = jnp.int32(total)
-            return t, t, jnp.int32(0)
-        avail, returned = comp
-        drawn = sum(m.sum() for m in avail)
-        realized = sum(m.sum() for m in returned)
-        return (drawn.astype(jnp.int32), realized.astype(jnp.int32),
-                (drawn - realized).astype(jnp.int32))
+            drawn = realized = jnp.int32(total)
+            stragglers = jnp.int32(0)
+            ret = jnp.ones((total,), jnp.float32)
+        else:
+            avail, returned = comp
+            drawn = sum(m.sum() for m in avail).astype(jnp.int32)
+            realized = sum(m.sum() for m in returned).astype(jnp.int32)
+            stragglers = drawn - realized
+            ret = jnp.concatenate([m.astype(jnp.float32) for m in returned])
+        if fmodel is None:
+            injected = poisoned = jnp.int32(0)
+        else:
+            injected, poisoned = fault_counts(fmodel, r32, all_ids, ret)
+        return drawn, realized, stragglers, injected, poisoned
 
     def run(key, r):
-        d, re, s = counts(key, r)
-        return int(d), int(re), int(s)
+        d, re, s, i, p = counts(key, r)
+        return int(d), int(re), int(s), int(i), int(p)
 
     return run
+
+
+def _load_guard(path: str) -> Dict:
+    if os.path.exists(path):
+        with open(path) as f:
+            return json.load(f)
+    return {"quarantined": [], "consecutive": 0, "total": 0}
+
+
+def _save_guard(path: str, guard: Dict) -> None:
+    """Atomic write — the quarantine decision must survive a kill taken
+    at any instant between detection and the rolled-back re-run."""
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(guard, f, sort_keys=True)
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, path)
+
+
+class _QuarantinedSolver:
+    """Wraps a solver to *skip* quarantined rounds: the round counter
+    advances, the iterate and per-client aux state are untouched — the
+    round behaves as if every client was dropped.  The key schedule is
+    absolute-round-indexed, so skipping never shifts later rounds' keys."""
+
+    def __init__(self, solver, quarantined):
+        self._solver = solver
+        self._quarantined = frozenset(int(q) for q in quarantined)
+
+    def round(self, state, key):
+        if int(state.round) in self._quarantined:
+            return state.replace(round=state.round + 1)
+        return self._solver.round(state, key)
+
+    def __getattr__(self, name):
+        return getattr(self._solver, name)
 
 
 def run_cell(spec: CampaignSpec, algo: str, out_dir: str, log: EventLog,
@@ -173,11 +301,16 @@ def run_cell(spec: CampaignSpec, algo: str, out_dir: str, log: EventLog,
     ``budget`` is the cross-cell ``stop_after`` countdown:
     ``{"left": n}`` decrements per completed round and raises
     :class:`CampaignInterrupted` at zero.
-    Returns ``{"w": final iterate, "round": rounds}``.
+    Returns ``{"w": final iterate, "round": rounds}`` (plus the guard
+    tally when the rail is armed).
     """
-    from repro.core import Trainer
+    from repro.core import NonFiniteIterateError, Trainer
 
     ckpt_dir = os.path.join(out_dir, "cells", algo)
+    guard_path = os.path.join(ckpt_dir, "guard.json")
+    rail = spec.guard != "none"
+    guard = _load_guard(guard_path) if rail else _load_guard("")
+
     state = None
     if os.path.exists(os.path.join(ckpt_dir, "manifest.json")):
         state = Trainer.restore(ckpt_dir)
@@ -188,6 +321,8 @@ def run_cell(spec: CampaignSpec, algo: str, out_dir: str, log: EventLog,
     log.truncate(algo, start)
 
     model, _ = spec.participation_model()
+    rejects = spec.engine_guard() is not None
+    explode = float(spec.explode_norm)
     base = jax.random.PRNGKey(spec.seed)
     r = start
     while r < spec.rounds:
@@ -197,15 +332,23 @@ def run_cell(spec: CampaignSpec, algo: str, out_dir: str, log: EventLog,
         solver = _make_solver_for(spec, algo, problem)
         if state is None:
             state = solver.init(jnp.zeros(problem.d))
-        counts = _count_fn(model, solver.engine._offsets,
+        quarantined = frozenset(int(q) for q in guard["quarantined"])
+        run_solver = (_QuarantinedSolver(solver, quarantined)
+                      if rail and quarantined else solver)
+        counts = _count_fn(model, spec.faults, solver.engine._offsets,
                            solver.engine._sizes)
         loss = jax.jit(problem.flat.loss)
         err = jax.jit(test.error_rate)
         t_mark = [time.perf_counter()]
 
         def callback(st, rr, counts=counts, loss=loss, err=err,
-                     t_mark=t_mark):
-            drawn, realized, stragglers = counts(
+                     t_mark=t_mark, quarantined=quarantined):
+            # guard-rail explosion check *before* anything is logged, so a
+            # diverging round never leaves an event the rollback would have
+            # to claw back (the Trainer's NaN/Inf check fires even earlier)
+            if rail and not bool(jnp.linalg.norm(st.w) <= explode):
+                raise NonFiniteIterateError(algo, rr)
+            drawn, realized, stragglers, injected, poisoned = counts(
                 jax.random.fold_in(base, rr), rr)
             is_eval = ((rr + 1) % spec.eval_every == 0
                        or rr == spec.rounds - 1)
@@ -215,10 +358,17 @@ def run_cell(spec: CampaignSpec, algo: str, out_dir: str, log: EventLog,
             log.append(RoundEvent(
                 cell=algo, round=rr, drawn=drawn, realized=realized,
                 stragglers=stragglers, f=f_v, err=e_v,
+                faults_injected=injected,
+                clients_rejected=poisoned if rejects else 0,
+                rollbacks=1 if rr in quarantined else 0,
                 wall_s=now - t_mark[0], peak_rss_mb=peak_rss_mb()))
             t_mark[0] = now
             if verbose and (is_eval or stragglers):
                 msg = f"[{algo}] r{rr}: drawn={drawn} realized={realized}"
+                if injected:
+                    msg += f" faults={injected}"
+                if rr in quarantined:
+                    msg += " (quarantined)"
                 if f_v is not None:
                     msg += f" f={f_v:.5f} err={e_v:.4f}"
                 print(msg)
@@ -227,13 +377,49 @@ def run_cell(spec: CampaignSpec, algo: str, out_dir: str, log: EventLog,
                 if budget["left"] <= 0:
                     raise CampaignInterrupted(rr + 1)
 
-        trainer = Trainer(solver, rounds=seg_end, seed=spec.seed,
+        trainer = Trainer(run_solver, rounds=seg_end, seed=spec.seed,
                           callback=callback, checkpoint_dir=ckpt_dir,
                           checkpoint_every=spec.checkpoint_every)
-        res = trainer.fit(state=state)
+        try:
+            res = trainer.fit(state=state)
+        except NonFiniteIterateError as e:
+            if not rail:
+                raise
+            bad = int(e.round_index)
+            guard["quarantined"] = sorted(set(guard["quarantined"]) | {bad})
+            guard["consecutive"] += 1
+            guard["total"] += 1
+            # quarantine first, atomically: a kill after this point resumes
+            # with the round already condemned; a kill before it re-runs
+            # into the same deterministic divergence and condemns it again
+            _save_guard(guard_path, guard)
+            if verbose:
+                print(f"[{algo}] r{bad}: diverged — rolling back "
+                      f"(quarantined, {guard['total']} total)")
+            if guard["consecutive"] > spec.max_rollbacks:
+                raise CampaignDiverged(algo, bad, guard["total"]) from e
+            # roll back to the last atomic checkpoint (fresh init if the
+            # divergence predates the first save)
+            if os.path.exists(os.path.join(ckpt_dir, "manifest.json")):
+                state = Trainer.restore(ckpt_dir)
+                r = int(state.round)
+            else:
+                state = None
+                r = 0
+            log.truncate(algo, r)
+            continue
+        # a completed segment is progress: the consecutive streak resets
+        # (the total and the quarantine set are permanent record)
+        if rail and guard["consecutive"]:
+            guard["consecutive"] = 0
+            _save_guard(guard_path, guard)
         state = res.state
         r = seg_end
-    return {"w": state.w, "round": int(state.round)}
+    out = {"w": state.w, "round": int(state.round)}
+    if rail:
+        out["rollbacks"] = guard["total"]
+        out["quarantined"] = list(guard["quarantined"])
+    return out
 
 
 def run_campaign(spec: CampaignSpec, out_dir: str,

@@ -1,0 +1,236 @@
+"""Deterministic delta-corruption faults — what misbehaving clients send.
+
+The participation layer (:mod:`repro.fleet.participation`) simulates *who*
+shows up each round; this module simulates *what they send* going wrong.
+A :class:`FaultModel` corrupts the per-client deltas after the client pass
+and before aggregation — the wire, not the client: a faulted client's
+local auxiliary state (dual blocks, perturbation vectors) is whatever its
+pass computed, exactly as if the corruption happened in transit.
+
+The contract mirrors :class:`~repro.fleet.participation.ParticipationModel`
+and the PR-7/PR-8 seeding rules:
+
+  * every draw is a pure function of ``(seed, round_index, client_id)`` on
+    the model's own ``fold_in`` chain — disjoint from the solver, data,
+    and trace chains, so installing a fault model never perturbs which
+    clients are sampled or what their honest passes compute;
+  * per-client draws fold in the *global* client index, never a batch
+    position — the same clients are corrupted identically whether the
+    engine runs the plain, streamed, cohort, or virtual path (the
+    batch-shape invariance the engine parity tests pin);
+  * only batch-shape-stable uniform primitives — no ``normal`` (erfinv)
+    or rejection sampling, the bit-stability rule everything else in the
+    fleet follows.
+
+:class:`DeltaFaults` draws **one** uniform per (round, client) and
+partitions it into disjoint intervals, so each fault kind's rate is exact
+and at most one fault hits a client per round:
+
+  ====  ============  ====================================================
+  kind  knob          corruption of the returned delta δ
+  ====  ============  ====================================================
+  1     nan_rate      NaN / +Inf / −Inf poisoning (every coordinate)
+  2     sign_rate     sign flip: δ ← −δ
+  3     scale_rate    gradient-scaling attack: δ ← scale_factor · δ
+  4     replay_rate   stale-delta replay: δ ← v_k(⌊r / replay_window⌋)
+  ====  ============  ====================================================
+
+Stale replay is modeled as the strongest *pure-function* form of the
+fault: within each ``replay_window``-round window the client re-sends the
+same cached pseudo-delta ``v_k`` (a per-(client, window) uniform vector
+scaled by ``replay_scale``) every round — the repeated-bytes signature of
+a replay, without the cross-round state a literal resend would need (and
+which would break the kill-resume contract).
+
+Faults only fire for rounds in ``[start_round, stop_round)`` — campaign
+tests inject at a known round and assert the guard-rail's reaction.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.fleet.traces import _per_client_uniform
+
+# tags folded off PRNGKey(seed) — one sub-chain per draw family
+_KIND_TAG = 0     # per-(r, k) fault-kind selector uniform
+_POISON_TAG = 1   # per-(r, k) NaN / +Inf / -Inf selector
+_REPLAY_TAG = 2   # per-(window, k) replayed pseudo-delta
+
+#: fault-kind codes returned by :meth:`FaultModel.kinds`
+KIND_NONE, KIND_POISON, KIND_SIGN, KIND_SCALE, KIND_REPLAY = 0, 1, 2, 3, 4
+
+
+class FaultModel:
+    """Protocol base — subclasses override :meth:`kinds` and :meth:`apply`.
+
+    ``kinds(round_index, client_ids)`` returns an int32 fault-kind vector
+    (0 = honest) as a pure function of ``(seed, round_index, global id)``;
+    ``apply(deltas, round_index, client_ids)`` returns the corrupted
+    (K, d) delta block.  Both must be traceable and batch-shape invariant
+    so every engine round path corrupts the same clients identically.
+    """
+
+    #: fault draws are a function of the round by contract; the engine
+    #: rejects legacy round-less calls instead of silently faulting round 0
+    needs_round_index: bool = True
+
+    def kinds(self, round_index: jax.Array,
+              client_ids: jax.Array) -> jax.Array:
+        raise NotImplementedError
+
+    def apply(self, deltas: jax.Array, round_index: jax.Array,
+              client_ids: jax.Array) -> jax.Array:
+        raise NotImplementedError
+
+
+@dataclasses.dataclass(frozen=True)
+class DeltaFaults(FaultModel):
+    """The standard fault mix — see the module docstring for the kinds."""
+
+    seed: int = 0
+    nan_rate: float = 0.0      # NaN/Inf poisoning
+    sign_rate: float = 0.0     # sign-flip
+    scale_rate: float = 0.0    # gradient-scaling attack
+    scale_factor: float = 100.0
+    replay_rate: float = 0.0   # stale-delta replay
+    replay_window: int = 5     # rounds a replayed delta stays cached
+    replay_scale: float = 1.0  # magnitude of the replayed pseudo-delta
+    start_round: int = 0       # faults fire for start_round <= r ...
+    stop_round: Optional[int] = None   # ... < stop_round (None = forever)
+
+    def __post_init__(self):
+        for name in ("nan_rate", "sign_rate", "scale_rate", "replay_rate"):
+            v = getattr(self, name)
+            if not 0.0 <= v <= 1.0:
+                raise ValueError(f"{name} must be in [0, 1]")
+        if (self.nan_rate + self.sign_rate + self.scale_rate
+                + self.replay_rate) > 1.0:
+            raise ValueError("fault rates must sum to <= 1 (one uniform is "
+                             "partitioned into disjoint kind intervals)")
+        if self.replay_window < 1:
+            raise ValueError("replay_window must be >= 1")
+        if self.stop_round is not None and self.stop_round <= self.start_round:
+            raise ValueError("stop_round must be > start_round")
+
+    #: CLI spec knob -> field (shared by benchmarks/campaign.py --faults
+    #: and benchmarks/fig2_convergence.py --fault-model)
+    _SPEC_KEYS = {
+        "nan": "nan_rate", "sign": "sign_rate", "scale": "scale_rate",
+        "replay": "replay_rate", "scale-factor": "scale_factor",
+        "window": "replay_window", "start": "start_round",
+        "stop": "stop_round", "seed": "seed",
+    }
+    _INT_FIELDS = ("seed", "replay_window", "start_round", "stop_round")
+
+    @classmethod
+    def from_spec(cls, spec: str) -> "DeltaFaults":
+        """Parse a ``'nan=0.01,sign=0.05,start=10,stop=12'`` CLI spec."""
+        kw = {}
+        for part in spec.split(","):
+            k, _, v = part.partition("=")
+            if k not in cls._SPEC_KEYS:
+                raise ValueError(f"unknown fault knob {k!r} "
+                                 f"(known: {sorted(cls._SPEC_KEYS)})")
+            field = cls._SPEC_KEYS[k]
+            kw[field] = int(v) if field in cls._INT_FIELDS else float(v)
+        return cls(**kw)
+
+    def total_rate(self) -> float:
+        return (self.nan_rate + self.sign_rate + self.scale_rate
+                + self.replay_rate)
+
+    def _key(self):
+        return jax.random.PRNGKey(self.seed)
+
+    def _active(self, r: jax.Array) -> jax.Array:
+        on = r >= jnp.int32(self.start_round)
+        if self.stop_round is not None:
+            on = on & (r < jnp.int32(self.stop_round))
+        return on
+
+    def kinds(self, round_index, client_ids):
+        """int32 fault-kind per client for this round (0 = honest) — one
+        uniform per (r, k), partitioned into disjoint rate intervals so the
+        kinds are mutually exclusive and each rate is exact."""
+        r = jnp.asarray(round_index, jnp.int32)
+        client_ids = jnp.asarray(client_ids, jnp.uint32)
+        if self.total_rate() <= 0.0:
+            return jnp.zeros(client_ids.shape, jnp.int32)
+        u = _per_client_uniform(
+            jax.random.fold_in(jax.random.fold_in(self._key(), _KIND_TAG), r),
+            client_ids)
+        edges = jnp.cumsum(jnp.asarray(
+            [self.nan_rate, self.sign_rate, self.scale_rate,
+             self.replay_rate], jnp.float32))
+        kind = jnp.where(
+            u < edges[0], KIND_POISON,
+            jnp.where(u < edges[1], KIND_SIGN,
+                      jnp.where(u < edges[2], KIND_SCALE,
+                                jnp.where(u < edges[3], KIND_REPLAY,
+                                          KIND_NONE)))).astype(jnp.int32)
+        return jnp.where(self._active(r), kind, KIND_NONE)
+
+    def _poison_values(self, r, client_ids):
+        """Per-client poison payload: NaN, +Inf, or -Inf (uniform thirds)."""
+        u = _per_client_uniform(
+            jax.random.fold_in(jax.random.fold_in(self._key(), _POISON_TAG),
+                               r),
+            client_ids)
+        return jnp.where(u < 1.0 / 3.0, jnp.nan,
+                         jnp.where(u < 2.0 / 3.0, jnp.inf, -jnp.inf))
+
+    def _replay_deltas(self, r, client_ids, d: int, dtype):
+        """v_k(window) — the cached pseudo-delta a replaying client resends
+        every round of the window: per-(client, window) uniform in
+        [-replay_scale, replay_scale]^d, constant across the window."""
+        window = r // jnp.int32(self.replay_window)
+        key = jax.random.fold_in(
+            jax.random.fold_in(self._key(), _REPLAY_TAG), window)
+        return jax.vmap(
+            lambda c: jax.random.uniform(
+                jax.random.fold_in(key, c), (d,), dtype,
+                minval=-self.replay_scale, maxval=self.replay_scale)
+        )(client_ids)
+
+    def apply(self, deltas, round_index, client_ids):
+        r = jnp.asarray(round_index, jnp.int32)
+        client_ids = jnp.asarray(client_ids, jnp.uint32)
+        if self.total_rate() <= 0.0:
+            return deltas
+        kind = self.kinds(r, client_ids)[:, None]
+        out = jnp.where(kind == KIND_SIGN, -deltas, deltas)
+        out = jnp.where(kind == KIND_SCALE,
+                        jnp.asarray(self.scale_factor, deltas.dtype) * deltas,
+                        out)
+        if self.replay_rate > 0.0:
+            out = jnp.where(
+                kind == KIND_REPLAY,
+                self._replay_deltas(r, client_ids, deltas.shape[1],
+                                    deltas.dtype),
+                out)
+        if self.nan_rate > 0.0:
+            out = jnp.where(kind == KIND_POISON,
+                            self._poison_values(r, client_ids)[:, None]
+                            .astype(deltas.dtype),
+                            out)
+        return out
+
+
+def fault_counts(model: Optional[FaultModel], round_index, client_ids,
+                 returned_mask) -> jax.Array:
+    """(faults_injected, poisoned) over the *returned* clients — telemetry's
+    recomputable view of the round's corruption (a client that never
+    reports cannot deliver a corrupted delta).  ``poisoned`` counts the
+    non-finite kind specifically: exactly the deltas a non-finite-rejecting
+    aggregator guard would discard."""
+    if model is None:
+        return jnp.int32(0), jnp.int32(0)
+    kind = model.kinds(round_index, client_ids)
+    live = returned_mask > 0
+    injected = (live & (kind != KIND_NONE)).sum().astype(jnp.int32)
+    poisoned = (live & (kind == KIND_POISON)).sum().astype(jnp.int32)
+    return injected, poisoned

@@ -8,7 +8,12 @@ One line per (cell, round), appended as the campaign runs:
 
 ``drawn`` is the round's sampled cohort (availability mask), ``realized``
 the deltas that actually arrived (after stragglers), ``f``/``err`` are
-``null`` off eval rounds.  Every field except the ``TIMING_KEYS``
+``null`` off eval rounds.  Fault-tolerance fields (schema v2, all
+defaulting to 0 so pre-fault logs still load): ``faults_injected`` is the
+fault model's corrupted-delta count over returned clients,
+``clients_rejected`` the deltas a non-finite-rejecting aggregator guard
+discarded, and ``rollbacks`` flags a quarantined (rolled-back-and-skipped)
+round.  Every field except the ``TIMING_KEYS``
 (``wall_s``, ``peak_rss_mb``) is deterministic — a pure function of
 (config, seed, round) — which is what makes the kill-and-resume
 acceptance check meaningful: :func:`deterministic_view` strips the timing
@@ -43,6 +48,15 @@ class RoundEvent:
     stragglers: int
     f: Optional[float] = None
     err: Optional[float] = None
+    #: corrupted deltas delivered this round (fault model's recomputable
+    #: count over returned clients; 0 when no fault model is installed)
+    faults_injected: int = 0
+    #: deltas a non-finite-rejecting aggregator guard discarded
+    clients_rejected: int = 0
+    #: 1 when this round is quarantined (skipped after a guard-rail
+    #: rollback), 0 otherwise — deterministic because the quarantine set
+    #: is persisted in the cell's guard.json
+    rollbacks: int = 0
     wall_s: float = 0.0
     peak_rss_mb: float = 0.0
 
@@ -120,13 +134,18 @@ def summarize_events(events: List[Dict]) -> Dict[str, Dict]:
     for e in events:
         c = cells.setdefault(e["cell"], {
             "rounds": 0, "drawn_total": 0, "realized_total": 0,
-            "straggler_total": 0, "convergence": [],
+            "straggler_total": 0, "faults_injected_total": 0,
+            "clients_rejected_total": 0, "rollbacks": 0, "convergence": [],
             "wall_total_s": 0.0, "peak_rss_mb": 0.0,
         })
         c["rounds"] += 1
         c["drawn_total"] += e["drawn"]
         c["realized_total"] += e["realized"]
         c["straggler_total"] += e["stragglers"]
+        # .get(): pre-fault-tolerance logs have no fault/rollback fields
+        c["faults_injected_total"] += e.get("faults_injected", 0)
+        c["clients_rejected_total"] += e.get("clients_rejected", 0)
+        c["rollbacks"] += e.get("rollbacks", 0)
         c["wall_total_s"] += e.get("wall_s", 0.0)
         c["peak_rss_mb"] = max(c["peak_rss_mb"], e.get("peak_rss_mb", 0.0))
         if e.get("f") is not None:

@@ -56,4 +56,12 @@ python benchmarks/bench_round.py --smoke --virtual \
 python benchmarks/campaign.py --smoke \
     --out "${CAMPAIGN_SMOKE_DIR:-runs/campaign_smoke}" > /dev/null
 
+# Fault-injection smoke: a NaN-poisoning burst mid-campaign under the
+# rollback guard-rail — exits nonzero unless the rail records >= 1
+# rollback (quarantining the poisoned round) and the cell still converges
+# to a finite objective, so the fault-tolerance path is exercised on
+# every CI run.
+python benchmarks/campaign.py --fault-smoke \
+    --out "${CAMPAIGN_FAULT_SMOKE_DIR:-runs/campaign_fault_smoke}" > /dev/null
+
 exec python -m pytest -x -q "$@"

@@ -11,7 +11,15 @@ Contracts:
 3. Campaign resume — an interrupted + resumed campaign produces
    bit-identical final iterates and deterministic event views vs an
    uninterrupted run, including across a drift-epoch boundary.
+4. Payload checksums — a flipped byte in the arrays file raises
+   ChecksumError instead of restoring garbage; pre-v3 manifests without
+   the crc still restore.
+5. Guard-rails — a NaN-poisoning burst diverges an unguarded campaign;
+   the rollback rail quarantines exactly the poisoned round and still
+   converges; resume bit-identity holds *across* a rollback; persistent
+   faults abort with CampaignDiverged instead of looping forever.
 """
+import dataclasses
 import json
 import os
 
@@ -20,7 +28,9 @@ import pytest
 
 from repro import checkpoint
 from repro.checkpoint import checkpoint as ckpt_mod
-from repro.fleet import (CampaignSpec, EventLog, FleetTrace, RoundEvent,
+from repro.core import NonFiniteIterateError
+from repro.fleet import (CampaignDiverged, CampaignSpec, DeltaFaults,
+                         EventLog, FleetTrace, RoundEvent,
                          deterministic_view, run_campaign, summarize_events)
 
 
@@ -217,3 +227,140 @@ def test_campaign_summary_written_and_events_counted(tmp_path):
     assert cell["straggler_total"] == 0          # bernoulli: no stragglers
     assert len(cell["convergence"]) == 2
     assert summary["spec"]["model"] == "bernoulli"
+
+
+# --------------------------------------------------------------------- #
+# 4. payload checksums
+# --------------------------------------------------------------------- #
+
+
+def test_checkpoint_checksum_detects_corruption(tmp_path):
+    d = str(tmp_path / "ck")
+    checkpoint.save(d, _tree(1), step=1)
+    with open(os.path.join(d, "manifest.json")) as f:
+        manifest = json.load(f)
+    assert manifest["format_version"] == 3 and "payload_crc32" in manifest
+    path = os.path.join(d, manifest["arrays_file"])
+    with open(path, "rb") as f:
+        blob = bytearray(f.read())
+    blob[len(blob) // 2] ^= 0xFF
+    with open(path, "wb") as f:
+        f.write(bytes(blob))
+    with pytest.raises(checkpoint.ChecksumError, match="crc32"):
+        checkpoint.restore(d)
+
+
+def test_checkpoint_pre_v3_manifest_without_crc_restores(tmp_path):
+    """A v2 manifest (no payload_crc32) must restore unverified — old
+    checkpoints on disk stay readable after the upgrade."""
+    d = str(tmp_path / "ck")
+    checkpoint.save(d, _tree(4), step=4)
+    with open(os.path.join(d, "manifest.json")) as f:
+        manifest = json.load(f)
+    del manifest["payload_crc32"]
+    manifest["format_version"] = 2
+    with open(os.path.join(d, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    tree, info = checkpoint.restore(d)
+    assert info["step"] == 4
+    np.testing.assert_array_equal(tree["w"], _tree(4)["w"])
+
+
+# --------------------------------------------------------------------- #
+# 5. fault telemetry fields + guard-rails
+# --------------------------------------------------------------------- #
+
+
+def test_round_event_fault_fields_roundtrip_and_rollup():
+    e = RoundEvent(cell="a", round=0, drawn=5, realized=5, stragglers=0,
+                   faults_injected=3, clients_rejected=2, rollbacks=1,
+                   f=1.0, wall_s=0.1)
+    d = json.loads(e.to_json())
+    assert (d["faults_injected"], d["clients_rejected"],
+            d["rollbacks"]) == (3, 2, 1)
+    events = [d, json.loads(_ev("a", 1).to_json())]
+    s = summarize_events(events)["a"]
+    assert s["faults_injected_total"] == 3
+    assert s["clients_rejected_total"] == 2
+    assert s["rollbacks"] == 1
+
+
+def test_summarize_handles_pre_fault_schema():
+    """Event logs written before the fault fields existed still roll up."""
+    events = [json.loads(_ev("a", r).to_json()) for r in range(2)]
+    for e in events:
+        for k in ("faults_injected", "clients_rejected", "rollbacks"):
+            e.pop(k)
+    s = summarize_events(events)["a"]
+    assert s["faults_injected_total"] == 0 and s["rollbacks"] == 0
+
+
+# one cell, full participation, a NaN-poisoning burst at round 4 under the
+# rollback rail: deterministic, so every test below sees the same story
+FAULTY = CampaignSpec(
+    algos=("gd",), rounds=14, seed=0, scale=0.002, model="full",
+    eval_every=1, checkpoint_every=2,
+    faults=DeltaFaults(seed=1, nan_rate=0.35, start_round=4, stop_round=5),
+    guard="rollback")
+
+
+@pytest.mark.slow
+def test_campaign_unguarded_nan_faults_diverge(tmp_path):
+    spec = dataclasses.replace(FAULTY, guard="none")
+    with pytest.raises(NonFiniteIterateError):
+        run_campaign(spec, str(tmp_path / "c"), verbose=False)
+
+
+@pytest.mark.slow
+def test_campaign_rollback_rail_quarantines_and_converges(tmp_path):
+    """The rail quarantines exactly the poisoned round and the cell still
+    lands near the fault-free objective (it legitimately runs one fewer
+    effective round, hence the loose tolerance)."""
+    clean = dataclasses.replace(FAULTY, faults=None, guard="none")
+    s_ref = run_campaign(clean, str(tmp_path / "ref"), verbose=False)
+    s = run_campaign(FAULTY, str(tmp_path / "run"), verbose=False)
+    cell = s["cells"]["gd"]
+    assert cell["rollbacks"] >= 1
+    assert cell["faults_injected_total"] >= 1
+    ref_f = s_ref["cells"]["gd"]["final_f"]
+    assert np.isfinite(cell["final_f"])
+    assert abs(cell["final_f"] - ref_f) <= 0.1 * ref_f
+    with open(os.path.join(str(tmp_path / "run"), "cells", "gd",
+                           "guard.json")) as f:
+        guard = json.load(f)
+    assert guard["quarantined"] == [4] and guard["total"] >= 1
+
+
+@pytest.mark.slow
+def test_campaign_clip_guard_prevents_rollbacks(tmp_path):
+    """The engine-level clip guard rejects the poisoned deltas outright:
+    no divergence, no rollback, and the rejected clients are counted."""
+    spec = dataclasses.replace(FAULTY, guard="clip")
+    s = run_campaign(spec, str(tmp_path / "c"), verbose=False)
+    cell = s["cells"]["gd"]
+    assert cell["rollbacks"] == 0
+    assert cell["clients_rejected_total"] >= 1
+    assert np.isfinite(cell["final_f"])
+
+
+@pytest.mark.slow
+def test_campaign_resume_across_rollback_bit_identical(tmp_path):
+    """Kill the campaign after the rollback has fired; the resumed run
+    must replay the quarantine decision from guard.json and match the
+    uninterrupted run bit-for-bit."""
+    s_ref, s_run, ev_ref, ev_run = _run_pair(FAULTY, tmp_path, stop_after=7)
+    assert ev_ref == ev_run
+    np.testing.assert_array_equal(np.asarray(s_ref["finals"]["gd"]["w"]),
+                                  np.asarray(s_run["finals"]["gd"]["w"]))
+
+
+@pytest.mark.slow
+def test_campaign_persistent_faults_abort(tmp_path):
+    """Faults that never stop: quarantining cannot restore progress, so
+    the rail gives up with CampaignDiverged instead of looping forever."""
+    spec = dataclasses.replace(
+        FAULTY, rounds=8, max_rollbacks=1,
+        faults=DeltaFaults(seed=1, nan_rate=0.5, start_round=2))
+    with pytest.raises(CampaignDiverged) as ei:
+        run_campaign(spec, str(tmp_path / "c"), verbose=False)
+    assert ei.value.cell == "gd" and ei.value.rollbacks >= 2

@@ -20,6 +20,10 @@ Contracts:
    thread ``state.round`` into the compiled round (no retrace per round).
 6. Distribution drift (repro.data.synthetic.drifted_dataset): epoch 0 is
    the identity, epochs are deterministic, shapes are drift-invariant.
+7. Fault injection (repro.fleet.faults): fault draws follow the same
+   purity/batch-shape-invariance contract as the masks; every engine path
+   corrupts the same clients identically; NaN poisoning breaks an
+   unguarded round and every ``aggregator_guard`` restores a finite one.
 """
 import dataclasses
 
@@ -30,9 +34,9 @@ import pytest
 
 from repro.core import Trainer, make_solver
 from repro.core.engine import EngineConfig, RoundEngine
-from repro.fleet import (BernoulliParticipation, FixedParticipation,
-                         FleetTrace, TraceParticipation, availability_rate,
-                         fleet_masks)
+from repro.fleet import (BernoulliParticipation, DeltaFaults,
+                         FixedParticipation, FleetTrace, TraceParticipation,
+                         availability_rate, fault_counts, fleet_masks)
 
 TRACE = FleetTrace(seed=5, base=0.5, amplitude=0.3, period=7.0,
                    burst_prob=0.3, burst_frac=0.5, straggler_rate=0.25)
@@ -338,3 +342,221 @@ def test_drift_w_scale_only_relabels(small_virtual_dataset):
     dr = materialize_dataset(drifted_dataset(vds, 3, w_true_scale=0.5))
     np.testing.assert_array_equal(np.asarray(base.idx), np.asarray(dr.idx))
     np.testing.assert_array_equal(np.asarray(base.val), np.asarray(dr.val))
+
+
+# --------------------------------------------------------------------- #
+# 7. fault injection
+# --------------------------------------------------------------------- #
+
+# finite corruptions only (sign / scale / replay) — rounds stay comparable
+# across engine paths; NaN poisoning gets its own tests below
+FAULTS = DeltaFaults(seed=9, sign_rate=0.2, scale_rate=0.15,
+                     scale_factor=5.0, replay_rate=0.15, replay_window=2)
+NAN_FAULTS = DeltaFaults(seed=2, nan_rate=0.3)
+
+
+def test_fault_kinds_deterministic_and_jit_stable():
+    ids = jnp.arange(200, dtype=jnp.uint32)
+    for r in (0, 3):
+        k1 = FAULTS.kinds(r, ids)
+        k2 = jax.jit(FAULTS.kinds)(jnp.int32(r), ids)
+        np.testing.assert_array_equal(np.asarray(k1), np.asarray(k2))
+    # different rounds draw different fault sets
+    assert (np.asarray(FAULTS.kinds(0, ids))
+            != np.asarray(FAULTS.kinds(3, ids))).any()
+    # no nan_rate configured -> the poison kind never fires
+    assert 1 not in set(np.unique(np.asarray(FAULTS.kinds(1, ids))))
+
+
+def test_fault_kinds_batch_shape_invariant():
+    """A slice of the fleet's kinds == the kinds of the slice — the same
+    invariance the masks have, so chunk/cohort rounds corrupt the same
+    clients as the plain round."""
+    ids = jnp.arange(120, dtype=jnp.uint32)
+    whole = np.asarray(FAULTS.kinds(2, ids))
+    for lo, hi in ((0, 7), (7, 64), (64, 120)):
+        np.testing.assert_array_equal(
+            np.asarray(FAULTS.kinds(2, ids[lo:hi])), whole[lo:hi])
+
+
+def test_fault_apply_batch_shape_invariant():
+    ids = jnp.arange(50, dtype=jnp.uint32)
+    deltas = jax.random.normal(jax.random.PRNGKey(0), (50, 33))
+    whole = np.asarray(FAULTS.apply(deltas, 4, ids))
+    assert (whole != np.asarray(deltas)).any()
+    for lo, hi in ((0, 13), (13, 50)):
+        np.testing.assert_array_equal(
+            np.asarray(FAULTS.apply(deltas[lo:hi], 4, ids[lo:hi])),
+            whole[lo:hi])
+
+
+def test_fault_window_gating():
+    f = dataclasses.replace(FAULTS, start_round=3, stop_round=5)
+    ids = jnp.arange(100, dtype=jnp.uint32)
+    assert not np.asarray(f.kinds(2, ids)).any()
+    assert np.asarray(f.kinds(3, ids)).any()
+    assert not np.asarray(f.kinds(5, ids)).any()
+    # inside the window the draws match the ungated model bit-for-bit
+    np.testing.assert_array_equal(np.asarray(f.kinds(4, ids)),
+                                  np.asarray(FAULTS.kinds(4, ids)))
+
+
+def test_fault_validation():
+    with pytest.raises(ValueError, match="sum"):
+        DeltaFaults(nan_rate=0.6, sign_rate=0.6)
+    with pytest.raises(ValueError, match="nan_rate"):
+        DeltaFaults(nan_rate=1.5)
+    with pytest.raises(ValueError, match="replay_window"):
+        DeltaFaults(replay_window=0)
+    with pytest.raises(ValueError, match="stop_round"):
+        DeltaFaults(start_round=4, stop_round=4)
+
+
+def test_fault_spec_round_trip():
+    f = DeltaFaults.from_spec("nan=0.01,sign=0.05,scale-factor=7,"
+                              "start=3,stop=9,seed=2")
+    assert f == DeltaFaults(seed=2, nan_rate=0.01, sign_rate=0.05,
+                            scale_factor=7.0, start_round=3, stop_round=9)
+    with pytest.raises(ValueError, match="knob"):
+        DeltaFaults.from_spec("nans=0.1")
+
+
+def test_fault_counts_matches_kinds():
+    """fault_counts is telemetry's recomputable view: it must agree with
+    counting the kinds over the returned clients directly, and a client
+    that never reports is never counted."""
+    f = DeltaFaults(seed=7, nan_rate=0.2, sign_rate=0.2)
+    ids = jnp.arange(64, dtype=jnp.uint32)
+    mask = (ids % 3 != 0).astype(jnp.float32)    # the returned-weight view
+    inj, poi = fault_counts(f, 1, ids, mask)
+    k = np.asarray(f.kinds(1, ids))
+    live = np.asarray(mask) > 0
+    assert int(inj) == int((live & (k != 0)).sum()) > 0
+    assert int(poi) == int((live & (k == 1)).sum()) > 0
+    inj0, poi0 = fault_counts(None, 1, ids, mask)
+    assert int(inj0) == 0 and int(poi0) == 0
+
+
+@pytest.mark.parametrize("r", [0, 4])
+def test_faulted_round_paths_parity(small_problem, r):
+    """One fault model, three engine paths: plain, streamed, and cohort
+    rounds corrupt the same clients identically (global-id draws, not
+    batch positions), to the same tolerance as the honest parity test —
+    and the faults demonstrably changed the round."""
+    prob = small_problem
+    model = TraceParticipation(TRACE)
+    kw = dict(participation=TRACE.max_rate())
+    eng = RoundEngine(prob, EngineConfig(**kw), participation_model=model,
+                      fault_model=FAULTS)
+    eng_ch = RoundEngine(prob, EngineConfig(client_chunk=3, **kw),
+                         participation_model=model, fault_model=FAULTS)
+    eng_co = RoundEngine(prob, EngineConfig(cohort=6, **kw),
+                         participation_model=model, fault_model=FAULTS)
+    client_pass, chunk_pass = _passes()
+    w = jax.random.normal(jax.random.PRNGKey(1), (prob.d,)) * 0.1
+    key = jax.random.PRNGKey(70 + r)
+    out = eng.round(w, key, client_pass, round_index=r)
+    out_ch = eng_ch.round_streamed(w, key, chunk_pass, round_index=r)
+    out_co = eng_co.round_cohort(w, key, chunk_pass, round_index=r)
+    np.testing.assert_allclose(np.asarray(out_ch), np.asarray(out),
+                               rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(out_co), np.asarray(out),
+                               rtol=1e-5, atol=1e-6)
+    honest = RoundEngine(prob, EngineConfig(**kw),
+                         participation_model=model)
+    out_h = honest.round(w, key, client_pass, round_index=r)
+    assert (np.asarray(out) != np.asarray(out_h)).any()
+
+
+def test_zero_rate_fault_model_is_identity(small_problem):
+    """Installing an all-zero-rate fault model changes nothing, down to
+    the last bit — the no-faults analogue of the Bernoulli pin."""
+    prob = small_problem
+    client_pass, chunk_pass = _passes()
+    w = jnp.zeros(prob.d)
+    key = jax.random.PRNGKey(7)
+    f0 = DeltaFaults(seed=3)
+    eng = RoundEngine(prob, EngineConfig(participation=0.5))
+    eng_f = RoundEngine(prob, EngineConfig(participation=0.5),
+                        fault_model=f0)
+    np.testing.assert_array_equal(
+        np.asarray(eng.round(w, key, client_pass, round_index=0)),
+        np.asarray(eng_f.round(w, key, client_pass, round_index=0)))
+    eng_ch = RoundEngine(prob, EngineConfig(participation=0.5,
+                                            client_chunk=3))
+    eng_chf = RoundEngine(prob, EngineConfig(participation=0.5,
+                                             client_chunk=3),
+                          fault_model=f0)
+    np.testing.assert_array_equal(
+        np.asarray(eng_ch.round_streamed(w, key, chunk_pass,
+                                         round_index=0)),
+        np.asarray(eng_chf.round_streamed(w, key, chunk_pass,
+                                          round_index=0)))
+
+
+def test_fault_model_requires_round_index(small_problem):
+    eng = RoundEngine(small_problem, EngineConfig(participation=0.8),
+                      fault_model=FAULTS)
+    client_pass, _ = _passes()
+    with pytest.raises(ValueError, match="fault"):
+        eng.round(jnp.zeros(small_problem.d), jax.random.PRNGKey(0),
+                  client_pass)
+
+
+def test_nan_faults_break_unguarded_round_and_every_guard_recovers(
+        small_problem):
+    """NaN poisoning propagates through the unguarded weighted sum; each
+    aggregator_guard arm ("clip" rejection, trimmed mean, median) yields a
+    finite round from the same poisoned deltas, and the streamed clip
+    round matches the plain clip round."""
+    prob = small_problem
+    client_pass, chunk_pass = _passes()
+    w = jnp.zeros(prob.d)
+    key = jax.random.PRNGKey(11)
+    out = RoundEngine(prob, EngineConfig(), fault_model=NAN_FAULTS).round(
+        w, key, client_pass, round_index=0)
+    assert not bool(jnp.isfinite(out).all())
+    guarded = {}
+    for g in ("clip", "trimmed_mean", "median"):
+        out_g = RoundEngine(prob, EngineConfig(aggregator_guard=g),
+                            fault_model=NAN_FAULTS).round(
+            w, key, client_pass, round_index=0)
+        assert bool(jnp.isfinite(out_g).all()), g
+        guarded[g] = np.asarray(out_g)
+    out_ch = RoundEngine(prob, EngineConfig(aggregator_guard="clip",
+                                            client_chunk=3),
+                         fault_model=NAN_FAULTS).round_streamed(
+        w, key, chunk_pass, round_index=0)
+    np.testing.assert_allclose(np.asarray(out_ch), guarded["clip"],
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_guard_clip_rejects_nonfinite_and_caps_norms(small_problem):
+    eng = RoundEngine(small_problem,
+                      EngineConfig(aggregator_guard="clip",
+                                   guard_clip_norm=0.5))
+    d = small_problem.d
+    big = jnp.ones((d,))                      # ||big|| = sqrt(d) >> 0.5
+    small = jnp.full((d,), 1e-3 / np.sqrt(d))
+    deltas = jnp.stack([jnp.full((d,), jnp.nan), big, small])
+    safe = np.asarray(eng._guard_clip(deltas))
+    np.testing.assert_array_equal(safe[0], np.zeros(d))
+    assert np.linalg.norm(safe[1]) == pytest.approx(0.5, rel=1e-5)
+    np.testing.assert_allclose(safe[2], np.asarray(small), rtol=1e-6)
+
+
+def test_guard_config_validation():
+    with pytest.raises(ValueError, match="aggregator_guard"):
+        EngineConfig(aggregator_guard="mean")
+    with pytest.raises(ValueError, match="client_chunk"):
+        EngineConfig(aggregator_guard="trimmed_mean", client_chunk=4)
+    with pytest.raises(ValueError, match="virtual"):
+        EngineConfig(aggregator_guard="median", virtual_data=True)
+    with pytest.raises(ValueError, match="sum"):
+        EngineConfig(aggregator_guard="median", weighting="sum")
+    with pytest.raises(ValueError, match="guard_trim"):
+        EngineConfig(aggregator_guard="trimmed_mean", guard_trim=0.5)
+    with pytest.raises(ValueError, match="guard_clip_norm"):
+        EngineConfig(aggregator_guard="clip", guard_clip_norm=0.0)
+    with pytest.raises(ValueError, match="clip"):
+        EngineConfig(guard_clip_norm=1.0)

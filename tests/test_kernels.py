@@ -82,6 +82,27 @@ def test_scaled_aggregate_block_shapes(k_block, d_block):
                                rtol=1e-5, atol=1e-6)
 
 
+@pytest.mark.slow
+@settings(deadline=None, max_examples=20)
+@given(
+    K=st.integers(1, 24),
+    d=st.integers(1, 3000),
+    seed=st.integers(0, 2**30),
+    mode=st.sampled_from(["trimmed_mean", "median"]),
+    trim=st.floats(0.0, 0.49),
+)
+def test_robust_aggregate_matches_ref(K, d, seed, mode, trim):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 4)
+    wt = jax.random.normal(ks[0], (d,))
+    deltas = jax.random.normal(ks[1], (K, d))
+    valid = jax.random.bernoulli(ks[2], 0.7, (K,))
+    a = jnp.abs(jax.random.normal(ks[3], (d,))) + 0.5
+    out_k = ops.robust_aggregate(wt, deltas, valid, a, trim, mode)
+    out_r = ref.robust_aggregate_ref(wt, deltas, valid, a, trim, mode)
+    np.testing.assert_allclose(np.asarray(out_k), np.asarray(out_r),
+                               rtol=1e-5, atol=1e-5)
+
+
 def test_kernel_equals_fsvrg_inner_loop_semantics():
     """The fused kernel is exactly Alg. 4 line 8 for one step."""
     d = 257

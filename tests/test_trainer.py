@@ -19,8 +19,9 @@ import numpy as np
 import pytest
 
 import _oracles
-from repro.core import (SolverState, Trainer, available, build_dense_problem,
-                        get_spec, make_solver, sweep)
+from repro.core import (NonFiniteIterateError, SolverState, Trainer,
+                        available, build_dense_problem, get_spec, make_solver,
+                        sweep)
 
 
 def _eval(prob):
@@ -341,3 +342,48 @@ def test_eval_every_sweep_still_picks_best(tiny_problem):
                           eval_every=2)
     assert best_s == best_d
     assert res_s.history[-1] == res_d.history[-1]
+
+
+# --------------------------------------------------------------------- #
+# fail-fast on non-finite iterates
+# --------------------------------------------------------------------- #
+
+
+class _DivergeAt:
+    """Protocol-minimal solver whose iterate goes NaN at a given round —
+    traceable, so it drives both the eager loop and the scan path."""
+
+    name = "diverge-stub"
+    hyperparams = {}
+
+    def __init__(self, bad_round):
+        self.bad_round = bad_round
+
+    def init(self, w0=None):
+        w = jnp.zeros(3) if w0 is None else w0
+        return SolverState(w=w, aux=(), round=jnp.asarray(0, jnp.int32))
+
+    def round(self, state, key):
+        bad = state.round == self.bad_round
+        w = jnp.where(bad, jnp.full_like(state.w, jnp.nan), state.w + 1.0)
+        return SolverState(w=w, aux=(), round=state.round + 1)
+
+
+def test_fail_fast_raises_the_round_the_iterate_goes_nan():
+    """The error names the solver and the exact round — what the campaign
+    guard-rail quarantines."""
+    with pytest.raises(NonFiniteIterateError) as ei:
+        Trainer(_DivergeAt(2), rounds=5, seed=0).fit()
+    assert ei.value.solver_name == "diverge-stub"
+    assert ei.value.round_index == 2
+
+
+def test_fail_fast_off_lets_the_run_finish():
+    res = Trainer(_DivergeAt(2), rounds=5, seed=0, fail_fast=False).fit()
+    assert int(res.state.round) == 5
+    assert not bool(jnp.isfinite(res.w).all())
+
+
+def test_fail_fast_scan_path_checks_final_iterate():
+    with pytest.raises(NonFiniteIterateError):
+        Trainer(_DivergeAt(3), rounds=5, seed=0, scan=True).fit()
