@@ -27,7 +27,6 @@ scale.
 from __future__ import annotations
 
 import argparse
-import dataclasses
 import json
 import os
 import shutil

@@ -25,7 +25,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs import (get_cocoa_config, get_dane_config,
+from repro.configs import (get_dane_config,
                            get_fedavg_config, get_fsvrg_config,
                            get_gd_config, get_logreg_config)
 from repro.core import (Trainer, build_problem, build_test_problem,

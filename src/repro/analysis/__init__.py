@@ -1,0 +1,35 @@
+"""fedlint — repo-specific static analysis for the federated-optimization repo.
+
+``python -m repro.analysis src benchmarks tests`` walks the given trees,
+parses every ``.py`` file with the stdlib :mod:`ast` module (no runtime
+dependencies beyond the standard library), and runs the FED rule registry
+over them:
+
+  ======  ==========================================================
+  rule    contract it machine-checks
+  ======  ==========================================================
+  FED001  bit-stable RNG primitives only in data/ and fleet traces/faults
+  FED002  PRNG key discipline (no reuse after consumption, no raw-key
+          sampling outside the absolute-round schedule)
+  FED003  every Pallas kernel has a ref.py oracle, an ops.py
+          registration, and a parity test
+  FED004  every EngineConfig field is threaded through all round paths
+          or explicitly validated/rejected
+  FED005  no tracer-leak hazards (Python control flow on traced values)
+          inside jitted bodies
+  ======  ==========================================================
+
+Findings are suppressed per line with ``# fedlint: disable=FED00x -- reason``
+(the reason is mandatory; a bare disable is itself a finding, FED000).
+See ``docs/ARCHITECTURE.md`` ("Static contracts") for the full story.
+"""
+from repro.analysis.core import (  # noqa: F401  (public API re-exports)
+    Finding,
+    RepoContext,
+    Rule,
+    RULES,
+    load_baseline,
+    run_paths,
+    rule,
+)
+from repro.analysis import rules as _rules  # noqa: F401  (registers FED rules)

@@ -1,0 +1,91 @@
+"""``python -m repro.analysis [paths...]`` — run the fedlint pass.
+
+Exit status: 0 when no active findings, 1 when there are, 2 on usage
+errors.  ``--json`` writes the machine-readable report (uploaded as a CI
+artifact by tier1.yml); ``--update-baseline`` grandfathers the current
+findings into ``fedlint_baseline.json`` so a new rule can land without
+blocking on pre-existing debt.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from typing import List
+
+from repro.analysis.core import (
+    BASELINE_DEFAULT,
+    RULES,
+    load_baseline,
+    run_paths,
+    write_baseline,
+)
+
+DEFAULT_PATHS = ("src", "benchmarks", "tests")
+
+
+def main(argv: List[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="fedlint: repo-specific static analysis (FED001-FED005)")
+    ap.add_argument("paths", nargs="*", default=None,
+                    help=f"files/directories to scan "
+                         f"(default: {' '.join(DEFAULT_PATHS)})")
+    ap.add_argument("--json", metavar="FILE", dest="json_out",
+                    help="write the full JSON report to FILE ('-' = stdout)")
+    ap.add_argument("--baseline", metavar="FILE", default=BASELINE_DEFAULT,
+                    help="baseline file to read (default: %(default)s)")
+    ap.add_argument("--no-baseline", action="store_true",
+                    help="ignore any baseline file")
+    ap.add_argument("--update-baseline", action="store_true",
+                    help="write current findings to the baseline and exit 0")
+    ap.add_argument("--list-rules", action="store_true",
+                    help="list registered rules and exit")
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        for rid in sorted(RULES):
+            print(f"{rid}  {RULES[rid].title}")
+        return 0
+
+    paths = args.paths or [p for p in DEFAULT_PATHS if os.path.exists(p)]
+    missing = [p for p in paths if not os.path.exists(p)]
+    if missing:
+        print(f"fedlint: no such path: {', '.join(missing)}", file=sys.stderr)
+        return 2
+
+    baseline = set() if (args.no_baseline or args.update_baseline) \
+        else load_baseline(args.baseline)
+    report = run_paths(paths, baseline)
+
+    if args.update_baseline:
+        write_baseline(args.baseline, report.active)
+        print(f"fedlint: wrote {len(report.active)} fingerprint(s) to "
+              f"{args.baseline}")
+        return 0
+
+    # With `--json -` stdout IS the JSON document; human-readable lines
+    # move to stderr so the output stays parseable.
+    json_on_stdout = args.json_out == "-"
+    if args.json_out:
+        payload = json.dumps(report.to_json(paths), indent=2, sort_keys=True)
+        if json_on_stdout:
+            print(payload)
+        else:
+            with open(args.json_out, "w", encoding="utf-8") as fh:
+                fh.write(payload + "\n")
+
+    human = sys.stderr if json_on_stdout else sys.stdout
+    for f in report.active:
+        print(f.render(), file=human)
+    tail = (f"fedlint: {len(report.active)} finding(s) "
+            f"({len(report.suppressed)} suppressed, "
+            f"{len(report.baselined)} baselined) "
+            f"across {report.n_files} file(s)")
+    print(tail, file=sys.stderr if report.failed else human)
+    return 1 if report.failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

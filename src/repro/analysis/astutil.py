@@ -1,0 +1,149 @@
+"""Shared AST helpers: jax.random name resolution, jit-decorator detection.
+
+The rules need to answer "is this Call a jax.random sampler?" robustly
+across the import spellings the repo actually uses (``import jax``,
+``import jax.random as jr``, ``from jax import random``,
+``from jax.random import fold_in``).  :class:`RandomNames` builds the
+per-module alias map once from the import statements and then classifies
+call nodes.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List, Optional, Set, Tuple
+
+#: jax.random attributes that are *not* samplers (key plumbing)
+KEY_PLUMBING = {
+    "PRNGKey", "key", "split", "fold_in", "wrap_key_data", "key_data",
+    "clone", "key_impl", "default_prng_impl",
+}
+
+#: samplers whose implementation is not bit-stable under batch reshaping:
+#: erfinv-based (the normal family and everything built on it) or
+#: rejection sampling (the gamma family and discrete rejection samplers).
+#: Inversion samplers (uniform, gumbel, exponential, logistic, cauchy,
+#: rayleigh, ...) are fine and deliberately absent — the FED001 forbidden set.
+BIT_UNSTABLE = {
+    # erfinv / normal-derived
+    "normal", "multivariate_normal", "truncated_normal", "lognormal",
+    "wald", "maxwell", "double_sided_maxwell", "generalized_normal",
+    "orthogonal", "ball",
+    # rejection sampling / gamma-derived
+    "gamma", "loggamma", "beta", "dirichlet", "chisquare", "f", "t",
+    "poisson", "binomial",
+}
+
+
+class RandomNames:
+    """Classifies names/calls in one module against ``jax.random``."""
+
+    def __init__(self, tree: ast.AST):
+        self.module_aliases: Set[str] = set()   # names bound to jax.random
+        self.jax_aliases: Set[str] = {"jax"}    # names bound to jax itself
+        self.member_aliases = {}                # local name -> jax.random member
+        for node in ast.walk(tree):
+            if isinstance(node, ast.Import):
+                for a in node.names:
+                    if a.name == "jax":
+                        self.jax_aliases.add(a.asname or "jax")
+                    elif a.name == "jax.random":
+                        self.module_aliases.add(a.asname or "jax")
+                        if a.asname:
+                            self.module_aliases.add(a.asname)
+            elif isinstance(node, ast.ImportFrom):
+                if node.module == "jax":
+                    for a in node.names:
+                        if a.name == "random":
+                            self.module_aliases.add(a.asname or "random")
+                elif node.module == "jax.random":
+                    for a in node.names:
+                        self.member_aliases[a.asname or a.name] = a.name
+
+    def member_of_call(self, call: ast.Call) -> Optional[str]:
+        """``'uniform'`` if this call targets ``jax.random.uniform`` etc."""
+        return self.member_of(call.func)
+
+    def member_of(self, func: ast.expr) -> Optional[str]:
+        if isinstance(func, ast.Name):
+            return self.member_aliases.get(func.id)
+        if not isinstance(func, ast.Attribute):
+            return None
+        val = func.value
+        # jr.uniform / random.uniform
+        if isinstance(val, ast.Name) and val.id in self.module_aliases:
+            return func.attr
+        # jax.random.uniform
+        if (isinstance(val, ast.Attribute) and val.attr == "random"
+                and isinstance(val.value, ast.Name)
+                and val.value.id in self.jax_aliases):
+            return func.attr
+        return None
+
+    def is_sampler(self, member: Optional[str]) -> bool:
+        return member is not None and member not in KEY_PLUMBING
+
+
+def iter_functions(tree: ast.AST) -> List[ast.AST]:
+    """Every FunctionDef/AsyncFunctionDef in the tree (any nesting)."""
+    return [n for n in ast.walk(tree)
+            if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))]
+
+
+def _is_jit_name(node: ast.expr) -> bool:
+    """``jax.jit`` / ``jit`` (imported from jax) / ``pl.when``-free check."""
+    if isinstance(node, ast.Name):
+        return node.id == "jit"
+    return (isinstance(node, ast.Attribute) and node.attr == "jit"
+            and isinstance(node.value, ast.Name) and node.value.id == "jax")
+
+
+def jit_static_names(fn: ast.AST) -> Optional[Tuple[str, ...]]:
+    """``None`` if ``fn`` is not jit-decorated, else its static_argnames.
+
+    Recognized decorator spellings (all used in this repo)::
+
+        @jax.jit
+        @jit
+        @functools.partial(jax.jit, static_argnames=("m", "interpret"))
+        @partial(jax.jit, donate_argnums=(0,))
+        @jax.jit_or_other(...)        # NOT matched
+    """
+    for dec in getattr(fn, "decorator_list", []):
+        if _is_jit_name(dec):
+            return ()
+        if isinstance(dec, ast.Call):
+            # functools.partial(jax.jit, ...) / partial(jax.jit, ...)
+            is_partial = (
+                (isinstance(dec.func, ast.Name) and dec.func.id == "partial")
+                or (isinstance(dec.func, ast.Attribute)
+                    and dec.func.attr == "partial"))
+            if is_partial and dec.args and _is_jit_name(dec.args[0]):
+                return _static_from_keywords(dec.keywords)
+            # @jax.jit(static_argnames=...)
+            if _is_jit_name(dec.func):
+                return _static_from_keywords(dec.keywords)
+    return None
+
+
+def _static_from_keywords(keywords) -> Tuple[str, ...]:
+    names: List[str] = []
+    for kw in keywords:
+        if kw.arg in ("static_argnames", "static_argnums"):
+            v = kw.value
+            if isinstance(v, ast.Constant) and isinstance(v.value, str):
+                names.append(v.value)
+            elif isinstance(v, (ast.Tuple, ast.List)):
+                for el in v.elts:
+                    if isinstance(el, ast.Constant) and isinstance(el.value, str):
+                        names.append(el.value)
+    return tuple(names)
+
+
+def arg_names(fn: ast.AST) -> List[str]:
+    a = fn.args
+    names = [x.arg for x in a.posonlyargs + a.args + a.kwonlyargs]
+    if a.vararg:
+        names.append(a.vararg.arg)
+    if a.kwarg:
+        names.append(a.kwarg.arg)
+    return names

@@ -1,0 +1,293 @@
+"""fedlint core: file collection, rule registry, suppressions, reports.
+
+The engine is deliberately tiny and stdlib-only.  A *rule* is a function
+``check(ctx) -> list[Finding]`` over a :class:`RepoContext` (every parsed
+file in the scan), registered with the :func:`rule` decorator.  Rules see
+the whole context so cross-module rules (FED003's kernel/oracle/test
+triangle, FED004's engine call graph) are first-class, not bolted on.
+
+Suppressions are per line and must carry a reason::
+
+    u = jax.random.uniform(key, (n,))  # fedlint: disable=FED002 -- seeded once at process start
+
+A trailing ``# fedlint: disable=...`` applies to its own line; a comment
+that is the whole line applies to the next line.  A disable without a
+``-- reason`` does not suppress anything and is reported as FED000 — the
+point of the pass is that every exception to a contract is explained.
+
+Baselines: ``--update-baseline`` snapshots the current findings'
+fingerprints (rule + path + message, line-number free so pure code motion
+doesn't churn the file) into ``fedlint_baseline.json``; later runs
+subtract them, so a new rule can land with known debt grandfathered
+instead of blocking the PR that introduces it.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import io
+import json
+import os
+import re
+import tokenize
+from typing import Callable, Dict, List, Optional, Tuple
+
+BASELINE_DEFAULT = "fedlint_baseline.json"
+
+_SKIP_DIRS = {"__pycache__", ".git", ".ruff_cache", ".pytest_cache", "node_modules"}
+
+_SUPPRESS_RE = re.compile(
+    r"#\s*fedlint:\s*disable=([A-Za-z0-9_,\s]+?)(?:\s+--\s*(\S.*?))?\s*$"
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One rule violation, anchored to a file/line."""
+
+    rule: str
+    path: str
+    line: int
+    message: str
+
+    @property
+    def fingerprint(self) -> str:
+        # line-free so code motion above a finding doesn't churn baselines
+        return f"{self.rule}:{self.path}:{self.message}"
+
+    def render(self) -> str:
+        return f"{self.path}:{self.line}: {self.rule} {self.message}"
+
+
+@dataclasses.dataclass(frozen=True)
+class Rule:
+    id: str
+    title: str
+    check: Callable[["RepoContext"], List[Finding]]
+
+
+#: rule id -> Rule; populated at import time by the @rule decorator
+RULES: Dict[str, Rule] = {}
+
+
+def rule(rule_id: str, title: str):
+    """Register ``check(ctx) -> list[Finding]`` under ``rule_id``."""
+
+    def deco(fn):
+        if rule_id in RULES:
+            raise ValueError(f"duplicate rule id {rule_id!r}")
+        RULES[rule_id] = Rule(rule_id, title, fn)
+        return fn
+
+    return deco
+
+
+@dataclasses.dataclass
+class SourceFile:
+    path: str                 # normalized, '/'-separated, as given on the CLI
+    source: str
+    tree: Optional[ast.AST]   # None when the file does not parse
+    lines: List[str]
+
+    @property
+    def is_test(self) -> bool:
+        parts = self.path.split("/")
+        return "tests" in parts or parts[-1].startswith("test_")
+
+
+class RepoContext:
+    """Every parsed file in the scan, keyed by normalized relative path."""
+
+    def __init__(self, files: Dict[str, SourceFile]):
+        self.files = files
+
+    def matching(self, fragment: str) -> List[SourceFile]:
+        """Files whose path contains ``fragment`` (posix form)."""
+        return [f for p, f in sorted(self.files.items()) if fragment in p]
+
+    def single(self, suffix: str) -> Optional[SourceFile]:
+        hits = [f for p, f in sorted(self.files.items()) if p.endswith(suffix)]
+        return hits[0] if hits else None
+
+
+def _norm(path: str) -> str:
+    return path.replace(os.sep, "/")
+
+
+def collect_files(paths: List[str]) -> Dict[str, SourceFile]:
+    out: Dict[str, SourceFile] = {}
+    for root in paths:
+        if os.path.isfile(root):
+            if root.endswith(".py"):
+                _load(out, root)
+            continue
+        for dirpath, dirnames, filenames in os.walk(root):
+            dirnames[:] = sorted(d for d in dirnames
+                                 if d not in _SKIP_DIRS and not d.startswith("."))
+            for name in sorted(filenames):
+                if name.endswith(".py"):
+                    _load(out, os.path.join(dirpath, name))
+    return out
+
+
+def _load(out: Dict[str, SourceFile], path: str) -> None:
+    norm = _norm(path)
+    with open(path, "r", encoding="utf-8") as fh:
+        source = fh.read()
+    try:
+        tree = ast.parse(source, filename=path)
+    except SyntaxError:
+        tree = None
+    out[norm] = SourceFile(norm, source, tree, source.splitlines())
+
+
+# ---------------------------------------------------------------------------
+# suppressions
+
+
+@dataclasses.dataclass(frozen=True)
+class Suppression:
+    line: int          # line the disable comment sits on
+    codes: Tuple[str, ...]
+    reason: Optional[str]
+    applies_to: int    # line the suppression covers
+
+
+def parse_suppressions(sf: SourceFile) -> List[Suppression]:
+    """Real COMMENT tokens only — disables quoted in docstrings don't count."""
+    sups: List[Suppression] = []
+    try:
+        tokens = list(tokenize.generate_tokens(io.StringIO(sf.source).readline))
+    except (tokenize.TokenError, IndentationError, SyntaxError):
+        return sups
+    for tok in tokens:
+        if tok.type != tokenize.COMMENT:
+            continue
+        m = _SUPPRESS_RE.search(tok.string)
+        if not m:
+            continue
+        codes = tuple(c.strip().upper()
+                      for c in m.group(1).split(",") if c.strip())
+        reason = m.group(2)
+        i = tok.start[0]
+        # a comment-only line shields the next line; trailing comments
+        # shield their own line
+        own_line = tok.start[1] > 0 and bool(sf.lines[i - 1][:tok.start[1]].strip())
+        sups.append(Suppression(i, codes, reason, i if own_line else i + 1))
+    return sups
+
+
+def apply_suppressions(
+    ctx: RepoContext, findings: List[Finding]
+) -> Tuple[List[Finding], List[Finding]]:
+    """Split findings into (active, suppressed); bad disables become FED000."""
+    by_file: Dict[str, List[Suppression]] = {}
+    extra: List[Finding] = []
+    for path, sf in ctx.files.items():
+        sups = parse_suppressions(sf)
+        by_file[path] = sups
+        for s in sups:
+            if not s.reason:
+                extra.append(Finding(
+                    "FED000", path, s.line,
+                    "suppression without a reason — use "
+                    "'# fedlint: disable=FED00x -- <why this is safe>'"))
+            for code in s.codes:
+                if code != "FED000" and code not in RULES:
+                    extra.append(Finding(
+                        "FED000", path, s.line,
+                        f"suppression names unknown rule {code!r}"))
+
+    active: List[Finding] = list(extra)
+    suppressed: List[Finding] = []
+    for f in findings:
+        sups = by_file.get(f.path, [])
+        hit = any(
+            s.reason and f.rule in s.codes and s.applies_to == f.line
+            for s in sups
+        )
+        (suppressed if hit else active).append(f)
+    return active, suppressed
+
+
+# ---------------------------------------------------------------------------
+# baseline
+
+
+def load_baseline(path: str) -> set:
+    if not os.path.exists(path):
+        return set()
+    with open(path, "r", encoding="utf-8") as fh:
+        data = json.load(fh)
+    return set(data.get("fingerprints", []))
+
+
+def write_baseline(path: str, findings: List[Finding]) -> None:
+    data = {
+        "version": 1,
+        "comment": "fedlint grandfathered findings; regenerate with "
+                   "python -m repro.analysis --update-baseline",
+        "fingerprints": sorted({f.fingerprint for f in findings}),
+    }
+    with open(path, "w", encoding="utf-8") as fh:
+        json.dump(data, fh, indent=2, sort_keys=True)
+        fh.write("\n")
+
+
+# ---------------------------------------------------------------------------
+# top-level run
+
+
+@dataclasses.dataclass
+class Report:
+    active: List[Finding]
+    suppressed: List[Finding]
+    baselined: List[Finding]
+    n_files: int
+
+    @property
+    def failed(self) -> bool:
+        return bool(self.active)
+
+    def to_json(self, paths: List[str]) -> dict:
+        def enc(f: Finding, status: str) -> dict:
+            return {"rule": f.rule, "path": f.path, "line": f.line,
+                    "message": f.message, "status": status}
+
+        return {
+            "version": 1,
+            "paths": list(paths),
+            "files_scanned": self.n_files,
+            "findings": (
+                [enc(f, "active") for f in self.active]
+                + [enc(f, "suppressed") for f in self.suppressed]
+                + [enc(f, "baselined") for f in self.baselined]
+            ),
+            "summary": {
+                "active": len(self.active),
+                "suppressed": len(self.suppressed),
+                "baselined": len(self.baselined),
+            },
+        }
+
+
+def run_context(ctx: RepoContext, baseline: Optional[set] = None) -> Report:
+    findings: List[Finding] = []
+    for path, sf in sorted(ctx.files.items()):
+        if sf.tree is None:
+            findings.append(Finding("FED000", path, 1, "file does not parse"))
+    for rid in sorted(RULES):
+        findings.extend(RULES[rid].check(ctx))
+    findings.sort(key=lambda f: (f.path, f.line, f.rule, f.message))
+    active, suppressed = apply_suppressions(ctx, findings)
+    baselined: List[Finding] = []
+    if baseline:
+        still_active = []
+        for f in active:
+            (baselined if f.fingerprint in baseline else still_active).append(f)
+        active = still_active
+    return Report(active, suppressed, baselined, len(ctx.files))
+
+
+def run_paths(paths: List[str], baseline: Optional[set] = None) -> Report:
+    return run_context(RepoContext(collect_files(paths)), baseline)

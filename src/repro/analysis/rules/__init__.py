@@ -1,0 +1,8 @@
+"""FED rule registry — importing this package registers every rule."""
+from repro.analysis.rules import (  # noqa: F401  (imported for registration)
+    fed001_bit_stability,
+    fed002_key_discipline,
+    fed003_kernel_oracle,
+    fed004_round_paths,
+    fed005_tracer_leak,
+)

@@ -1,0 +1,51 @@
+"""FED001 — bit-unstable RNG primitives in regeneration-critical modules.
+
+Virtual clients (PR 7) and kill-resume (PR 8) both depend on client data
+being a *pure, bit-stable* function of ``(seed, client id, row)``: the
+same rows must come back bit-identical whether they are generated in one
+batch, per chunk, or one client at a time.  ``jax.random.uniform`` /
+``gumbel`` / ``exponential`` etc. are per-element inversions and keep that
+promise; ``normal`` (erfinv) and the gamma/beta/dirichlet rejection
+samplers do not — their output can depend on batch shape and XLA fusion
+decisions.  This rule forbids the unstable set inside the modules whose
+output must regenerate bit-identically: ``repro/data/`` and the fleet's
+trace/fault draw chains.
+
+Model-parameter initializers (``repro/models/``) may use ``normal``
+freely — weights are sampled once and carried in checkpoints, never
+regenerated from shape.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List
+
+from repro.analysis.astutil import BIT_UNSTABLE, RandomNames
+from repro.analysis.core import Finding, RepoContext, rule
+
+#: path fragments whose files must stay on bit-stable primitives
+SCOPED = ("repro/data/", "repro/fleet/traces.py", "repro/fleet/faults.py")
+
+
+@rule("FED001", "bit-unstable RNG primitive in a regeneration-critical module")
+def check(ctx: RepoContext) -> List[Finding]:
+    findings: List[Finding] = []
+    for fragment in SCOPED:
+        for sf in ctx.matching(fragment):
+            if sf.tree is None:
+                continue
+            names = RandomNames(sf.tree)
+            for node in ast.walk(sf.tree):
+                if not isinstance(node, ast.Call):
+                    continue
+                member = names.member_of_call(node)
+                if member in BIT_UNSTABLE:
+                    findings.append(Finding(
+                        "FED001", sf.path, node.lineno,
+                        f"jax.random.{member} is not bit-stable under batch "
+                        f"reshaping (erfinv/rejection sampling); use an "
+                        f"inversion sampler (uniform/gumbel/exponential) — "
+                        f"this module's output must regenerate bit-identically "
+                        f"for virtual clients and kill-resume"))
+    # dedupe: a file can match two fragments
+    return sorted(set(findings), key=lambda f: (f.path, f.line))

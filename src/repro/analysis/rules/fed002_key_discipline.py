@@ -1,0 +1,307 @@
+"""FED002 — PRNG key discipline.
+
+The repo's determinism story (ROADMAP "Architecture contract", PR 6-9)
+hangs on a strict key dataflow: every stream is derived from
+``PRNGKey(seed)`` by ``fold_in`` tags on the absolute-round schedule, and
+each derived key is consumed **exactly once** by a sampler.  Violations
+are silent statistics bugs — two draws that should be independent become
+identical — so they are worth a dedicated static check.  Flagged:
+
+  * sampling from a key that a sampler already consumed (classic reuse);
+  * sampling from a key that was already ``split`` (sample from one of
+    the split keys instead);
+  * ``split``/``fold_in`` on a key a sampler already consumed;
+  * two ``fold_in(k, <same constant tag>)`` on the same binding of ``k``
+    (colliding streams);
+  * sampling directly from a raw ``PRNGKey(seed)`` in library code —
+    every stream must go through the fold_in schedule so it stays
+    disjoint from the solver/data/trace/fault chains (test files are
+    exempt: ad-hoc raw-key draws are idiomatic there).
+
+Deliberately allowed, because they are the repo's core idiom: many
+``fold_in`` calls with *different* tags off one key, re-deriving
+(``k = fold_in(k, t)``), and tuple-unpacking ``split`` results.  The
+analysis is branch-aware — a key consumed in both arms of an ``if/else``
+is dead afterwards, but consumption in only one arm does not poison the
+other path.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Set, Tuple
+
+from repro.analysis.astutil import RandomNames
+from repro.analysis.core import Finding, RepoContext, rule
+
+RAW, DERIVED, SPLIT, DEAD, KEYARRAY = ("raw", "derived", "split", "dead",
+                                       "keyarray")
+
+
+class _Env:
+    """Per-scope key states: name -> state, binding generation, fold tags."""
+
+    def __init__(self):
+        self.state: Dict[str, str] = {}
+        self.gen: Dict[str, int] = {}
+        # (key name, binding generation, tag) -> line of the first fold_in;
+        # re-deriving at the SAME site (a loop) is intentional, two
+        # different sites with one tag is a stream collision
+        self.folds: Dict[Tuple[str, int, object], int] = {}
+
+    def copy(self) -> "_Env":
+        e = _Env()
+        e.state = dict(self.state)
+        e.gen = dict(self.gen)
+        e.folds = dict(self.folds)
+        return e
+
+    def bind(self, name: str, state: Optional[str]) -> None:
+        self.gen[name] = self.gen.get(name, 0) + 1
+        if state is None:
+            self.state.pop(name, None)
+        else:
+            self.state[name] = state
+
+    def merge(self, *branches: "_Env") -> None:
+        """Join after exclusive branches: keep only facts true on all paths."""
+        names = set(self.state)
+        for b in branches:
+            names |= set(b.state)
+        merged: Dict[str, str] = {}
+        for n in names:
+            states = {b.state.get(n) for b in branches}
+            if len(states) == 1 and None not in states:
+                merged[n] = states.pop()
+        self.state = merged
+        for n in names:
+            self.gen[n] = max(b.gen.get(n, 0) for b in branches)
+        folds = dict(branches[0].folds)
+        for b in branches[1:]:
+            folds = {k: min(v, b.folds[k]) for k, v in folds.items()
+                     if k in b.folds}
+        self.folds = folds
+
+
+class _Analyzer:
+    def __init__(self, names: RandomNames, path: str, raw_check: bool):
+        self.names = names
+        self.path = path
+        self.raw_check = raw_check
+        self.findings: Set[Finding] = set()
+
+    # -- entry points -------------------------------------------------------
+
+    def run_module(self, tree: ast.Module) -> None:
+        self.exec_block(tree.body, _Env())
+        for fn in [n for n in ast.walk(tree)
+                   if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))]:
+            env = _Env()
+            # parameters start unknown: a caller may pass a fresh key
+            self.exec_block(fn.body, env)
+
+    # -- statements ---------------------------------------------------------
+
+    def exec_block(self, stmts, env: _Env) -> None:
+        for st in stmts:
+            self.exec_stmt(st, env)
+
+    def exec_stmt(self, st: ast.stmt, env: _Env) -> None:
+        if isinstance(st, (ast.FunctionDef, ast.AsyncFunctionDef, ast.ClassDef)):
+            return  # analyzed separately with a fresh scope
+        if isinstance(st, ast.Assign):
+            v = self.eval(st.value, env)
+            for t in st.targets:
+                self.bind_target(t, v, env)
+        elif isinstance(st, ast.AnnAssign):
+            if st.value is not None:
+                v = self.eval(st.value, env)
+                self.bind_target(st.target, v, env)
+        elif isinstance(st, ast.AugAssign):
+            self.eval(st.value, env)
+            self.bind_target(st.target, None, env)
+        elif isinstance(st, (ast.Expr, ast.Return)):
+            if getattr(st, "value", None) is not None:
+                self.eval(st.value, env)
+        elif isinstance(st, ast.If):
+            self.eval(st.test, env)
+            e_then, e_else = env.copy(), env.copy()
+            self.exec_block(st.body, e_then)
+            self.exec_block(st.orelse, e_else)
+            env.merge(e_then, e_else)
+        elif isinstance(st, (ast.For, ast.AsyncFor)):
+            self.eval(st.iter, env)
+            # two passes so loop-carried consumption of a loop-invariant key
+            # is caught; the loop target rebinds fresh each iteration
+            for _ in range(2):
+                self.bind_target(st.target, None, env)
+                self.exec_block(st.body, env)
+            self.exec_block(st.orelse, env)
+        elif isinstance(st, ast.While):
+            for _ in range(2):
+                self.eval(st.test, env)
+                self.exec_block(st.body, env)
+            self.exec_block(st.orelse, env)
+        elif isinstance(st, ast.Try):
+            self.exec_block(st.body, env)
+            branches = [env.copy()]
+            for h in st.handlers:
+                eh = env.copy()
+                self.exec_block(h.body, eh)
+                branches.append(eh)
+            env.merge(*branches)
+            self.exec_block(st.orelse, env)
+            self.exec_block(st.finalbody, env)
+        elif isinstance(st, (ast.With, ast.AsyncWith)):
+            for item in st.items:
+                self.eval(item.context_expr, env)
+                if item.optional_vars is not None:
+                    self.bind_target(item.optional_vars, None, env)
+            self.exec_block(st.body, env)
+        elif isinstance(st, (ast.Raise, ast.Assert, ast.Delete)):
+            for child in ast.iter_child_nodes(st):
+                if isinstance(child, ast.expr):
+                    self.eval(child, env)
+        # Pass/Break/Continue/Import/Global/Nonlocal: nothing to do
+
+    def bind_target(self, target: ast.expr, value_state: Optional[str],
+                    env: _Env) -> None:
+        if isinstance(target, ast.Name):
+            env.bind(target.id, value_state)
+        elif isinstance(target, (ast.Tuple, ast.List)):
+            # `k1, k2 = split(key)` — elements of a key array are fresh keys
+            elt_state = DERIVED if value_state == KEYARRAY else None
+            for elt in target.elts:
+                if isinstance(elt, ast.Starred):
+                    self.bind_target(elt.value, None, env)
+                else:
+                    self.bind_target(elt, elt_state, env)
+        # Attribute / Subscript targets: untracked
+
+    # -- expressions --------------------------------------------------------
+
+    def eval(self, node: ast.expr, env: _Env) -> Optional[str]:
+        """Evaluate for side effects; return the value's key-state."""
+        if isinstance(node, ast.Name):
+            return env.state.get(node.id)
+        if isinstance(node, ast.Call):
+            return self.eval_call(node, env)
+        if isinstance(node, ast.Lambda):
+            # may run zero or many times: analyze on a throwaway copy with
+            # the lambda's own params unbound
+            e = env.copy()
+            for a in node.args.args + node.args.kwonlyargs:
+                e.bind(a.arg, None)
+            self.eval(node.body, e)
+            return None
+        if isinstance(node, (ast.ListComp, ast.SetComp, ast.GeneratorExp,
+                             ast.DictComp)):
+            e = env.copy()
+            for gen in node.generators:
+                self.eval(gen.iter, e)
+            # two passes: the body repeats per element, so consuming a
+            # comprehension-invariant key twice is loop-carried reuse
+            for _ in range(2):
+                for gen in node.generators:
+                    self.bind_target(gen.target, None, e)
+                    for cond in gen.ifs:
+                        self.eval(cond, e)
+                if isinstance(node, ast.DictComp):
+                    self.eval(node.key, e)
+                    self.eval(node.value, e)
+                else:
+                    self.eval(node.elt, e)
+            # loop-invariant consumption is real on the actual path too
+            for name, state in e.state.items():
+                if name in env.state and state == DEAD:
+                    env.state[name] = DEAD
+            return None
+        if isinstance(node, ast.IfExp):
+            self.eval(node.test, env)
+            e_then, e_else = env.copy(), env.copy()
+            s1 = self.eval(node.body, e_then)
+            s2 = self.eval(node.orelse, e_else)
+            env.merge(e_then, e_else)
+            return s1 if s1 == s2 else None
+        # generic: evaluate children, value untracked
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, ast.expr):
+                self.eval(child, env)
+        return None
+
+    def eval_call(self, node: ast.Call, env: _Env) -> Optional[str]:
+        member = self.names.member_of_call(node)
+        arg_states = [self.eval(a, env) for a in node.args]
+        for kw in node.keywords:
+            self.eval(kw.value, env)
+        if member is None:
+            return None
+        if member in ("PRNGKey", "key"):
+            return RAW
+
+        key_arg = node.args[0] if node.args else None
+        key_name = key_arg.id if isinstance(key_arg, ast.Name) else None
+        key_state = arg_states[0] if arg_states else None
+
+        if member == "fold_in":
+            if key_state == DEAD:
+                self.report(node, "fold_in on a key a sampler already "
+                                  "consumed — derive sub-keys before sampling")
+            if key_name is not None and len(node.args) >= 2:
+                tag = node.args[1]
+                if isinstance(tag, ast.Constant):
+                    entry = (key_name, env.gen.get(key_name, 0), tag.value)
+                    first = env.folds.setdefault(entry, node.lineno)
+                    if first != node.lineno:
+                        self.report(
+                            node,
+                            f"fold_in({key_name}, {tag.value!r}) repeats the "
+                            f"fold_in at line {first} with the same tag on "
+                            f"the same key binding — the two streams are "
+                            f"identical")
+            return DERIVED
+        if member == "split":
+            if key_state == DEAD:
+                self.report(node, "split on a key a sampler already consumed")
+            if key_name is not None:
+                env.state[key_name] = SPLIT
+            return KEYARRAY
+        if member in ("wrap_key_data", "key_data", "clone", "key_impl",
+                      "default_prng_impl"):
+            return None
+
+        # every other jax.random member takes a key first and consumes it
+        if key_state == DEAD:
+            self.report(node, f"jax.random.{member} on a key that was "
+                              f"already consumed by a sampler — each derived "
+                              f"key must be sampled exactly once")
+        elif key_state == SPLIT:
+            self.report(node, f"jax.random.{member} on a key that was "
+                              f"already split — sample from one of the "
+                              f"split keys instead")
+        elif key_state == RAW and self.raw_check:
+            # covers both `sampler(k)` with k = PRNGKey(...) and the
+            # inline `sampler(PRNGKey(...))` spelling (eval returns RAW)
+            self.report(node, f"jax.random.{member} on a raw PRNGKey — "
+                              f"library code must derive keys through the "
+                              f"fold_in schedule (PRNGKey(seed) + tags) so "
+                              f"streams stay disjoint across rounds/clients")
+        if key_name is not None:
+            env.state[key_name] = DEAD
+        return None
+
+    def report(self, node: ast.AST, message: str) -> None:
+        self.findings.add(Finding("FED002", self.path, node.lineno, message))
+
+
+@rule("FED002", "PRNG key reuse / raw-key sampling")
+def check(ctx: RepoContext) -> List[Finding]:
+    findings: List[Finding] = []
+    for path, sf in sorted(ctx.files.items()):
+        if sf.tree is None:
+            continue
+        analyzer = _Analyzer(RandomNames(sf.tree), path,
+                             raw_check=not sf.is_test)
+        analyzer.run_module(sf.tree)
+        findings.extend(sorted(analyzer.findings,
+                               key=lambda f: (f.line, f.message)))
+    return findings

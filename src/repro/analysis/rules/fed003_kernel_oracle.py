@@ -1,0 +1,80 @@
+"""FED003 — cross-module kernel completeness.
+
+The Pallas kernel convention (docs/ARCHITECTURE.md "Pallas kernel
+conventions") is a triangle: each kernel module under ``repro/kernels/``
+exports an entry point, ``kernels/ref.py`` carries a pure-``jnp``
+``<entry>_ref`` oracle with identical semantics, ``kernels/ops.py``
+registers a jit wrapper, and a test somewhere under ``tests/`` pins
+kernel-vs-oracle parity.  A kernel missing any leg of the triangle is
+unverifiable — exactly the state ``wkv6`` sat in for three PRs.  This
+rule closes the loop mechanically:
+
+  * for every public top-level function in ``repro/kernels/<mod>.py``
+    (``<mod>`` not in {__init__, ops, ref}) there must exist a top-level
+    ``<entry>_ref`` in ``ref.py``;
+  * ``ops.py`` must mention the entry name;
+  * some scanned test file must mention both the entry and its oracle
+    (skipped when the scan contains no test files, e.g. a src-only run).
+
+Helpers prefixed with ``_`` are exempt — only the public surface needs
+an oracle.
+"""
+from __future__ import annotations
+
+import ast
+import re
+from typing import List
+
+from repro.analysis.core import Finding, RepoContext, rule
+
+_EXEMPT_MODULES = {"__init__", "ops", "ref"}
+
+
+def _top_level_functions(tree: ast.AST) -> List[ast.FunctionDef]:
+    return [n for n in tree.body
+            if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))]
+
+
+def _mentions(source: str, name: str) -> bool:
+    return re.search(rf"\b{re.escape(name)}\b", source) is not None
+
+
+@rule("FED003", "Pallas kernel without oracle / registration / parity test")
+def check(ctx: RepoContext) -> List[Finding]:
+    findings: List[Finding] = []
+    kernel_files = [sf for sf in ctx.matching("repro/kernels/")
+                    if sf.path.rsplit("/", 1)[-1][:-3] not in _EXEMPT_MODULES
+                    and sf.tree is not None]
+    if not kernel_files:
+        return findings
+    ref = ctx.single("repro/kernels/ref.py")
+    ops = ctx.single("repro/kernels/ops.py")
+    ref_names = ({fn.name for fn in _top_level_functions(ref.tree)}
+                 if ref is not None and ref.tree is not None else set())
+    test_files = [sf for sf in ctx.files.values() if sf.is_test]
+
+    for sf in kernel_files:
+        for fn in _top_level_functions(sf.tree):
+            if fn.name.startswith("_"):
+                continue
+            oracle = f"{fn.name}_ref"
+            if oracle not in ref_names:
+                findings.append(Finding(
+                    "FED003", sf.path, fn.lineno,
+                    f"kernel entry '{fn.name}' has no '{oracle}' oracle in "
+                    f"kernels/ref.py — every Pallas kernel needs a pure-jnp "
+                    f"reference implementation"))
+            if ops is not None and not _mentions(ops.source, fn.name):
+                findings.append(Finding(
+                    "FED003", sf.path, fn.lineno,
+                    f"kernel entry '{fn.name}' is not registered in "
+                    f"kernels/ops.py — callers must go through the ops "
+                    f"wrappers (interpret fallback off-TPU)"))
+            if test_files and not any(
+                    _mentions(t.source, fn.name) and _mentions(t.source, oracle)
+                    for t in test_files):
+                findings.append(Finding(
+                    "FED003", sf.path, fn.lineno,
+                    f"no test references both '{fn.name}' and '{oracle}' — "
+                    f"kernel/oracle parity must be pinned by a test"))
+    return findings

@@ -1,0 +1,181 @@
+"""FED004 — EngineConfig round-path completeness.
+
+Every :class:`EngineConfig` knob must be *threaded*: read on all of the
+round paths (``round`` / ``round_streamed`` / ``round_cohort`` /
+``round_virtual`` and their ``_with_state`` twins, including everything
+they reach through ``self.*`` calls) or explicitly validated/rejected in
+``__post_init__``.  PR 8 and PR 9 each threaded new knobs by hand, and a
+missed path is a *wrong-answer* bug — the knob silently no-ops on that
+path — not a crash.  This rule recovers the read sets from ``engine.py``'s
+AST:
+
+  * a *read* is any ``self.cfg.<field>`` / ``cfg.<field>`` attribute load
+    (local aliases of ``self.cfg`` are tracked);
+  * the call graph follows ``self.<method>`` references (calls, ``vmap``
+    targets, ``partial`` captures) transitively;
+  * a field read in ``__post_init__`` (or helpers it calls) counts as
+    explicitly validated, which excuses path-specific knobs — e.g.
+    ``cohort`` is rejected up front on non-cohort paths instead of read.
+
+Fired when a field is read on no round path at all (dead knob), or read
+on some paths but not others without a ``__post_init__`` validation.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Set
+
+from repro.analysis.core import Finding, RepoContext, rule
+
+ROUND_PATHS = (
+    "round", "round_with_state",
+    "round_streamed", "round_streamed_with_state",
+    "round_cohort", "round_cohort_with_state",
+    "round_virtual", "round_virtual_with_state",
+)
+
+ENGINE_SUFFIX = "repro/core/engine.py"
+
+
+def _class_def(tree: ast.AST, name: str):
+    for node in tree.body:
+        if isinstance(node, ast.ClassDef) and node.name == name:
+            return node
+    return None
+
+
+def _config_fields(cls: ast.ClassDef) -> Dict[str, int]:
+    """Dataclass field name -> line, from the annotated class body."""
+    fields: Dict[str, int] = {}
+    for node in cls.body:
+        if (isinstance(node, ast.AnnAssign)
+                and isinstance(node.target, ast.Name)
+                and not node.target.id.startswith("_")):
+            fields[node.target.id] = node.lineno
+    return fields
+
+
+def _method_map(cls: ast.ClassDef) -> Dict[str, ast.AST]:
+    return {n.name: n for n in cls.body
+            if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))}
+
+
+def _field_reads(method: ast.AST, fields: Set[str],
+                 on_self: str = "cfg") -> Set[str]:
+    """Fields read as ``self.cfg.X`` / ``<alias>.X`` within the method."""
+    alias_names: Set[str] = set()
+    for node in ast.walk(method):
+        if isinstance(node, ast.Assign):
+            v = node.value
+            if (isinstance(v, ast.Attribute) and v.attr == on_self
+                    and isinstance(v.value, ast.Name)
+                    and v.value.id == "self"):
+                for t in node.targets:
+                    if isinstance(t, ast.Name):
+                        alias_names.add(t.id)
+    reads: Set[str] = set()
+    for node in ast.walk(method):
+        if not isinstance(node, ast.Attribute) or node.attr not in fields:
+            continue
+        v = node.value
+        # self.cfg.X
+        if (isinstance(v, ast.Attribute) and v.attr == on_self
+                and isinstance(v.value, ast.Name) and v.value.id == "self"):
+            reads.add(node.attr)
+        # <alias>.X where alias = self.cfg
+        elif isinstance(v, ast.Name) and v.id in alias_names:
+            reads.add(node.attr)
+    return reads
+
+
+def _self_field_reads(method: ast.AST, fields: Set[str]) -> Set[str]:
+    """Fields read as ``self.X`` (EngineConfig's own methods)."""
+    reads: Set[str] = set()
+    for node in ast.walk(method):
+        if (isinstance(node, ast.Attribute) and node.attr in fields
+                and isinstance(node.value, ast.Name)
+                and node.value.id == "self"):
+            reads.add(node.attr)
+    return reads
+
+
+def _self_method_refs(method: ast.AST, methods: Set[str]) -> Set[str]:
+    """``self.<m>`` references (calls, vmap targets, partial captures)."""
+    refs: Set[str] = set()
+    for node in ast.walk(method):
+        if (isinstance(node, ast.Attribute) and node.attr in methods
+                and isinstance(node.value, ast.Name)
+                and node.value.id == "self"):
+            refs.add(node.attr)
+    return refs
+
+
+def _closure_reads(entry: str, methods: Dict[str, ast.AST],
+                   fields: Set[str]) -> Set[str]:
+    seen: Set[str] = set()
+    stack = [entry]
+    reads: Set[str] = set()
+    while stack:
+        name = stack.pop()
+        if name in seen or name not in methods:
+            continue
+        seen.add(name)
+        m = methods[name]
+        reads |= _field_reads(m, fields)
+        stack.extend(_self_method_refs(m, set(methods)))
+    return reads
+
+
+@rule("FED004", "EngineConfig knob not threaded through every round path")
+def check(ctx: RepoContext) -> List[Finding]:
+    findings: List[Finding] = []
+    sf = ctx.single(ENGINE_SUFFIX)
+    if sf is None or sf.tree is None:
+        return findings
+    cfg_cls = _class_def(sf.tree, "EngineConfig")
+    eng_cls = _class_def(sf.tree, "RoundEngine")
+    if cfg_cls is None or eng_cls is None:
+        return findings
+    field_lines = _config_fields(cfg_cls)
+    fields = set(field_lines)
+    cfg_methods = _method_map(cfg_cls)
+    eng_methods = _method_map(eng_cls)
+
+    # __post_init__ (plus EngineConfig helpers it calls) = validated set
+    validated: Set[str] = set()
+    stack = ["__post_init__"]
+    seen: Set[str] = set()
+    while stack:
+        name = stack.pop()
+        if name in seen or name not in cfg_methods:
+            continue
+        seen.add(name)
+        validated |= _self_field_reads(cfg_methods[name], fields)
+        stack.extend(_self_method_refs(cfg_methods[name], set(cfg_methods)))
+
+    present_paths = [p for p in ROUND_PATHS if p in eng_methods]
+    for p in ROUND_PATHS:
+        if p not in eng_methods:
+            findings.append(Finding(
+                "FED004", sf.path, eng_cls.lineno,
+                f"round path method '{p}' is missing from RoundEngine — "
+                f"the engine contract names all eight paths"))
+    reads_by_path = {p: _closure_reads(p, eng_methods, fields)
+                     for p in present_paths}
+
+    for field in sorted(fields):
+        read_on = [p for p in present_paths if field in reads_by_path[p]]
+        missing = [p for p in present_paths if field not in reads_by_path[p]]
+        if not read_on:
+            findings.append(Finding(
+                "FED004", sf.path, field_lines[field],
+                f"EngineConfig.{field} is never read on any round path — "
+                f"dead knob (thread it through the engine or remove it)"))
+        elif missing and field not in validated:
+            findings.append(Finding(
+                "FED004", sf.path, field_lines[field],
+                f"EngineConfig.{field} is read on {sorted(read_on)} but not "
+                f"on {sorted(missing)} and is not validated in "
+                f"__post_init__ — the knob silently no-ops on the missing "
+                f"paths"))
+    return findings

@@ -1,0 +1,212 @@
+"""FED005 — tracer-leak hazards inside jitted bodies.
+
+Inside a ``jax.jit``-compiled function, Python control flow on a traced
+value (``if``/``while``/``bool()``/``float()``/``int()``/``.item()``)
+either raises ``TracerBoolConversionError`` at trace time or — worse,
+with weak types and concrete sub-expressions — silently bakes one branch
+into the compiled program.  The engine's round bodies are all jitted with
+donated buffers, so a leak there is a correctness bug across every
+subsequent round.
+
+The rule runs a small taint analysis over every *lexically* jit-decorated
+function (``@jax.jit``, ``@functools.partial(jax.jit, ...)``) and over
+lambdas passed directly to ``jax.jit(...)``:
+
+  * non-static parameters are tainted (they arrive as tracers);
+    ``static_argnames``/``static_argnums`` parameters are not;
+  * taint propagates through expressions and assignments, and into the
+    parameters of functions/lambdas *defined inside* the jitted body
+    (they run under the same trace);
+  * sanitizers stop taint: ``x is None`` / ``is not None`` tests,
+    ``isinstance``/``len`` calls, and ``.shape``/``.ndim``/``.dtype``/
+    ``.size`` attribute reads — those are Python-level facts known at
+    trace time, and branching on them is the repo's standard idiom.
+
+Fired on: an ``if``/``while``/ternary test that is tainted, and
+``bool()``/``float()``/``int()``/``.item()`` applied to a tainted value.
+``jnp.where``/``lax.cond``/``lax.select`` are the fixes.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List, Set
+
+from repro.analysis.astutil import arg_names, jit_static_names
+from repro.analysis.core import Finding, RepoContext, rule
+
+_SHAPE_ATTRS = {"shape", "ndim", "dtype", "size", "sharding", "weak_type"}
+_SANITIZER_CALLS = {"isinstance", "len", "type", "hasattr", "getattr"}
+_HAZARD_CASTS = {"bool", "float", "int"}
+
+
+def _is_jax_jit_call(node: ast.Call) -> bool:
+    f = node.func
+    if isinstance(f, ast.Name) and f.id == "jit":
+        return True
+    return (isinstance(f, ast.Attribute) and f.attr == "jit"
+            and isinstance(f.value, ast.Name) and f.value.id == "jax")
+
+
+class _TaintChecker:
+    def __init__(self, path: str):
+        self.path = path
+        self.findings: Set[Finding] = set()
+
+    # -- taint query --------------------------------------------------------
+
+    def tainted(self, node: ast.expr, env: Set[str]) -> bool:
+        """Is this expression derived from a traced value?"""
+        if isinstance(node, ast.Name):
+            return node.id in env
+        if isinstance(node, ast.Attribute):
+            if node.attr in _SHAPE_ATTRS:
+                return False  # trace-time Python facts
+            return self.tainted(node.value, env)
+        if isinstance(node, ast.Compare):
+            # `x is None` / `is not None` yields a Python bool at trace time
+            if all(isinstance(op, (ast.Is, ast.IsNot)) for op in node.ops):
+                return False
+            return (self.tainted(node.left, env)
+                    or any(self.tainted(c, env) for c in node.comparators))
+        if isinstance(node, ast.Call):
+            fn = node.func
+            name = fn.id if isinstance(fn, ast.Name) else (
+                fn.attr if isinstance(fn, ast.Attribute) else None)
+            if name in _SANITIZER_CALLS:
+                return False
+            # the hazard casts are checked separately; their *result* is a
+            # Python scalar but producing it is already the leak
+            return (any(self.tainted(a, env) for a in node.args)
+                    or any(self.tainted(k.value, env) for k in node.keywords)
+                    or (isinstance(fn, ast.Attribute)
+                        and self.tainted(fn.value, env)))
+        if isinstance(node, (ast.Constant, ast.Lambda)):
+            return False
+        return any(self.tainted(c, env)
+                   for c in ast.iter_child_nodes(node)
+                   if isinstance(c, ast.expr))
+
+    # -- hazard scan --------------------------------------------------------
+
+    def scan_fn(self, fn: ast.AST, static: tuple) -> None:
+        env: Set[str] = {a for a in arg_names(fn)
+                         if a not in static and a not in ("self", "cls")}
+        if isinstance(fn, ast.Lambda):
+            self.scan_expr(fn.body, env)
+            return
+        self.scan_block(fn.body, env)
+
+    def scan_block(self, stmts, env: Set[str]) -> None:
+        for st in stmts:
+            self.scan_stmt(st, env)
+
+    def scan_stmt(self, st: ast.stmt, env: Set[str]) -> None:
+        if isinstance(st, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            # nested defs run under the same trace: their params are traced
+            # whenever a tainted value can flow in — assume they are
+            inner = set(env) | set(arg_names(st))
+            self.scan_block(st.body, inner)
+            return
+        if isinstance(st, ast.Assign):
+            self.scan_expr(st.value, env)
+            taint = self.tainted(st.value, env)
+            for t in st.targets:
+                self.bind(t, taint, env)
+        elif isinstance(st, ast.AnnAssign) and st.value is not None:
+            self.scan_expr(st.value, env)
+            self.bind(st.target, self.tainted(st.value, env), env)
+        elif isinstance(st, ast.AugAssign):
+            self.scan_expr(st.value, env)
+            if isinstance(st.target, ast.Name):
+                if self.tainted(st.value, env):
+                    env.add(st.target.id)
+        elif isinstance(st, ast.If):
+            self.scan_expr(st.test, env)
+            if self.tainted(st.test, env):
+                self.report(st, "Python `if` on a traced value inside a "
+                                "jitted body — use jnp.where / lax.cond")
+            self.scan_block(st.body, env)
+            self.scan_block(st.orelse, env)
+        elif isinstance(st, ast.While):
+            self.scan_expr(st.test, env)
+            if self.tainted(st.test, env):
+                self.report(st, "Python `while` on a traced value inside a "
+                                "jitted body — use lax.while_loop")
+            self.scan_block(st.body, env)
+            self.scan_block(st.orelse, env)
+        elif isinstance(st, (ast.For, ast.AsyncFor)):
+            self.scan_expr(st.iter, env)
+            self.bind(st.target, self.tainted(st.iter, env), env)
+            self.scan_block(st.body, env)
+            self.scan_block(st.orelse, env)
+        elif isinstance(st, ast.Try):
+            self.scan_block(st.body, env)
+            for h in st.handlers:
+                self.scan_block(h.body, env)
+            self.scan_block(st.orelse, env)
+            self.scan_block(st.finalbody, env)
+        elif isinstance(st, (ast.With, ast.AsyncWith)):
+            for item in st.items:
+                self.scan_expr(item.context_expr, env)
+            self.scan_block(st.body, env)
+        else:
+            for child in ast.iter_child_nodes(st):
+                if isinstance(child, ast.expr):
+                    self.scan_expr(child, env)
+
+    def bind(self, target: ast.expr, taint: bool, env: Set[str]) -> None:
+        if isinstance(target, ast.Name):
+            (env.add if taint else env.discard)(target.id)
+        elif isinstance(target, (ast.Tuple, ast.List)):
+            for elt in target.elts:
+                self.bind(elt.value if isinstance(elt, ast.Starred) else elt,
+                          taint, env)
+
+    def scan_expr(self, node: ast.expr, env: Set[str]) -> None:
+        if isinstance(node, ast.Call):
+            fn = node.func
+            name = fn.id if isinstance(fn, ast.Name) else None
+            if (name in _HAZARD_CASTS and node.args
+                    and self.tainted(node.args[0], env)):
+                self.report(node, f"`{name}()` on a traced value inside a "
+                                  f"jitted body forces a concrete value at "
+                                  f"trace time")
+            if (isinstance(fn, ast.Attribute) and fn.attr == "item"
+                    and not node.args and self.tainted(fn.value, env)):
+                self.report(node, "`.item()` on a traced value inside a "
+                                  "jitted body forces a device sync at "
+                                  "trace time")
+        elif isinstance(node, ast.IfExp):
+            if self.tainted(node.test, env):
+                self.report(node, "ternary on a traced value inside a jitted "
+                                  "body — use jnp.where")
+        elif isinstance(node, ast.Lambda):
+            inner = set(env) | set(arg_names(node))
+            self.scan_expr(node.body, inner)
+            return
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, ast.expr):
+                self.scan_expr(child, env)
+
+    def report(self, node: ast.AST, message: str) -> None:
+        self.findings.add(Finding("FED005", self.path, node.lineno, message))
+
+
+@rule("FED005", "tracer leak inside a jitted body")
+def check(ctx: RepoContext) -> List[Finding]:
+    findings: List[Finding] = []
+    for path, sf in sorted(ctx.files.items()):
+        if sf.tree is None:
+            continue
+        checker = _TaintChecker(path)
+        for node in ast.walk(sf.tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                static = jit_static_names(node)
+                if static is not None:
+                    checker.scan_fn(node, static)
+            elif (isinstance(node, ast.Call) and _is_jax_jit_call(node)
+                    and node.args and isinstance(node.args[0], ast.Lambda)):
+                checker.scan_fn(node.args[0], ())
+        findings.extend(sorted(checker.findings,
+                               key=lambda f: (f.line, f.message)))
+    return findings

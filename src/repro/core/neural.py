@@ -21,8 +21,7 @@ example, so φ^j/φ_k^j = 1).
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Any, Callable, Dict
 
 import jax
 import jax.numpy as jnp

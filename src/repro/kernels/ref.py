@@ -121,3 +121,30 @@ def robust_aggregate_ref(w_t, deltas, valid, a_diag, trim=0.1,
     agg = jnp.where(inc, xs, 0.0).sum(axis=0) / cnt
     agg = jnp.where(m > 0, agg, 0.0)
     return w_t.astype(jnp.float32) + a_diag.astype(jnp.float32) * agg
+
+
+def wkv6_ref(r, k, v, w, u):
+    """Token-by-token WKV-6 recurrence in f32 — the oracle for the
+    chunk-parallel ``kernels/wkv6.wkv6``.  Per (batch·head) pair with
+    state S ∈ R^{D×D} starting at zero:
+
+        out_t = r_t S + (Σ_i r_ti u_i k_ti) v_t
+        S    ← diag(w_t) S + k_t^T v_t
+
+    which is the kernel's chunk math at L = 1 (c = w_t, strict intra
+    mask empty).  Shapes match the kernel: r,k,v,w (BH, S, D), u (BH, D);
+    returns out (BH, S, D) in r.dtype and the final state (BH, D, D) in
+    f32."""
+    def one_pair(r, k, v, w, u):
+        def step(s, x):
+            rt, kt, vt, wt = x
+            out = rt @ s + (rt * u * kt).sum() * vt
+            return wt[:, None] * s + kt[:, None] * vt[None, :], out
+        s0 = jnp.zeros((r.shape[-1], r.shape[-1]), jnp.float32)
+        s_fin, out = jax.lax.scan(step, s0, (r, k, v, w))
+        return out, s_fin
+
+    out, state = jax.vmap(one_pair)(
+        r.astype(jnp.float32), k.astype(jnp.float32), v.astype(jnp.float32),
+        w.astype(jnp.float32), u.astype(jnp.float32))
+    return out.astype(r.dtype), state

@@ -25,7 +25,7 @@ from repro.configs.base import ArchConfig, InputShape
 from repro.core.neural import FedNeuralConfig
 from repro.launch import specs as S
 from repro.launch.mesh import make_production_mesh
-from repro.launch.steps import (make_adamw_step, make_decode_step,
+from repro.launch.steps import (make_decode_step,
                                 make_fsvrg_step, make_prefill_step)
 from repro.models import build_model
 from repro.sharding import (batch_shardings, cache_shardings,

@@ -4,7 +4,7 @@ shardable, no device memory).
 """
 from __future__ import annotations
 
-from typing import Dict, Optional
+from typing import Dict
 
 import jax
 import jax.numpy as jnp

@@ -9,11 +9,9 @@
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Callable, Dict, Tuple
+from typing import Callable
 
 import jax
-import jax.numpy as jnp
 
 from repro.core.neural import FedNeuralConfig, make_fsvrg_round
 from repro.models.model import Model

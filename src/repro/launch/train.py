@@ -27,7 +27,7 @@ from repro.core import neural
 from repro.launch.mesh import make_host_mesh, make_production_mesh
 from repro.models import build_model
 from repro.optim import adamw
-from repro.sharding import batch_shardings, params_shardings
+from repro.sharding import params_shardings
 
 
 def synthetic_batch(rng, cfg, num_clients, local_steps, batch_per_client, seq):

@@ -12,7 +12,6 @@ Each pattern block is rematerialized (`jax.checkpoint`) in training mode.
 """
 from __future__ import annotations
 
-import functools
 import math
 from typing import Dict, Tuple
 

@@ -25,7 +25,6 @@ tests/test_hlo_cost.py.
 from __future__ import annotations
 
 import dataclasses
-import json
 import re
 from typing import Dict, List, Optional, Tuple
 

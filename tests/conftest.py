@@ -1,9 +1,6 @@
 """Shared fixtures.  NOTE: no XLA_FLAGS here — tests run on the single real
 CPU device; only repro.launch.dryrun forces 512 placeholder devices.
 """
-import jax
-import jax.numpy as jnp
-import numpy as np
 import pytest
 
 

@@ -10,6 +10,23 @@ export PYTHONPATH
 # the seed suite's hypothesis ImportError masked two real test failures.
 python -m pytest --collect-only -q > /dev/null
 
+# Static contracts (before anything executes): fedlint enforces the
+# bit-stability / key-discipline / kernel-oracle / round-path / tracer-leak
+# rules (FED001-FED005, docs/ARCHITECTURE.md "Static contracts"); exits
+# nonzero on any unsuppressed, unbaselined finding.  The JSON report is a
+# CI artifact (tier1.yml).  Stdlib-only — no install needed.
+python -m repro.analysis src benchmarks tests \
+    --json "${FEDLINT_JSON:-fedlint_report.json}"
+
+# Generic lint: ruff (pinned in requirements-dev.txt; ruff.toml).  The
+# container image may not ship it — CI installs and runs it; locally the
+# step is skipped with a notice rather than failing on a missing tool.
+if command -v ruff > /dev/null 2>&1; then
+    ruff check src benchmarks tests
+else
+    echo "run_tier1: ruff not installed; skipping generic lint (CI runs it)" >&2
+fi
+
 # Benchmark smoke: the fig2 --algo wiring must run end-to-end (tiny config,
 # 2 rounds, truncated OPT) so engine/benchmark plumbing can't rot silently.
 # dane covers the registry sweep path; fedavg covers the single-solver

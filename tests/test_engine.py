@@ -213,3 +213,67 @@ def test_engine_config_validation(tiny_problem):
         EngineConfig(participation=0.0)
     with pytest.raises(ValueError):
         RoundEngine(tiny_problem, EngineConfig(server_scaling="diag"))
+
+
+#: every documented invalid knob combination and the message it must carry —
+#: the runtime twin of the FED004 static check (every knob is either
+#: threaded through all round paths or rejected here, loudly)
+_INVALID_CONFIGS = [
+    (dict(weighting="bogus"), "weighting must be one of"),
+    (dict(server_scaling="block"), "server_scaling must be one of"),
+    (dict(aggregator="sparse"), "aggregator must be one of"),
+    (dict(participation=0.0), r"participation must be in \(0, 1\]"),
+    (dict(participation=1.5), r"participation must be in \(0, 1\]"),
+    (dict(participation=-0.25), r"participation must be in \(0, 1\]"),
+    # bool is a subclass of int: client_chunk=True must not mean chunk=1
+    (dict(client_chunk=True), "client_chunk must be a positive int"),
+    (dict(client_chunk=0), "client_chunk must be a positive int"),
+    (dict(client_chunk=-4), "client_chunk must be a positive int"),
+    (dict(client_chunk=2.5), "client_chunk must be a positive int"),
+    (dict(cohort=True), "cohort must be a positive int"),
+    (dict(cohort=0), "cohort must be a positive int"),
+    (dict(cohort=-1), "cohort must be a positive int"),
+    (dict(virtual_data=1), "virtual_data must be a bool"),
+    (dict(virtual_data=None), "virtual_data must be a bool"),
+    (dict(aggregator_guard="huber"), "aggregator_guard must be one of"),
+    # order-statistic guards need the materialized (K, d) stacks
+    (dict(aggregator_guard="trimmed_mean", client_chunk=8), "materialized"),
+    (dict(aggregator_guard="median", client_chunk=8), "materialized"),
+    (dict(aggregator_guard="trimmed_mean", virtual_data=True), "virtual"),
+    (dict(aggregator_guard="median", virtual_data=True), "virtual"),
+    # ... and replace the weighted sum dual methods rely on
+    (dict(aggregator_guard="trimmed_mean", weighting="sum"),
+     "exact plain sum"),
+    (dict(aggregator_guard="median", weighting="sum"), "exact plain sum"),
+    (dict(guard_trim=-0.1), r"guard_trim must be in \[0, 0.5\)"),
+    (dict(guard_trim=0.5), r"guard_trim must be in \[0, 0.5\)"),
+    (dict(guard_trim=0.7), r"guard_trim must be in \[0, 0.5\)"),
+    (dict(guard_clip_norm=0.0), "guard_clip_norm must be a positive number"),
+    (dict(guard_clip_norm=-1.0), "guard_clip_norm must be a positive number"),
+    (dict(guard_clip_norm=True), "guard_clip_norm must be a positive number"),
+    (dict(guard_clip_norm=1.0), "requires aggregator_guard='clip'"),
+    (dict(guard_clip_norm=1.0, aggregator_guard="median"),
+     "requires aggregator_guard='clip'"),
+]
+
+
+@pytest.mark.parametrize(
+    "kwargs,match", _INVALID_CONFIGS,
+    ids=["-".join(f"{k}={v}" for k, v in kw.items())
+         for kw, _ in _INVALID_CONFIGS])
+def test_engine_config_validation_matrix(kwargs, match):
+    with pytest.raises(ValueError, match=match):
+        EngineConfig(**kwargs)
+
+
+@pytest.mark.parametrize("kwargs", [
+    dict(),
+    dict(participation=0.5, cohort=4),
+    dict(client_chunk=8, virtual_data=True),
+    dict(aggregator_guard="trimmed_mean", guard_trim=0.2),
+    dict(aggregator_guard="median", participation=0.3),
+    dict(aggregator_guard="clip", guard_clip_norm=5.0, client_chunk=8),
+    dict(aggregator_guard="clip", virtual_data=True),
+])
+def test_engine_config_valid_combinations(kwargs):
+    EngineConfig(**kwargs)  # must not raise

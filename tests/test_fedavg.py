@@ -4,7 +4,6 @@ problem, and jnp-vs-Pallas-kernel local-step parity."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.core import FedAvg, FedAvgConfig, build_problem
 from repro.core.baselines import fedavg_round

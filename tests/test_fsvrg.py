@@ -5,7 +5,6 @@ robustness to the non-IID distribution (the paper's FSVRG vs FSVRGR).
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.configs import get_logreg_config
 from repro.core import FSVRG, FSVRGConfig, build_problem

@@ -4,10 +4,9 @@ XLA's analysis is known to under-report by the trip count).
 """
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
-from repro.utils.hlo_cost import HloModule, analyze_text, _parse_shape
+from repro.utils.hlo_cost import analyze_text, _parse_shape
 
 
 def _xla_cost(compiled):
@@ -82,7 +81,5 @@ def test_shape_bytes():
 
 
 def test_collectives_inside_loops_multiplied():
-    from jax.sharding import NamedSharding, PartitionSpec as P
-
     if jax.device_count() < 2:
         pytest.skip("needs >1 device (dry-run only)")

@@ -150,3 +150,37 @@ def test_scaled_aggregate_parity(K, d, dtype):
     tol = 1e-5 if dtype == jnp.float32 else 0.05
     np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
                                rtol=tol, atol=tol)
+
+
+def _wkv_inputs(seed, BH, S, D, dtype=jnp.float32):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 5)
+    r = jax.random.normal(ks[0], (BH, S, D), dtype)
+    k = jax.random.normal(ks[1], (BH, S, D), dtype)
+    v = jax.random.normal(ks[2], (BH, S, D), dtype)
+    # decay in (0, 1), concentrated near 1 like trained RWKV-6 decays
+    w = jnp.exp(-jnp.exp(-6.0 + jax.random.normal(ks[3], (BH, S, D)))).astype(dtype)
+    u = (jax.random.normal(ks[4], (BH, D)) * 0.1).astype(dtype)
+    return r, k, v, w, u
+
+
+@pytest.mark.parametrize("BH,S,D", [(1, 32, 8), (2, 64, 8), (1, 128, 32)])
+def test_wkv6_parity(BH, S, D):
+    r, k, v, w, u = _wkv_inputs(3, BH, S, D)
+    out, state = ops.wkv6(r, k, v, w, u)
+    out_ref, state_ref = ref.wkv6_ref(r, k, v, w, u)
+    assert out.dtype == r.dtype and state.dtype == jnp.float32
+    np.testing.assert_allclose(np.asarray(out), np.asarray(out_ref),
+                               rtol=3e-4, atol=3e-4)
+    np.testing.assert_allclose(np.asarray(state), np.asarray(state_ref),
+                               rtol=3e-4, atol=3e-4)
+
+
+def test_wkv6_parity_nontrivial_chunking():
+    # S = 2 chunks: the inter-chunk state handoff must match the oracle
+    r, k, v, w, u = _wkv_inputs(4, 2, 64, 16)
+    out_c32, state_c32 = ops.wkv6(r, k, v, w, u, chunk=32)
+    out_ref, state_ref = ref.wkv6_ref(r, k, v, w, u)
+    np.testing.assert_allclose(np.asarray(out_c32), np.asarray(out_ref),
+                               rtol=3e-4, atol=3e-4)
+    np.testing.assert_allclose(np.asarray(state_c32), np.asarray(state_ref),
+                               rtol=3e-4, atol=3e-4)

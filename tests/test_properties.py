@@ -17,7 +17,6 @@ from repro.core.problem import LogRegProblem
 
 def _dense_problem_from_clients(client_rows, d, lam=0.01, seed=0):
     """Build a FederatedLogReg from explicit per-client (idx,val,y) rows."""
-    import dataclasses
     from repro.data.synthetic import FederatedDataset
 
     idx = np.concatenate([c[0] for c in client_rows])

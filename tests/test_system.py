@@ -8,7 +8,6 @@ import tempfile
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.configs import get_logreg_config
 from repro.core import FSVRG, FSVRGConfig, build_problem, build_test_problem
